@@ -1,0 +1,62 @@
+"""Shared benchmark utilities: workload generation + latency collection.
+
+Workloads mirror the paper's setup (§V.A): PK-FK equi-joins (unique build
+keys, uniform probe) and multi-attribute sorts over 8-byte integer columns,
+measured for wall latency (P50/P95/P99/max), Temp_MB (real temp-file bytes)
+and peak working set, across work_mem settings.
+"""
+from __future__ import annotations
+
+import gc
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import Relation, latency_stats
+
+ROW_BYTES_JOIN = 16   # key + payload
+SORT_KEYS = ["k0", "k1", "k2", "k3"]
+
+
+def join_tables(n: int, seed: int = 0, probe_factor: int = 1):
+    rng = np.random.default_rng(seed)
+    build = Relation({
+        "k": rng.permutation(n).astype(np.int64),
+        "v": rng.integers(0, 1 << 40, n).astype(np.int64),
+    })
+    probe = Relation({
+        "k": rng.integers(0, n, n * probe_factor).astype(np.int64),
+        "w": rng.integers(0, 1 << 40, n * probe_factor).astype(np.int64),
+    })
+    return build, probe
+
+
+def sort_table(n: int, num_keys: int = 4, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    cols = {}
+    domains = [64, 1 << 16, 1 << 30, 1 << 40]
+    for i in range(num_keys):
+        cols[f"k{i}"] = rng.integers(0, domains[i % 4], n).astype(np.int64)
+    cols["p0"] = rng.integers(0, 1 << 40, n).astype(np.int64)
+    cols["p1"] = rng.integers(0, 1 << 40, n).astype(np.int64)
+    return Relation(cols)
+
+
+def measure(fn: Callable[[], object], reps: int = 12, warmup: int = 2) -> Dict:
+    """Run fn repeatedly; return latency stats + last metrics object."""
+    for _ in range(warmup):
+        last = fn()
+    samples: List[float] = []
+    for _ in range(reps):
+        gc.collect()
+        last = fn()
+        samples.append(last.wall_s if hasattr(last, "wall_s") else last[1].wall_s)
+    metrics = last[1] if isinstance(last, tuple) else last
+    stats = latency_stats(samples)
+    return {"stats": stats, "metrics": metrics}
+
+
+def emit(name: str, us_per_call: float, derived: Dict) -> None:
+    """CSV row per the harness contract: name,us_per_call,derived."""
+    derived_s = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{derived_s}", flush=True)

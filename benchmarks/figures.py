@@ -1,0 +1,252 @@
+"""One benchmark per paper table/figure (DESIGN.md §7 index).
+
+Each function prints CSV rows via common.emit and returns a dict of the key
+numbers for EXPERIMENTS.md.  Sizes are tuned to finish on a single CPU core
+while still crossing the work_mem spill boundary the paper studies.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import (BLOCK_BYTES, CostModel, Executor, Join, PathSelector,
+                        Relation, Scan, Sort, hash_join_linear, sort_linear,
+                        tensor_join, tensor_sort)
+
+from .common import emit, join_tables, measure, sort_table
+
+MB = 1 << 20
+
+
+# -- Fig 1: scalability collapse of the linear hash join ----------------------
+
+def fig1_scalability(reps: int = 7) -> Dict:
+    work_mem = 4 * MB
+    out = {}
+    for n in (50_000, 100_000, 200_000, 400_000, 800_000):
+        build, probe = join_tables(n)
+        r = measure(lambda: hash_join_linear(build, probe, "k", work_mem),
+                    reps=reps)
+        per_row_ns = r["stats"].p50 / n * 1e9
+        emit(f"fig1/linear_join_n{n}", r["stats"].p50 * 1e6,
+             {"p99_s": round(r["stats"].p99, 4),
+              "per_row_ns": round(per_row_ns, 1),
+              "temp_mb": round(r["metrics"].spill.temp_mb, 1)})
+        out[n] = {"p50": r["stats"].p50, "per_row_ns": per_row_ns,
+                  "temp_mb": r["metrics"].spill.temp_mb}
+    return out
+
+
+# -- Fig 3: growth of the linearized intermediate (hash table) ----------------
+
+def fig3_hashtable_growth() -> Dict:
+    out = {}
+    for n in (50_000, 200_000, 800_000):
+        build, probe = join_tables(n)
+        _, m = hash_join_linear(build, probe, "k", 1 << 34)
+        emit(f"fig3/peak_ws_n{n}", m.wall_s * 1e6,
+             {"peak_ws_mb": round(m.peak_working_set_bytes / 1e6, 1),
+              "input_mb": round((build.nbytes() + probe.nbytes()) / 1e6, 1)})
+        out[n] = m.peak_working_set_bytes
+    return out
+
+
+# -- Fig 4: tail latency of the linear path under memory pressure -------------
+
+def fig4_tail_latency(reps: int = 12) -> Dict:
+    out = {}
+    for n, wm in ((100_000, 1 * MB), (400_000, 1 * MB), (800_000, 1 * MB)):
+        build, probe = join_tables(n)
+        r = measure(lambda: hash_join_linear(build, probe, "k", wm), reps=reps)
+        s = r["stats"]
+        emit(f"fig4/linear_join_n{n}_wm1mb", s.p50 * 1e6,
+             {"p99_s": round(s.p99, 4), "max_s": round(s.max, 4),
+              "p99_over_p50": round(s.p99 / max(s.p50, 1e-9), 2)})
+        out[n] = {"p50": s.p50, "p99": s.p99, "max": s.max}
+    return out
+
+
+# -- Fig 5: single vs multi-key sort -----------------------------------------
+
+def fig5_multikey_sort(reps: int = 7) -> Dict:
+    n, wm = 400_000, 4 * MB
+    out = {}
+    for nk in (1, 2, 4):
+        rel = sort_table(n, num_keys=max(nk, 1))
+        keys = [f"k{i}" for i in range(nk)]
+        r_lin = measure(lambda: sort_linear(rel, keys, wm), reps=reps)
+        r_ten = measure(lambda: tensor_sort(rel, keys), reps=reps)
+        emit(f"fig5/sort_{nk}key_linear", r_lin["stats"].p50 * 1e6,
+             {"p99_s": round(r_lin["stats"].p99, 4),
+              "temp_mb": round(r_lin["metrics"].spill.temp_mb, 1)})
+        emit(f"fig5/sort_{nk}key_tensor", r_ten["stats"].p50 * 1e6,
+             {"p99_s": round(r_ten["stats"].p99, 4), "temp_mb": 0.0})
+        out[nk] = {"linear_p50": r_lin["stats"].p50,
+                   "tensor_p50": r_ten["stats"].p50}
+    return out
+
+
+# -- Fig 6: P99 latency vs input size across work_mem --------------------------
+
+def fig6_p99_workmem(reps: int = 9) -> Dict:
+    out = {}
+    for n in (200_000, 500_000, 1_000_000):
+        rel = sort_table(n, num_keys=4)
+        keys = SORT_KEYS_ALL = ["k0", "k1", "k2", "k3"]
+        for wm in (1 * MB, 16 * MB, 64 * MB):
+            r = measure(lambda: sort_linear(rel, keys, wm), reps=reps)
+            emit(f"fig6/linear_sort_n{n}_wm{wm // MB}mb", r["stats"].p50 * 1e6,
+                 {"p99_s": round(r["stats"].p99, 4),
+                  "temp_mb": round(r["metrics"].spill.temp_mb, 1)})
+            out[(n, wm)] = r["stats"].p99
+        r = measure(lambda: tensor_sort(rel, keys), reps=reps)
+        emit(f"fig6/tensor_sort_n{n}", r["stats"].p50 * 1e6,
+             {"p99_s": round(r["stats"].p99, 4), "temp_mb": 0.0})
+        out[(n, "tensor")] = r["stats"].p99
+    return out
+
+
+# -- Fig 7: temporary I/O (spill) ----------------------------------------------
+
+def fig7_spill() -> Dict:
+    out = {}
+    wm = 1 * MB
+    for n in (125_000, 250_000, 500_000, 1_000_000):
+        rel = sort_table(n, num_keys=4)
+        _, m = sort_linear(rel, ["k0", "k1", "k2", "k3"], wm)
+        _, mt = tensor_sort(rel, ["k0", "k1", "k2", "k3"])
+        emit(f"fig7/spill_n{n}", m.wall_s * 1e6,
+             {"linear_temp_mb": round(m.spill.temp_mb, 1),
+              "linear_blocks": m.spill.blocks,
+              "merge_passes": m.spill.partition_passes,
+              "tensor_temp_mb": mt.spill.temp_mb})
+        out[n] = {"temp_mb": m.spill.temp_mb, "blocks": m.spill.blocks}
+    return out
+
+
+# -- Headline (abstract / §V.C / §VII): N=1M, work_mem=1MB ---------------------
+
+def headline(reps: int = 9) -> Dict:
+    n, wm = 1_000_000, 1 * MB
+    rel = sort_table(n, num_keys=4)
+    keys = ["k0", "k1", "k2", "k3"]
+    r_lin = measure(lambda: sort_linear(rel, keys, wm), reps=reps)
+    r_ten = measure(lambda: tensor_sort(rel, keys), reps=reps)
+    lin_s, ten_s = r_lin["stats"], r_ten["stats"]
+    lin_m = r_lin["metrics"]
+    emit("headline/linear_sort_1m_1mb", lin_s.p50 * 1e6,
+         {"p99_s": round(lin_s.p99, 3),
+          "temp_mb": round(lin_m.spill.temp_mb, 1),
+          "temp_blocks": lin_m.spill.blocks,
+          "paper_p99_s": 2.0, "paper_temp_mb": 200.41,
+          "paper_blocks": 25_662})
+    emit("headline/tensor_sort_1m_1mb", ten_s.p50 * 1e6,
+         {"p99_s": round(ten_s.p99, 3), "temp_mb": 0.0,
+          "paper_p99_s": 0.56})
+    return {
+        "linear": {"p50": lin_s.p50, "p99": lin_s.p99,
+                   "temp_mb": lin_m.spill.temp_mb,
+                   "blocks": lin_m.spill.blocks},
+        "tensor": {"p50": ten_s.p50, "p99": ten_s.p99, "temp_mb": 0.0},
+    }
+
+
+# -- §V.D: execution-time path selection ----------------------------------------
+
+def selector_analysis(reps: int = 7) -> Dict:
+    out = {}
+    for n in (50_000, 1_000_000):
+        build, probe = join_tables(n)
+        rel_plan = lambda: Sort(Join(Scan(build), Scan(probe), "k"), ["k", "w"])
+        res = {}
+        for policy in ("linear", "tensor", "auto"):
+            ex = Executor(work_mem=1 * MB, policy=policy)
+            def run():
+                q = ex.execute(rel_plan())
+                class R:  # adapt to measure()
+                    wall_s = q.total_wall_s
+                    class spill:
+                        temp_mb = q.total_temp_mb
+                return R
+            r = measure(run, reps=reps, warmup=1)
+            res[policy] = r["stats"].p99
+            emit(f"selector/{policy}_n{n}", r["stats"].p50 * 1e6,
+                 {"p99_s": round(r["stats"].p99, 4)})
+        best = min(res["linear"], res["tensor"])
+        emit(f"selector/auto_regret_n{n}", 0.0,
+             {"auto_p99_s": round(res["auto"], 4),
+              "best_forced_p99_s": round(best, 4),
+              "regret": round((res["auto"] - best) / best, 3)})
+        out[n] = res
+    return out
+
+
+# -- §VI: regime-shift model fit --------------------------------------------------
+
+def regime_model() -> Dict:
+    """Validate α(N, M): measured spill volume/passes vs the model, and the
+    superlinear growth of the deficit term."""
+    model = CostModel()
+    out = {}
+    n = 500_000
+    rel = sort_table(n, num_keys=4)
+    for wm in (64 * MB, 8 * MB, 1 * MB):
+        _, m = sort_linear(rel, ["k0", "k1", "k2", "k3"], wm)
+        pred_bytes, pred_passes = model.sort_spill_bytes(n, rel.row_bytes(), wm)
+        emit(f"regime/sort_wm{wm // MB}mb", m.wall_s * 1e6,
+             {"measured_mb": round(m.spill.temp_mb, 1),
+              "predicted_mb": round(pred_bytes / 1e6, 1),
+              "measured_passes": m.spill.partition_passes,
+              "predicted_passes": pred_passes})
+        out[wm] = {"measured": m.spill.temp_mb, "pred": pred_bytes / 1e6}
+    return out
+
+
+# -- framework: MoE dispatch path selection (paper technique in the LM) --------
+
+def moe_dispatch_paths(reps: int = 7) -> Dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models.moe import init_moe, moe_forward, select_dispatch_path
+    import time
+
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    out = {}
+    # NOTE: the einsum (tensor) path's one-hot contraction is an MXU play —
+    # on this CPU host it runs on scalar units and loses to the sort path,
+    # the same hardware-regime dependence the paper's selector exists for.
+    for T in (1024, 4096):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, T, cfg.d_model),
+                              jnp.float32)
+        for path in ("einsum", "sort"):
+            f = jax.jit(lambda p, xx: moe_forward(p, xx, cfg, dispatch=path)[0])
+            f(params, x).block_until_ready()
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                f(params, x).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            p50 = float(np.percentile(ts, 50))
+            emit(f"moe/{path}_T{T}", p50 * 1e6, {"p99_s": round(float(np.percentile(ts, 99)), 5)})
+            out[(T, path)] = p50
+        d = select_dispatch_path(T, cfg.num_experts, T // 4, cfg.d_model,
+                                 cfg.experts_per_token)
+        emit(f"moe/selector_T{T}", 0.0, {"choice": d.path})
+    return out
+
+
+ALL = {
+    "fig1": fig1_scalability,
+    "fig3": fig3_hashtable_growth,
+    "fig4": fig4_tail_latency,
+    "fig5": fig5_multikey_sort,
+    "fig6": fig6_p99_workmem,
+    "fig7": fig7_spill,
+    "headline": headline,
+    "selector": selector_analysis,
+    "regime": regime_model,
+    "moe": moe_dispatch_paths,
+}

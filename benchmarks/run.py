@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (common.emit).  Results feed
+EXPERIMENTS.md §Repro.  ``--only fig1,headline`` runs a subset; ``--fast``
+trims repetition counts for CI-style smoke runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmarks")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--save", default="results/bench_summary.json")
+    args = ap.parse_args()
+
+    from .figures import ALL
+    names = args.only.split(",") if args.only else list(ALL)
+    print("name,us_per_call,derived")
+    summary = {}
+    for name in names:
+        fn = ALL[name]
+        t0 = time.time()
+        kw = {}
+        if args.fast and "reps" in fn.__code__.co_varnames:
+            kw["reps"] = 3
+        try:
+            summary[name] = fn(**kw)
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{name}/ERROR,0,{e!r}", flush=True)
+            summary[name] = {"error": repr(e)}
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr,
+              flush=True)
+    def _keys_to_str(obj):
+        if isinstance(obj, dict):
+            return {str(k): _keys_to_str(v) for k, v in obj.items()}
+        return obj
+
+    out = pathlib.Path(args.save)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(_keys_to_str(summary), indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

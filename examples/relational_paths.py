@@ -1,0 +1,52 @@
+"""Paper walkthrough: the regime shift T_rel(N) = O(N) + α(N, M).
+
+Sweeps input size against a fixed 1 MB work_mem and prints both paths' wall
+time, spill volume, and the predicted-vs-measured α term — the executable
+version of Figs 1/6/7 and §VI.
+
+    PYTHONPATH=src python examples/relational_paths.py [--full]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import CostModel, Relation, sort_linear, tensor_sort
+
+MB = 1 << 20
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="run up to N=1M")
+    args = ap.parse_args()
+    sizes = (50_000, 200_000, 500_000) + ((1_000_000,) if args.full else ())
+    work_mem = 1 * MB
+    model = CostModel()
+    rng = np.random.default_rng(0)
+
+    hdr = (f"{'N':>9s} | {'linear s':>9s} {'spill MB':>9s} {'passes':>6s} "
+           f"{'pred MB':>8s} | {'tensor s':>9s} {'spill':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for n in sizes:
+        rel = Relation({
+            "k0": rng.integers(0, 64, n).astype(np.int64),
+            "k1": rng.integers(0, 1 << 16, n).astype(np.int64),
+            "k2": rng.integers(0, 1 << 30, n).astype(np.int64),
+            "k3": rng.integers(0, 1 << 40, n).astype(np.int64),
+            "p0": rng.integers(0, 1 << 40, n).astype(np.int64),
+            "p1": rng.integers(0, 1 << 40, n).astype(np.int64),
+        })
+        keys = ["k0", "k1", "k2", "k3"]
+        _, m_lin = sort_linear(rel, keys, work_mem)
+        _, m_ten = tensor_sort(rel, keys)
+        pred_bytes, _ = model.sort_spill_bytes(n, rel.row_bytes(), work_mem)
+        print(f"{n:9d} | {m_lin.wall_s:9.3f} {m_lin.spill.temp_mb:9.1f} "
+              f"{m_lin.spill.partition_passes:6d} {pred_bytes / 1e6:8.1f} | "
+              f"{m_ten.wall_s:9.3f} {m_ten.spill.temp_mb:5.1f}")
+    print("\nlinear path: spill grows superlinearly with the memory deficit;")
+    print("tensor path: zero spill by construction — the α(N,M) term never exists.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Core of the reproduction: tensor-based execution paths for high-dimensional
+relational operations, with execution-time path selection (the paper's
+contribution), plus the faithful linear (spilling) baseline it is measured
+against."""
+from .cost_model import CostConstants, CostModel
+from .aggregate import group_aggregate_linear, group_aggregate_tensor
+from .executor import Aggregate, Executor, Filter, GroupBy, Join, QueryResult, Scan, Sort
+from .linear_engine import HashTable, hash_join_linear, sort_linear, table_bytes_estimate
+from .metrics import BLOCK_BYTES, LatencyStats, OpMetrics, SpillAccount, latency_stats
+from .path_selector import Decision, PathSelector
+from .relation import Relation
+from .spill import SpillManager
+from .tensor_engine import (
+    aligned_join_indices,
+    join_capacity,
+    tensor_join,
+    tensor_join_aggregate,
+    tensor_sort,
+)
+
+__all__ = [
+    "Aggregate", "BLOCK_BYTES", "CostConstants", "CostModel", "Decision",
+    "Executor", "Filter", "GroupBy", "HashTable", "Join", "LatencyStats", "OpMetrics",
+    "PathSelector", "QueryResult", "Relation", "Scan", "Sort", "SpillAccount",
+    "SpillManager", "aligned_join_indices", "hash_join_linear", "join_capacity",
+    "group_aggregate_linear", "group_aggregate_tensor",
+    "latency_stats", "sort_linear", "table_bytes_estimate", "tensor_join",
+    "tensor_join_aggregate", "tensor_sort",
+]

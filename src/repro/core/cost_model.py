@@ -1,0 +1,146 @@
+"""Regime-shift cost model (paper §VI).
+
+    T_rel(N)    = O(N) + α(N, M)
+    T_tensor(N) ≈ O(N)
+
+α(N, M) is the spill-amplification term: once the linearized intermediate
+(hash table / sort working set) exceeds the memory budget M, the operator
+repartitions and re-materializes data through temp files.  Both the number of
+partitioning/merge passes and the re-materialized volume grow with the memory
+deficit W/M, making α superlinear in it.
+
+The constants (seconds/row, seconds/byte of temp I/O) are host-dependent; the
+model ships with conservative defaults and a ``calibrate()`` routine that fits
+them from micro-runs of both engines — mirroring how the paper's selector uses
+"indicators that are relatively easy to observe at the time of execution"
+rather than a full optimizer-grade cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .linear_engine import MAX_FANOUT, MERGE_BUFFER_BYTES, table_bytes_estimate
+
+__all__ = ["CostConstants", "CostModel"]
+
+
+@dataclasses.dataclass
+class CostConstants:
+    # CPU work per row (seconds/row)
+    linear_row_cost: float = 2.0e-8
+    tensor_row_cost: float = 6.0e-8  # tensor path pays sort overhead at small N
+    # temp-file I/O cost (seconds/byte, counts write+read)
+    io_byte_cost: float = 1.2e-9
+    # fixed dispatch overhead of launching the tensor path (jit call, transfers)
+    tensor_fixed_cost: float = 3.0e-3
+
+
+@dataclasses.dataclass
+class JoinEstimate:
+    path_fits_mem: bool
+    spill_bytes: int
+    passes: int
+    t_linear: float
+    t_tensor: float
+
+
+@dataclasses.dataclass
+class SortEstimate:
+    path_fits_mem: bool
+    spill_bytes: int
+    passes: int
+    t_linear: float
+    t_tensor: float
+
+
+class CostModel:
+    def __init__(self, constants: Optional[CostConstants] = None):
+        self.c = constants or CostConstants()
+
+    # -- α(N, M) -------------------------------------------------------------
+    def join_spill_bytes(self, n_build: int, n_probe: int, row_bytes_b: int,
+                         row_bytes_p: int, work_mem: int) -> tuple:
+        """Grace-join spill volume: every partitioning level rewrites both inputs."""
+        table = table_bytes_estimate(n_build)
+        if table <= work_mem:
+            return 0, 0
+        fanout = min(MAX_FANOUT, max(2, 2 ** math.ceil(math.log2(table / work_mem))))
+        depth = max(1, math.ceil(math.log(table / work_mem, fanout)))
+        data = n_build * row_bytes_b + n_probe * row_bytes_p
+        written = data * depth
+        return int(written), depth
+
+    def sort_spill_bytes(self, n_rows: int, row_bytes: int, work_mem: int) -> tuple:
+        """External-sort spill: initial runs + one full rewrite per merge pass."""
+        data = n_rows * row_bytes
+        if data <= work_mem:
+            return 0, 0
+        runs = math.ceil(data / work_mem)
+        fan_in = max(2, work_mem // MERGE_BUFFER_BYTES - 1)
+        merge_passes = max(0, math.ceil(math.log(runs, fan_in)))
+        written = data * (1 + max(0, merge_passes - 1))  # final pass streams out
+        return int(written), merge_passes
+
+    def alpha(self, spill_bytes: int) -> float:
+        # write + read back: 2x the written volume crosses the I/O boundary
+        return self.c.io_byte_cost * 2 * spill_bytes
+
+    # -- operator estimates ------------------------------------------------
+    def estimate_join(self, n_build: int, n_probe: int, row_bytes_b: int,
+                      row_bytes_p: int, est_out: int, work_mem: int) -> JoinEstimate:
+        n = n_build + n_probe
+        spill, passes = self.join_spill_bytes(
+            n_build, n_probe, row_bytes_b, row_bytes_p, work_mem)
+        t_linear = self.c.linear_row_cost * (n + est_out) + self.alpha(spill)
+        logn = max(1.0, math.log2(max(2, n_build)))
+        t_tensor = (self.c.tensor_fixed_cost
+                    + self.c.tensor_row_cost * (n_build * logn / 20 + n_probe + est_out))
+        return JoinEstimate(spill == 0, spill, passes, t_linear, t_tensor)
+
+    def estimate_sort(self, n_rows: int, row_bytes: int, num_keys: int,
+                      work_mem: int) -> SortEstimate:
+        spill, passes = self.sort_spill_bytes(n_rows, row_bytes, work_mem)
+        logn = max(1.0, math.log2(max(2, n_rows)))
+        t_linear = self.c.linear_row_cost * n_rows * logn / 4 + self.alpha(spill)
+        t_tensor = (self.c.tensor_fixed_cost
+                    + self.c.tensor_row_cost * n_rows * logn / 16 * num_keys)
+        return SortEstimate(spill == 0, spill, passes, t_linear, t_tensor)
+
+    # -- calibration -----------------------------------------------------------
+    def calibrate(self, n: int = 200_000, seed: int = 0) -> CostConstants:
+        """Fit constants from micro-runs of both engines (paper: selector inputs
+        are execution-time observables, not optimizer statistics)."""
+        from .linear_engine import hash_join_linear, sort_linear
+        from .relation import Relation
+        from .tensor_engine import tensor_join, tensor_sort
+
+        rng = np.random.default_rng(seed)
+        build = Relation({"k": rng.permutation(n).astype(np.int64),
+                          "v": rng.integers(0, 1 << 30, n).astype(np.int64)})
+        probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                          "w": rng.integers(0, 1 << 30, n).astype(np.int64)})
+        big_mem = 1 << 34
+        _, m_lin = hash_join_linear(build, probe, "k", big_mem)
+        # warm the jit cache, then measure
+        tensor_join(build, probe, "k")
+        _, m_ten = tensor_join(build, probe, "k")
+        self.c.linear_row_cost = max(1e-9, m_lin.wall_s / (3 * n))
+        logn = math.log2(n)
+        self.c.tensor_row_cost = max(
+            1e-9, (m_ten.wall_s - self.c.tensor_fixed_cost) / (n * logn / 20 + 2 * n))
+
+        # io cost: spilled sort vs in-memory sort on identical data
+        rel = Relation({"a": rng.integers(0, 1000, n).astype(np.int64),
+                        "b": rng.integers(0, 1 << 40, n).astype(np.int64),
+                        "p": rng.integers(0, 1 << 40, n).astype(np.int64)})
+        _, m_mem = sort_linear(rel, ["a", "b"], big_mem)
+        _, m_spill = sort_linear(rel, ["a", "b"], 1 << 20)
+        io_bytes = m_spill.spill.bytes_written + m_spill.spill.bytes_read
+        if io_bytes:
+            self.c.io_byte_cost = max(
+                1e-11, (m_spill.wall_s - m_mem.wall_s) / io_bytes)
+        return self.c

@@ -1,0 +1,176 @@
+"""Mini cost-based execution engine with *deferred decision points*.
+
+A tiny physical-operator tree (Scan / Filter / Join / Sort / Aggregate) that
+models the structure the paper critiques and the fix it proposes:
+
+  * a traditional plan fixes each operator's execution path at *plan time*
+    (``policy="linear"`` or ``"tensor"`` pins every operator);
+  * the paper's design (``policy="auto"``) leaves join/sort decision points
+    *open* and resolves them at execution time via :class:`PathSelector`,
+    using the actually-observed input relations.
+
+The executor records per-operator :class:`OpMetrics` so benchmarks can report
+latency, Temp_MB and working-set peaks per path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from .linear_engine import hash_join_linear, sort_linear
+from .metrics import OpMetrics
+from .path_selector import Decision, PathSelector
+from .relation import Relation
+from .spill import SpillManager
+from .tensor_engine import tensor_join, tensor_sort
+
+__all__ = ["Scan", "Filter", "Join", "Sort", "Aggregate", "Executor", "QueryResult"]
+
+
+# -- logical plan nodes ------------------------------------------------------
+
+@dataclasses.dataclass
+class Scan:
+    relation: Relation
+    name: str = "scan"
+
+
+@dataclasses.dataclass
+class Filter:
+    child: object
+    predicate: Callable[[Relation], np.ndarray]  # rows mask
+    name: str = "filter"
+
+
+@dataclasses.dataclass
+class Join:
+    build: object
+    probe: object
+    key: str
+    name: str = "join"
+
+
+@dataclasses.dataclass
+class Sort:
+    child: object
+    keys: Sequence[str]
+    name: str = "sort"
+
+
+@dataclasses.dataclass
+class Aggregate:
+    child: object
+    column: str
+    fn: str = "sum"  # sum | count | min | max
+    name: str = "aggregate"
+
+
+@dataclasses.dataclass
+class GroupBy:
+    child: object
+    key: str
+    values: dict  # column -> agg fn
+    name: str = "group_by"
+
+
+@dataclasses.dataclass
+class QueryResult:
+    relation: Optional[Relation]
+    scalar: Optional[float]
+    metrics: List[OpMetrics]
+    decisions: List[Decision]
+
+    @property
+    def total_wall_s(self) -> float:
+        return sum(m.wall_s for m in self.metrics)
+
+    @property
+    def total_temp_mb(self) -> float:
+        return sum(m.spill.temp_mb for m in self.metrics)
+
+
+class Executor:
+    """Walks a plan; resolves deferred join/sort decision points at run time."""
+
+    def __init__(self, work_mem: int, policy: str = "auto",
+                 selector: Optional[PathSelector] = None,
+                 spill_root: Optional[str] = None):
+        if policy not in ("auto", "linear", "tensor"):
+            raise ValueError(policy)
+        force = None if policy == "auto" else policy
+        self.selector = selector or PathSelector(work_mem, force=force)
+        if selector is not None and force is not None:
+            self.selector.force = force
+        self.work_mem = work_mem
+        self.spill_root = spill_root
+
+    def execute(self, plan) -> QueryResult:
+        metrics: List[OpMetrics] = []
+        decisions: List[Decision] = []
+        with SpillManager(self.spill_root) as mgr:
+            out = self._exec(plan, metrics, decisions, mgr)
+        if isinstance(out, Relation):
+            return QueryResult(out, None, metrics, decisions)
+        return QueryResult(None, float(out), metrics, decisions)
+
+    # -- node dispatch -----------------------------------------------------
+    def _exec(self, node, metrics, decisions, mgr):
+        if isinstance(node, Scan):
+            return node.relation
+        if isinstance(node, Filter):
+            child = self._exec(node.child, metrics, decisions, mgr)
+            mask = node.predicate(child)
+            return child.take(np.nonzero(mask)[0])
+        if isinstance(node, Join):
+            build = self._exec(node.build, metrics, decisions, mgr)
+            probe = self._exec(node.probe, metrics, decisions, mgr)
+            decision = self.selector.choose_join(build, probe, node.key)
+            decisions.append(decision)
+            if decision.path == "tensor":
+                out, m = tensor_join(build, probe, node.key)
+            else:
+                out, m = hash_join_linear(build, probe, node.key, self.work_mem, mgr)
+            m.decision_reason = decision.reason
+            metrics.append(m)
+            return out
+        if isinstance(node, Sort):
+            child = self._exec(node.child, metrics, decisions, mgr)
+            decision = self.selector.choose_sort(child, node.keys)
+            decisions.append(decision)
+            if decision.path == "tensor":
+                out, m = tensor_sort(child, node.keys)
+            else:
+                out, m = sort_linear(child, node.keys, self.work_mem, mgr)
+            m.decision_reason = decision.reason
+            metrics.append(m)
+            return out
+        if isinstance(node, GroupBy):
+            child = self._exec(node.child, metrics, decisions, mgr)
+            from .aggregate import group_aggregate_linear, group_aggregate_tensor
+            # GROUP BY is the third linearizing operator: the group hash
+            # table is the linearized intermediate; selection mirrors sort
+            decision = self.selector.choose_sort(child, [node.key])
+            decisions.append(decision)
+            if decision.path == "tensor":
+                out, m = group_aggregate_tensor(child, node.key, node.values)
+            else:
+                out, m = group_aggregate_linear(child, node.key, node.values,
+                                                self.work_mem, mgr)
+            m.decision_reason = decision.reason
+            metrics.append(m)
+            return out
+        if isinstance(node, Aggregate):
+            child = self._exec(node.child, metrics, decisions, mgr)
+            col = child[node.column]
+            if node.fn == "sum":
+                return float(col.sum())
+            if node.fn == "count":
+                return float(len(col))
+            if node.fn == "min":
+                return float(col.min())
+            if node.fn == "max":
+                return float(col.max())
+            raise ValueError(node.fn)
+        raise TypeError(f"unknown plan node {node!r}")

@@ -1,0 +1,124 @@
+"""Execution metrics: latency percentiles, spill accounting, working-set peaks.
+
+The paper evaluates three families of metrics together (abstract, §V):
+  * latency distribution — P50 *and* P99 (+max), because the phenomenon under
+    study is predictability loss, not mean slowdown;
+  * physical I/O — Temp_MB and 8 KB block counts (PostgreSQL-style);
+  * peak working set of the linearized intermediate (hash table / sort runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+BLOCK_BYTES = 8192  # PostgreSQL temp-file block size; paper reports 25,662 blocks ≈ 200 MB
+
+__all__ = ["BLOCK_BYTES", "SpillAccount", "OpMetrics", "LatencyStats", "latency_stats", "Timer"]
+
+
+@dataclasses.dataclass
+class SpillAccount:
+    """Temp-file I/O accounting for one operator execution."""
+
+    bytes_written: int = 0
+    bytes_read: int = 0
+    files_created: int = 0
+    partition_passes: int = 0  # recursive partitioning / merge passes
+
+    def write(self, nbytes: int) -> None:
+        self.bytes_written += int(nbytes)
+
+    def read(self, nbytes: int) -> None:
+        self.bytes_read += int(nbytes)
+
+    @property
+    def temp_bytes(self) -> int:
+        return self.bytes_written
+
+    @property
+    def temp_mb(self) -> float:
+        return self.bytes_written / 1e6
+
+    @property
+    def blocks(self) -> int:
+        return -(-self.bytes_written // BLOCK_BYTES)
+
+    def merge(self, other: "SpillAccount") -> None:
+        self.bytes_written += other.bytes_written
+        self.bytes_read += other.bytes_read
+        self.files_created += other.files_created
+        self.partition_passes = max(self.partition_passes, other.partition_passes)
+
+
+@dataclasses.dataclass
+class OpMetrics:
+    """Metrics for a single operator execution."""
+
+    op: str
+    path: str  # "linear" | "tensor"
+    rows_in: int
+    rows_out: int
+    wall_s: float
+    spill: SpillAccount
+    peak_working_set_bytes: int = 0
+    decision_reason: str = ""
+
+    def as_row(self) -> Dict[str, object]:
+        return {
+            "op": self.op,
+            "path": self.path,
+            "rows_in": self.rows_in,
+            "rows_out": self.rows_out,
+            "wall_s": round(self.wall_s, 6),
+            "temp_mb": round(self.spill.temp_mb, 3),
+            "temp_blocks": self.spill.blocks,
+            "passes": self.spill.partition_passes,
+            "peak_ws_mb": round(self.peak_working_set_bytes / 1e6, 3),
+            "reason": self.decision_reason,
+        }
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    p50: float
+    p95: float
+    p99: float
+    max: float
+    mean: float
+    n: int
+
+    def as_row(self) -> Dict[str, float]:
+        return {
+            "p50_s": round(self.p50, 6),
+            "p95_s": round(self.p95, 6),
+            "p99_s": round(self.p99, 6),
+            "max_s": round(self.max, 6),
+            "mean_s": round(self.mean, 6),
+            "n": self.n,
+        }
+
+
+def latency_stats(samples_s: List[float]) -> LatencyStats:
+    a = np.asarray(samples_s, dtype=np.float64)
+    return LatencyStats(
+        p50=float(np.percentile(a, 50)),
+        p95=float(np.percentile(a, 95)),
+        p99=float(np.percentile(a, 99)),
+        max=float(a.max()),
+        mean=float(a.mean()),
+        n=len(a),
+    )
+
+
+class Timer:
+    """Wall-clock context manager."""
+
+    def __enter__(self) -> "Timer":
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.elapsed = time.perf_counter() - self.t0

@@ -1,0 +1,88 @@
+"""Execution-time path selection (paper §III.C).
+
+The selector is *deliberately simple*: it looks only at indicators observable
+cheaply at execution time — input scale, join-key cardinality, expected
+intermediate size, and the memory budget — and asks one structural question:
+**will the linear path's linearized intermediate exceed work_mem?**  If it
+comfortably fits, the linear path wins (paper §V.B: at small scale the CPU
+hash join is faster).  If it would spill, the regime-shift model predicts the
+amplification cost α(N, M) and the tensor path is chosen when it avoids a
+worse expected (and far worse tail) latency.
+
+The selection never changes operator semantics — both paths produce identical
+result sets (tests assert canonical equality).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .cost_model import CostModel
+from .relation import Relation
+
+__all__ = ["Decision", "PathSelector"]
+
+
+@dataclasses.dataclass
+class Decision:
+    path: str  # "linear" | "tensor"
+    reason: str
+    t_linear: float
+    t_tensor: float
+    predicted_spill_bytes: int
+
+
+class PathSelector:
+    def __init__(self, work_mem: int, cost_model: Optional[CostModel] = None,
+                 force: Optional[str] = None):
+        self.work_mem = int(work_mem)
+        self.model = cost_model or CostModel()
+        if force not in (None, "linear", "tensor"):
+            raise ValueError(force)
+        self.force = force
+
+    # -- join ---------------------------------------------------------------
+    def choose_join(self, build: Relation, probe: Relation, key: str) -> Decision:
+        if self.force:
+            return Decision(self.force, "forced", 0.0, 0.0, 0)
+        n_b, n_p = len(build), len(probe)
+        # execution-time observables: scale + key cardinality → output estimate
+        sample = np.asarray(build[key][: min(n_b, 65536)])
+        card = max(1, len(np.unique(sample)))
+        dup = max(1.0, len(sample) / card)
+        est_out = int(n_p * dup)
+        est = self.model.estimate_join(
+            n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out, self.work_mem)
+        if est.path_fits_mem:
+            return Decision(
+                "linear",
+                f"hash table fits work_mem ({self.work_mem} B); linear path has "
+                f"no spill regime at this scale",
+                est.t_linear, est.t_tensor, 0)
+        path = "tensor" if est.t_tensor < est.t_linear else "linear"
+        return Decision(
+            path,
+            f"predicted spill {est.spill_bytes / 1e6:.1f} MB over {est.passes} "
+            f"partition pass(es): α(N,M) makes T_linear={est.t_linear:.3f}s vs "
+            f"T_tensor={est.t_tensor:.3f}s",
+            est.t_linear, est.t_tensor, est.spill_bytes)
+
+    # -- sort ------------------------------------------------------------------
+    def choose_sort(self, rel: Relation, keys) -> Decision:
+        if self.force:
+            return Decision(self.force, "forced", 0.0, 0.0, 0)
+        est = self.model.estimate_sort(
+            len(rel), rel.row_bytes(), len(keys), self.work_mem)
+        if est.path_fits_mem and est.t_linear <= est.t_tensor:
+            return Decision(
+                "linear",
+                "dataset fits work_mem; in-memory lexsort is cheapest",
+                est.t_linear, est.t_tensor, 0)
+        path = "tensor" if est.t_tensor < est.t_linear else "linear"
+        return Decision(
+            path,
+            f"predicted spill {est.spill_bytes / 1e6:.1f} MB / {est.passes} merge "
+            f"pass(es); T_linear={est.t_linear:.3f}s vs T_tensor={est.t_tensor:.3f}s",
+            est.t_linear, est.t_tensor, est.spill_bytes)

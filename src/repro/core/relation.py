@@ -1,0 +1,91 @@
+"""Columnar relation abstraction.
+
+A :class:`Relation` is a named set of equal-length 1-D columns (numpy arrays on
+the host side; the tensor engine converts to jax arrays lazily).  Columns are
+kept *separate* — this is the "multi-attribute structure" the paper argues the
+execution layer should preserve: each attribute is its own axis/column until an
+operator genuinely needs a linearized form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["Relation"]
+
+
+@dataclasses.dataclass
+class Relation:
+    """An immutable columnar relation."""
+
+    columns: Dict[str, np.ndarray]
+
+    def __post_init__(self) -> None:
+        if not self.columns:
+            raise ValueError("Relation needs at least one column")
+        lengths = {k: len(v) for k, v in self.columns.items()}
+        if len(set(lengths.values())) != 1:
+            raise ValueError(f"ragged columns: {lengths}")
+        # normalize to contiguous numpy arrays
+        self.columns = {k: np.ascontiguousarray(v) for k, v in self.columns.items()}
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def from_dict(cols: Mapping[str, Sequence]) -> "Relation":
+        return Relation({k: np.asarray(v) for k, v in cols.items()})
+
+    # -- basic properties ----------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return len(next(iter(self.columns.values())))
+
+    @property
+    def names(self) -> tuple:
+        return tuple(self.columns.keys())
+
+    def __len__(self) -> int:
+        return self.num_rows
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.columns[name]
+
+    def nbytes(self) -> int:
+        return int(sum(c.nbytes for c in self.columns.values()))
+
+    def row_bytes(self) -> int:
+        return int(sum(c.dtype.itemsize for c in self.columns.values()))
+
+    # -- row-wise ops ---------------------------------------------------------
+    def take(self, idx: np.ndarray) -> "Relation":
+        return Relation({k: v[idx] for k, v in self.columns.items()})
+
+    def select(self, names: Iterable[str]) -> "Relation":
+        return Relation({k: self.columns[k] for k in names})
+
+    def rename(self, mapping: Mapping[str, str]) -> "Relation":
+        return Relation({mapping.get(k, k): v for k, v in self.columns.items()})
+
+    def concat(self, other: "Relation") -> "Relation":
+        if set(self.names) != set(other.names):
+            raise ValueError(f"schema mismatch: {self.names} vs {other.names}")
+        return Relation(
+            {k: np.concatenate([self.columns[k], other.columns[k]]) for k in self.names}
+        )
+
+    def head(self, n: int) -> "Relation":
+        return Relation({k: v[:n] for k, v in self.columns.items()})
+
+    def equals(self, other: "Relation") -> bool:
+        """Column-order-insensitive equality (spill round-trips alphabetize)."""
+        return set(self.names) == set(other.names) and all(
+            np.array_equal(self.columns[k], other.columns[k]) for k in self.names
+        )
+
+    def sort_canonical(self) -> "Relation":
+        """Row/column-order-insensitive canonical form (result-set comparison)."""
+        names = sorted(self.names)
+        keys = [self.columns[k] for k in reversed(names)]
+        order = np.lexsort(keys)
+        return Relation({k: self.columns[k][order] for k in names})

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-tiled).
+
+The pure-JAX ``chunked_attention`` scan is the lowering-safe fallback; this
+kernel is the TPU-native hot path: one (batch, head, q-block) output tile
+stays resident in VMEM while the kv-block grid axis streams K/V through —
+scores and probabilities never touch HBM.  GQA is handled in the BlockSpec
+index map (kv head = q head // group), so grouped K/V are never repeated in
+memory.
+
+Accumulation across kv steps uses the revisiting-output pattern (same as
+moe_dispatch): (acc, m, l) are kernel outputs indexed by (b, h, qi) only;
+the final ``acc / l`` division happens in the jnp epilogue (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, window, cap, q_blk, kv_blk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        m_ref[...] = jnp.full(m_ref.shape, _NEG_INF, m_ref.dtype)
+        l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
+
+    q = q_ref[...][0, 0]          # [q_blk, D]
+    k = k_ref[...][0, 0]          # [kv_blk, D]
+    v = v_ref[...][0, 0]          # [kv_blk, Dv]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    pos_q = qi * q_blk + jax.lax.iota(jnp.int32, q_blk)
+    pos_k = ki * kv_blk + jax.lax.iota(jnp.int32, kv_blk)
+    mask = jnp.ones((q_blk, kv_blk), dtype=jnp.bool_)
+    if causal:
+        mask &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        mask &= (pos_q[:, None] - pos_k[None, :]) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...][0, 0]     # [q_blk]
+    l_prev = l_ref[...][0, 0]
+    acc_prev = acc_ref[...][0, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc_new = acc_prev * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new[None, None]
+    l_ref[...] = l_new[None, None]
+    acc_ref[...] = acc_new[None, None]
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, cap=None,
+                           scale=None, q_blk: int = 256, kv_blk: int = 256,
+                           interpret: bool = False):
+    """q [B,H,Sq,D]; k/v [B,KH,Sk,D(v)].  Returns [B,H,Sq,Dv] (f32)."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    q_blk = min(q_blk, Sq)
+    kv_blk = min(kv_blk, Sk)
+    assert Sq % q_blk == 0 and Sk % kv_blk == 0, (Sq, q_blk, Sk, kv_blk)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    grid = (B, H, Sq // q_blk, Sk // kv_blk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        q_blk=q_blk, kv_blk=kv_blk)
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_blk, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            # GQA in the index map: kv head = q head // G (no repeat in memory)
+            pl.BlockSpec((1, 1, kv_blk, D),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, kv_blk, Dv),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q_blk, Dv), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, q_blk), lambda b, h, qi, ki: (b, h, qi)),
+            pl.BlockSpec((1, 1, q_blk), lambda b, h, qi, ki: (b, h, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sq, Dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return acc, m, l

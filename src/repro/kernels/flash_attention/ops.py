@@ -1,0 +1,32 @@
+"""Jit'd wrapper for the flash-attention kernel (+ jnp epilogue)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+
+__all__ = ["flash_attention"]
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "cap", "q_blk",
+                                   "kv_blk", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=None, cap=None,
+                    q_blk: int = 256, kv_blk: int = 256, interpret=None):
+    """q [B,Sq,H,D]; k/v [B,Sk,KH,D(v)] → [B,Sq,H,Dv] (model-layout wrapper)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    acc, m, l = flash_attention_pallas(
+        qt, kt, vt, causal=causal, window=window, cap=cap,
+        q_blk=q_blk, kv_blk=kv_blk, interpret=_auto_interpret(interpret))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

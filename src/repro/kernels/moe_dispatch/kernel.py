@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: one-hot MoE dispatch/combine as masked matmuls.
+
+The pure-JAX tensor path materializes the dispatch mask [T, E, C] in HBM
+(repro.models.moe._dispatch_einsum).  This kernel is the paper's
+"delay materialization" applied at the kernel level: the one-hot tile is
+built *in VMEM registers* from the routing indices (iota compares) and
+consumed immediately by the MXU matmul — the [T, E, C] tensor never exists
+in HBM.  HBM traffic drops from O(T·E·C) to O(T·d + E·C·d).
+
+Dispatch:  buf[e, c, :]  = Σ_t  1[eidx_t = e ∧ slot_t = c] · x[t, :]
+Combine:   y[t, :]       = Σ_e  w_t · 1[eidx_t = e] · buf[e, slot_t, :]
+
+Grid/BlockSpec layout (dispatch):
+  grid = (E, d/dblk, T/tblk)  — t is the innermost (reduction) axis; the
+  output block for a fixed (e, dblk) stays resident in VMEM across all t
+  steps and accumulates (classic revisiting-output reduction pattern).
+  VMEM working set per step: tblk·dblk (x tile) + C·dblk (out tile)
+  + tblk (indices) — sized well under 16 MB for the default tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dispatch_pallas", "combine_pallas"]
+
+
+def _dispatch_kernel(eidx_ref, slot_ref, x_ref, out_ref, *, capacity, tblk):
+    e = pl.program_id(0)
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    eidx = eidx_ref[...]          # [tblk] i32
+    slot = slot_ref[...]          # [tblk] i32
+    x = x_ref[...]                # [tblk, dblk]
+    # build the one-hot tile in VMEM: [tblk, C]; slot >= C never matches the
+    # iota → overflow assignments drop, same semantics as the jnp paths
+    hit = (eidx == e)
+    onehot = jnp.where(
+        hit[:, None] & (slot[:, None] == jax.lax.iota(jnp.int32, capacity)[None, :]),
+        1.0, 0.0).astype(x.dtype)
+    out_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype)[None]  # [1, C, dblk]
+
+
+def dispatch_pallas(x, eidx, slot, num_experts: int, capacity: int,
+                    *, tblk: int = 512, dblk: int = 512,
+                    interpret: bool = False):
+    """x [T, d]; eidx/slot [T] (single routing slot; caller loops k).
+    Returns buf [E, C, d]."""
+    T, d = x.shape
+    tblk = min(tblk, T)
+    dblk = min(dblk, d)
+    assert T % tblk == 0 and d % dblk == 0, (T, tblk, d, dblk)
+    grid = (num_experts, d // dblk, T // tblk)
+    kernel = functools.partial(_dispatch_kernel, capacity=capacity, tblk=tblk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tblk,), lambda e, j, t: (t,)),
+            pl.BlockSpec((tblk,), lambda e, j, t: (t,)),
+            pl.BlockSpec((tblk, dblk), lambda e, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((1, capacity, dblk), lambda e, j, t: (e, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((num_experts, capacity, d), x.dtype),
+        interpret=interpret,
+    )(eidx, slot, x)
+
+
+def _combine_kernel(eidx_ref, slot_ref, w_ref, buf_ref, out_ref, *, capacity):
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    eidx = eidx_ref[...]          # [tblk]
+    slot = slot_ref[...]          # [tblk]
+    w = w_ref[...]                # [tblk]
+    buf = buf_ref[...][0]         # [C, dblk]
+    hit = (eidx == e)
+    onehot = jnp.where(
+        hit[:, None] & (slot[:, None] == jax.lax.iota(jnp.int32, capacity)[None, :]),
+        1.0, 0.0).astype(buf.dtype) * w[:, None].astype(buf.dtype)
+    out_ref[...] += jax.lax.dot_general(
+        onehot, buf, (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype)  # [tblk, dblk]
+
+
+def combine_pallas(buf, eidx, slot, w, *, tblk: int = 512, dblk: int = 512,
+                   interpret: bool = False):
+    """buf [E, C, d]; eidx/slot/w [T].  Returns y [T, d]."""
+    E, C, d = buf.shape
+    T = eidx.shape[0]
+    tblk = min(tblk, T)
+    dblk = min(dblk, d)
+    assert T % tblk == 0 and d % dblk == 0, (T, tblk, d, dblk)
+    grid = (T // tblk, d // dblk, E)
+    kernel = functools.partial(_combine_kernel, capacity=C)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tblk,), lambda t, j, e: (t,)),
+            pl.BlockSpec((tblk,), lambda t, j, e: (t,)),
+            pl.BlockSpec((tblk,), lambda t, j, e: (t,)),
+            pl.BlockSpec((1, C, dblk), lambda t, j, e: (e, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((tblk, dblk), lambda t, j, e: (t, j)),
+        out_shape=jax.ShapeDtypeStruct((T, d), buf.dtype),
+        interpret=interpret,
+    )(eidx, slot, w, buf)

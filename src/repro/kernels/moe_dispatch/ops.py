@@ -1,0 +1,62 @@
+"""Jit'd wrappers for the MoE dispatch kernels.
+
+``interpret=None`` auto-selects: Pallas interpret mode off-TPU (CPU testing),
+compiled mode on TPU.  ``moe_dispatch_pallas`` is the drop-in tensor-path
+dispatch for repro.models.moe (same capacity/drop semantics)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import combine_pallas, dispatch_pallas
+
+__all__ = ["dispatch", "combine", "moe_dispatch_pallas"]
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("num_experts", "capacity", "interpret"))
+def dispatch(x, eidx, slot, num_experts: int, capacity: int,
+             interpret=None):
+    return dispatch_pallas(x, eidx.astype(jnp.int32), slot.astype(jnp.int32),
+                           num_experts, capacity,
+                           interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def combine(buf, eidx, slot, w, interpret=None):
+    return combine_pallas(buf, eidx.astype(jnp.int32), slot.astype(jnp.int32),
+                          w, interpret=_auto_interpret(interpret))
+
+
+def moe_dispatch_pallas(params, x_flat, topk_idx, topk_w, cfg, capacity,
+                        expert_ffn, interpret=None):
+    """Full MoE layer body on the kernel path: k dispatch passes + expert FFN
+    + k combine passes.  Matches _dispatch_einsum semantics exactly."""
+    T, d = x_flat.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    # within-expert slot positions across ALL k assignments (shared cumsum,
+    # identical to the einsum/sort paths)
+    flat_e = topk_idx.reshape(-1)
+    onehot_e = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot_e, axis=0) - onehot_e
+    slot_flat = jnp.sum(pos * onehot_e, axis=-1).reshape(T, k)
+
+    buf = None
+    for j in range(k):
+        b = dispatch(x_flat, topk_idx[:, j], slot_flat[:, j], E, capacity,
+                     interpret=interpret)
+        buf = b if buf is None else buf + b
+    out_buf = expert_ffn(params, buf, cfg)
+    y = None
+    for j in range(k):
+        c = combine(out_buf, topk_idx[:, j], slot_flat[:, j],
+                    topk_w[:, j].astype(jnp.float32), interpret=interpret)
+        y = c if y is None else y + c
+    return y

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the MoE dispatch/combine kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dispatch_ref", "combine_ref"]
+
+
+def dispatch_ref(x, eidx, slot, num_experts: int, capacity: int):
+    """x [T,d]; eidx/slot [T] → buf [E, C, d] (slots >= capacity dropped)."""
+    keep = slot < capacity
+    onehot_e = jax.nn.one_hot(eidx, num_experts, dtype=x.dtype)
+    onehot_c = jax.nn.one_hot(jnp.where(keep, slot, capacity), capacity,
+                              dtype=x.dtype)
+    mask = onehot_e[:, :, None] * onehot_c[:, None, :]          # [T, E, C]
+    return jnp.einsum("tec,td->ecd", mask, x)
+
+
+def combine_ref(buf, eidx, slot, w):
+    """buf [E,C,d]; eidx/slot/w [T] → y [T, d]."""
+    E, C, _ = buf.shape
+    keep = slot < C
+    onehot_e = jax.nn.one_hot(eidx, E, dtype=buf.dtype)
+    onehot_c = jax.nn.one_hot(jnp.where(keep, slot, C), C, dtype=buf.dtype)
+    mask = onehot_e[:, :, None] * onehot_c[:, None, :] * w[:, None, None].astype(buf.dtype)
+    return jnp.einsum("tec,ecd->td", mask, buf)

@@ -1,0 +1,48 @@
+"""Jit'd wrappers: tile sort + full multi-key sort (tile runs + XLA merge)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import bitonic_tile_sort_pallas
+
+__all__ = ["tile_sort", "multikey_sort_lsd"]
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def tile_sort(keys, vals, tile: int = 1024, interpret=None):
+    return bitonic_tile_sort_pallas(keys.astype(jnp.int32),
+                                    vals.astype(jnp.int32), tile=tile,
+                                    interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def multikey_sort_lsd(key_cols, tile: int = 1024, interpret=None):
+    """Stable LSD multi-key sort (paper §IV.B) with the Pallas tile sorter as
+    the inner stage.  key_cols: tuple of [N] int32 arrays, most-significant
+    first.  Returns the permutation.
+
+    Each LSD pass: bitonic tile runs (VMEM) + one jnp merge of the sorted
+    runs (argsort over run-local ranks is XLA's efficient merge path)."""
+    n = key_cols[0].shape[0]
+    perm = jnp.arange(n, dtype=jnp.int32)
+    for col in key_cols[::-1]:
+        keyed = col[perm]
+        # stage 1: VMEM tile runs, payload = current perm position (stable)
+        pos = jnp.arange(n, dtype=jnp.int32)
+        k_sorted, v_sorted = tile_sort(keyed, pos, tile=tile,
+                                       interpret=interpret)
+        # stage 2: merge runs — stable argsort over tile-sorted keys is a
+        # merge of pre-sorted runs for XLA's sort
+        merge = jnp.argsort(k_sorted, stable=True)
+        take = v_sorted[merge]
+        perm = perm[take]
+    return perm

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the bitonic tile sort."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["tile_sort_ref"]
+
+
+def tile_sort_ref(keys, vals, tile: int):
+    """Sort (key, val) pairs within each tile by (key, val) ascending."""
+    n = keys.shape[0]
+    kt = keys.reshape(n // tile, tile)
+    vt = vals.reshape(n // tile, tile)
+    # composite order: primary key, tie-break val — matches kernel semantics
+    order = jnp.lexsort((vt, kt), axis=-1)
+    return (jnp.take_along_axis(kt, order, axis=-1).reshape(n),
+            jnp.take_along_axis(vt, order, axis=-1).reshape(n))

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: blocked segment-sum (the fused join-aggregate core).
+
+``tensor_join_aggregate`` (core/tensor_engine) reduces both relations along
+the shared key axis and contracts — the join result is never materialized.
+The reduction is this kernel: per-tile one-hot masked matmul into a
+VMEM-resident [num_segments] accumulator (revisited across all tiles), so a
+billion-row aggregate join streams rows exactly once through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_sum_pallas"]
+
+
+def _segsum_kernel(seg_ref, val_ref, out_ref, *, num_segments):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    seg = seg_ref[...]                      # [tblk] i32
+    val = val_ref[...]                      # [tblk] f32
+    onehot = jnp.where(
+        seg[:, None] == jax.lax.iota(jnp.int32, num_segments)[None, :],
+        1.0, 0.0).astype(val.dtype)         # [tblk, S] built in VMEM
+    out_ref[...] += jax.lax.dot_general(
+        val[None, :], onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype)[0]
+
+
+def segment_sum_pallas(seg_ids, values, num_segments: int, *,
+                       tblk: int = 2048, interpret: bool = False):
+    """seg_ids [N] i32 (< num_segments), values [N] → sums [num_segments]."""
+    n = seg_ids.shape[0]
+    tblk = min(tblk, n)
+    assert n % tblk == 0, (n, tblk)
+    kernel = functools.partial(_segsum_kernel, num_segments=num_segments)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tblk,),
+        in_specs=[
+            pl.BlockSpec((tblk,), lambda t: (t,)),
+            pl.BlockSpec((tblk,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_segments,), values.dtype),
+        interpret=interpret,
+    )(seg_ids, values)

@@ -1,0 +1,40 @@
+"""Jit'd wrappers: segment sum + fused aggregate join on the kernel path."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_sum_pallas
+
+__all__ = ["segment_sum", "join_aggregate_kernel"]
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("num_segments", "tblk", "interpret"))
+def segment_sum(seg_ids, values, num_segments: int, tblk: int = 2048,
+                interpret=None):
+    return segment_sum_pallas(seg_ids.astype(jnp.int32),
+                              values.astype(jnp.float32), num_segments,
+                              tblk=min(tblk, seg_ids.shape[0]),
+                              interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def join_aggregate_kernel(build_keys, build_vals, probe_keys, probe_vals,
+                          num_segments: int, interpret=None):
+    """Σ over (virtual) join pairs of b·p — join output never materialized."""
+    sb = segment_sum(build_keys, build_vals, num_segments, interpret=interpret)
+    sp = segment_sum(probe_keys, probe_vals, num_segments, interpret=interpret)
+    cb = segment_sum(build_keys, jnp.ones_like(build_vals, jnp.float32),
+                     num_segments, interpret=interpret)
+    cp = segment_sum(probe_keys, jnp.ones_like(probe_vals, jnp.float32),
+                     num_segments, interpret=interpret)
+    return {"count": jnp.dot(cb, cp), "sum_prod": jnp.dot(sb, sp),
+            "sum_add": jnp.dot(sb, cp) + jnp.dot(cb, sp)}

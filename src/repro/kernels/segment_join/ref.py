@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the segment-sum kernel."""
+import jax
+
+__all__ = ["segment_sum_ref"]
+
+
+def segment_sum_ref(seg_ids, values, num_segments: int):
+    return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)

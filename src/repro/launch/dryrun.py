@@ -1,0 +1,273 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+THE FIRST TWO LINES must run before ANY other import (jax locks the device
+count on first init): they materialize 512 host placeholder devices so
+``make_production_mesh`` can build the production meshes on this CPU-only
+container.  Nothing here allocates device memory — inputs, params, optimizer
+state and caches are all ShapeDtypeStructs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all                # every cell, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  ... --policy '{"microbatches": 4}'   # hillclimb overrides
+
+Each cell's artifacts (memory_analysis, cost_analysis, per-collective bytes,
+roofline terms) are written incrementally to results/dryrun/<cell>.json so an
+interrupted sweep resumes where it left off.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, applicable, get_config, list_archs
+from repro.distributed.sharding import (batch_specs, cache_specs, param_specs,
+                                        tree_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_cache, abstract_opt_state,
+                                abstract_params, input_specs, sharded_config)
+from repro.models import decode_step, prefill
+from repro.roofline.analyze import analyze_hlo, roofline_terms
+from repro.roofline.model_flops import model_flops
+from repro.train.optimizer import make_optimizer
+from repro.train.trainer import TrainPolicy, default_policy, make_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+RESID_BUDGET = 4 << 30  # per-device budget for the scan's saved residual stream
+
+# per-arch baseline policy tweaks where the generic heuristic undershoots
+# (measured against the 16 GiB HBM budget; see EXPERIMENTS.md §Dry-run)
+ARCH_POLICY = {
+    "phi3.5-moe-42b-a6.6b": {"microbatches": 16},
+    "qwen2-vl-7b": {"microbatches": 8},
+}
+
+
+def _policy_for(cfg, shape, mesh, overrides: dict) -> TrainPolicy:
+    policy = default_policy(cfg)
+    # the depth scan saves the residual-stream carry once per period for the
+    # rematerialized backward: L_periods · B_dev · S · d · 2B.  Pick the
+    # microbatch count that keeps that under RESID_BUDGET.
+    from repro.distributed.sharding import dp_axes
+    import numpy as np
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    b_dev = max(1, shape.global_batch // dp)
+    resid = cfg.num_periods * b_dev * shape.seq_len * cfg.d_model * 2
+    # multi-slot periods (Jamba: 7 mamba + 1 attn) keep a whole period's
+    # internals live during the rematerialized backward — scale the budget
+    budget = RESID_BUDGET // max(1, cfg.period // 2)
+    # MoE sort-dispatch materializes the (T·k, d) permutation in f32 (fwd +
+    # cotangent) — bound the per-microbatch token count accordingly
+    moe_term = (b_dev * shape.seq_len * cfg.experts_per_token * cfg.d_model * 8
+                if cfg.uses_moe else 0)
+    mb = 1
+    while (resid / mb > budget or moe_term / mb > (2 << 30)) and mb < b_dev:
+        mb *= 2
+    mb = max(mb, ARCH_POLICY.get(cfg.name, {}).get("microbatches", 1))
+    if mb > 1:
+        policy = dataclasses.replace(policy, microbatches=min(mb, b_dev))
+    if overrides:
+        policy = dataclasses.replace(policy, **{
+            k: v for k, v in overrides.items()
+            if k in {f.name for f in dataclasses.fields(TrainPolicy)}})
+    return policy
+
+
+def build_cell(cfg, shape, mesh, overrides):
+    """Returns (jitted_fn, arg_structs) for one cell."""
+    overrides = overrides or {}
+    fw_kw = {k: overrides[k]
+             for k in ("q_chunk", "kv_chunk", "moe_dispatch") if k in overrides}
+    fsdp = overrides.get("fsdp", True)
+    from repro.distributed.sharding import dp_axes
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    logits_sh = NamedSharding(mesh, P(dp_axes(mesh), None, "model"))
+    if shape.kind == "train":
+        policy = _policy_for(cfg, shape, mesh, overrides)
+        policy = dataclasses.replace(policy, logits_sharding=logits_sh)
+        opt = make_optimizer(policy.optimizer)
+        step = make_train_step(cfg, opt, policy)
+        params_s = abstract_params(cfg)
+        opt_s = abstract_opt_state(opt, params_s)
+        batch_s = input_specs(cfg, shape, with_labels=True)
+        in_sh = (tree_shardings(mesh, param_specs(params_s, cfg, fsdp=fsdp)),
+                 tree_shardings(mesh, param_specs(opt_s, cfg, fsdp=fsdp)),
+                 tree_shardings(mesh, batch_specs(batch_s, mesh)))
+        fn = jax.jit(step, in_shardings=in_sh, donate_argnums=(0, 1))
+        return fn, (params_s, opt_s, batch_s)
+    if shape.kind == "prefill":
+        params_s = abstract_params(cfg)
+        batch_s = input_specs(cfg, shape, with_labels=False)
+        in_sh = (tree_shardings(mesh, param_specs(params_s, cfg, fsdp=fsdp)),
+                 tree_shardings(mesh, batch_specs(batch_s, mesh)))
+        # §Perf H2: prefill re-reads K/V once per query block — 2048-wide
+        # blocks cut that traffic 8× vs the 256 default (which is sized for
+        # the rematerialized training backward, not forward-only prefill)
+        fw_kw.setdefault("q_chunk", 2048)
+        fw_kw.setdefault("kv_chunk", 2048)
+        def prefill_step(params, batch):
+            return prefill(params, cfg, batch, **fw_kw)
+        fn = jax.jit(prefill_step, in_shardings=in_sh)
+        return fn, (params_s, batch_s)
+    # decode
+    params_s = abstract_params(cfg)
+    cache_s = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    batch_s = input_specs(cfg, shape, with_labels=False)
+    in_sh = (tree_shardings(mesh, param_specs(params_s, cfg, fsdp=fsdp)),
+             tree_shardings(mesh, cache_specs(cache_s, cfg, mesh)),
+             tree_shardings(mesh, batch_specs(batch_s, mesh)))
+    def serve_step(params, cache, batch):
+        return decode_step(params, cfg, cache, batch)
+    fn = jax.jit(serve_step, in_shardings=in_sh, donate_argnums=(1,))
+    return fn, (params_s, cache_s, batch_s)
+
+
+def _mem_dict(compiled):
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # backend may not implement it
+        return {"error": repr(e)}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "host_argument_size_in_bytes",
+                 "host_output_size_in_bytes", "host_temp_size_in_bytes"):
+        if hasattr(m, attr):
+            out[attr] = int(getattr(m, attr))
+    if not out:
+        out["repr"] = str(m)
+    return out
+
+
+def _cost_dict(compiled):
+    try:
+        c = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": repr(e)}
+    if isinstance(c, (list, tuple)):
+        c = c[0]
+    return {k: float(v) for k, v in c.items()
+            if isinstance(v, (int, float)) and not k.startswith("bytes accessed operand")}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, overrides=None,
+             out_dir: pathlib.Path = RESULTS_DIR, tag: str = ""):
+    cfg = sharded_config(get_config(arch))
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "mesh_shape": list(mesh.devices.shape),
+              "overrides": overrides or {}, "status": "running"}
+    n_dev = mesh.devices.size
+    try:
+        with mesh:
+            fn, args = build_cell(cfg, shape, mesh, overrides)
+            t0 = time.time()
+            lowered = fn.lower(*args)
+            record["lower_s"] = round(time.time() - t0, 2)
+            t0 = time.time()
+            compiled = lowered.compile()
+            record["compile_s"] = round(time.time() - t0, 2)
+        record["memory_analysis"] = _mem_dict(compiled)
+        record["cost_analysis"] = _cost_dict(compiled)
+        print(f"[{arch} × {shape_name} × {mesh_kind}] memory_analysis:",
+              record["memory_analysis"])
+        print(f"[{arch} × {shape_name} × {mesh_kind}] cost_analysis:",
+              {k: v for k, v in record["cost_analysis"].items()
+               if k in ("flops", "bytes accessed")})
+        t0 = time.time()
+        try:
+            hlo = compiled.as_text()
+            record["hlo_text_bytes"] = len(hlo)
+            # trip-count-scaled per-device HLO walk (cost_analysis counts
+            # while bodies once — useless for scan-over-depth programs)
+            record["hlo_walk"] = analyze_hlo(hlo)
+            del hlo
+        except Exception as e:
+            record["hlo_walk"] = {"error_msg": repr(e)}
+        record["collective_parse_s"] = round(time.time() - t0, 2)
+
+        walk = record.get("hlo_walk", {})
+        flops_dev = walk.get("flops", 0.0)
+        bytes_dev = walk.get("bytes", 0.0)
+        coll_dev = walk.get("collective_bytes", 0.0)
+        record["roofline"] = roofline_terms(flops_dev, bytes_dev, coll_dev)
+        mf = model_flops(cfg, shape)
+        record["model_flops_total"] = mf
+        record["model_flops_per_device"] = mf / n_dev
+        # MODEL_FLOPS / HLO_FLOPs: <1 means compiled overhead (remat,
+        # dispatch waste, padding); >1 means the walker missed compute
+        record["useful_flops_ratio"] = (
+            (mf / n_dev) / flops_dev if flops_dev else None)
+        record["status"] = "ok"
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = repr(e)
+        record["traceback"] = traceback.format_exc()[-4000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    path.write_text(json.dumps(record, indent=1))
+    print(f"[{arch} × {shape_name} × {mesh_kind}] -> {record['status']} "
+          f"(lower {record.get('lower_s', '-')}s, compile {record.get('compile_s', '-')}s)")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--policy", default=None, help="JSON overrides")
+    ap.add_argument("--tag", default="", help="suffix for result files")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    overrides = json.loads(args.policy) if args.policy else None
+    out_dir = pathlib.Path(args.out)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                suffix = f"__{args.tag}" if args.tag else ""
+                path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+                if args.skip_existing and path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[{arch} × {shape_name} × {mesh_kind}] cached "
+                              f"({prev['status']})")
+                        continue
+                rec = run_cell(arch, shape_name, mesh_kind, overrides,
+                               out_dir, args.tag)
+                if rec["status"] == "error":
+                    failures += 1
+                    print(rec["error"])
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+    print("dry-run complete: all cells ok")
+
+
+if __name__ == "__main__":
+    main()

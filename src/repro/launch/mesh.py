@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; ``dryrun.py`` sets XLA_FLAGS *before* any jax
+import to materialize 512 host placeholder devices.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            f"importing jax (launch/dryrun.py does this)")
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = data * model
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
+    return jax.sharding.Mesh(
+        __import__("numpy").asarray(devices).reshape(data, model),
+        ("data", "model"))

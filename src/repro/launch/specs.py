@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input and state tree.
+
+No device allocation anywhere here — everything is ``jax.eval_shape`` /
+``ShapeDtypeStruct``, which is what lets the 398B configs lower on a laptop.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..configs.shapes import ShapeSpec
+from ..models import init_cache, init_model
+from ..train.optimizer import Optimizer
+
+__all__ = ["input_specs", "abstract_params", "abstract_opt_state",
+           "abstract_cache"]
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                with_labels: bool) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch ShapeDtypeStructs for one (arch, shape) cell."""
+    B = shape.global_batch
+    S = 1 if shape.kind == "decode" else shape.seq_len
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.modality == "audio_stub":
+        batch["features"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.mrope_sections:
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return batch
+
+
+def sharded_config(cfg: ArchConfig) -> ArchConfig:
+    """Production variant: vocab padded to 256 (lcm of both mesh axes)."""
+    import dataclasses
+    return dataclasses.replace(cfg, vocab_pad_multiple=256)
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg, dtype))
+
+
+def abstract_opt_state(optimizer: Optimizer, params_struct):
+    return jax.eval_shape(optimizer.init, params_struct)
+
+
+def abstract_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch_size, max_seq, dtype))

@@ -1,0 +1,16 @@
+"""Model substrate: attention variants, SSD, MoE with dual dispatch paths,
+and the period-patterned transformer assembly."""
+from .transformer import (
+    cross_entropy_loss,
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    model_input_dtypes,
+    prefill,
+)
+
+__all__ = [
+    "cross_entropy_loss", "decode_step", "forward", "init_cache",
+    "init_model", "model_input_dtypes", "prefill",
+]

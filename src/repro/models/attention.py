@@ -1,0 +1,314 @@
+"""Attention: chunked (online-softmax) attention, GQA, MLA, local/global.
+
+``chunked_attention`` is the pure-JAX flash-attention analogue: a scan over
+KV chunks (and an outer scan over query chunks) with running max/denominator,
+so peak memory is O(q_chunk · kv_chunk) per head instead of O(S²).  This is
+what makes 32k-prefill lowering memory-sane; the Pallas kernel path (see
+repro.kernels) targets the same contract on real TPUs.
+
+MLA (DeepSeek-V2) keeps the compressed kv_lora cache and uses the *absorbed*
+formulation at decode time: scores contract directly against the compressed
+cache (rank+rope per token, 576 B vs 4 KB for equivalent GQA), which also
+shards cleanly: the contraction dim is split over the "model" mesh axis and
+GSPMD completes it with an all-reduce.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, init_dense, init_rmsnorm, rmsnorm, softcap
+from .pspec import constrain, constrain_kv_cache
+
+__all__ = [
+    "chunked_attention", "decode_attention",
+    "init_gqa", "gqa_forward", "gqa_decode",
+    "init_mla", "mla_forward", "mla_decode",
+]
+
+_NEG_INF = -1e30
+
+
+def chunked_attention(
+    q: jnp.ndarray,            # [B, Sq, H, D]
+    k: jnp.ndarray,            # [B, Sk, KH, D]
+    v: jnp.ndarray,            # [B, Sk, KH, Dv]
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_chunk: int = 256,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Flat-H layout: GQA KV heads are repeated per KV *chunk* (chunk-sized
+    copies only), so every score/accumulator tensor carries a single H axis
+    that divides the "model" mesh axis.  With the factored (KH, G) layout
+    GSPMD cannot tile the head product and silently REPLICATES the batch dim
+    across the data axis inside the scan state — ~16× the attention-residual
+    footprint at mesh scale (measured; see EXPERIMENTS.md §Dry-run)."""
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0, (Sq, q_chunk, Sk, kv_chunk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    q = constrain(q, "dp", None, "model", None)
+    k = constrain(k, "dp", None, None, None)
+    v = constrain(v, "dp", None, None, None)
+    qg = q.reshape(B, nq, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nk, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, kv_chunk, KH, Dv).transpose(1, 0, 2, 3, 4)
+
+    def q_block(_, inp):
+        qi, qblk = inp  # qblk: [B, qc, H, D]
+        pos_q = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kv_inp):
+            m, l, acc = carry
+            ki, kblk, vblk = kv_inp
+            if G > 1:  # repeat KV heads: chunk-sized, keeps H axis flat
+                kblk = jnp.repeat(kblk, G, axis=2)
+                vblk = jnp.repeat(vblk, G, axis=2)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qblk, kblk,
+                preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cap)
+            s = constrain(s, "dp", "model", None, None)
+            pos_k = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), dtype=bool)
+            if causal:
+                mask &= pos_q[:, None] >= pos_k[None, :]
+            if window is not None:
+                mask &= (pos_q[:, None] - pos_k[None, :]) < window
+            s = jnp.where(mask, s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = constrain(jnp.full((B, H, q_chunk), _NEG_INF, jnp.float32),
+                       "dp", "model", None)
+        l0 = constrain(jnp.zeros((B, H, q_chunk), jnp.float32),
+                       "dp", "model", None)
+        a0 = constrain(jnp.zeros((B, H, q_chunk, Dv), jnp.float32),
+                       "dp", "model", None, None)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out  # [B, H, qc, Dv]
+
+    _, blocks = jax.lax.scan(q_block, None, (jnp.arange(nq), qg))
+    # blocks: [nq, B, H, qc, Dv] -> [B, Sq, H, Dv]
+    out = blocks.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,            # [B, 1, H, D]
+    k_cache: jnp.ndarray,      # [B, S, KH, D]
+    v_cache: jnp.ndarray,      # [B, S, KH, Dv]
+    cur_pos: jnp.ndarray,      # scalar int: position of the new token
+    *,
+    window: Optional[int] = None,
+    cap: Optional[float] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, _, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    # pin batch sharding: GSPMD otherwise batch-replicates the [B,·,·,S]
+    # score/probability tensors at 32k–500k context
+    s = constrain(s, "dp", None, None, None)
+    s = softcap(s, cap)
+    pos_k = jnp.arange(S)
+    mask = pos_k <= cur_pos
+    if window is not None:
+        mask &= (cur_pos - pos_k) < window
+    s = jnp.where(mask, s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = constrain(p, "dp", None, None, None)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg, dtype=jnp.float32):
+    d, H, KH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, H * Dh, dtype),
+        "wk": init_dense(ks[1], d, KH * Dh, dtype),
+        "wv": init_dense(ks[2], d, KH * Dh, dtype),
+        "wo": init_dense(ks[3], H * Dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((KH * Dh,), dtype)
+        p["bv"] = jnp.zeros((KH * Dh,), dtype)
+    return p
+
+
+def _gqa_qkv(params, x, cfg, sin, cos):
+    B, S, _ = x.shape
+    H, KH, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KH, Dh)
+    v = v.reshape(B, S, KH, Dh)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def gqa_forward(params, x, cfg, sin, cos, *, window=None, is_causal=True,
+                q_chunk=256, kv_chunk=1024):
+    B, S, _ = x.shape
+    q, k, v = _gqa_qkv(params, x, cfg, sin, cos)
+    out = chunked_attention(
+        q, k, v, causal=is_causal, window=window, cap=cfg.attn_logit_softcap,
+        q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out.reshape(B, S, cfg.num_heads * cfg.head_dim) @ params["wo"], (k, v)
+
+
+class GQACacheUpdate(NamedTuple):
+    k: jnp.ndarray  # [B, 1, KH, D]
+    v: jnp.ndarray
+
+
+def gqa_decode(params, x, cfg, sin, cos, k_cache, v_cache, cur_pos, *, window=None):
+    """x: [B, 1, d]; caches [B, S, KH, D] already containing history.
+
+    Returns (out, (k_new, v_new)) — the caller owns the cache write (so the
+    cache update stays inside the jitted serve_step's dynamic_update_slice).
+    """
+    B = x.shape[0]
+    q, k, v = _gqa_qkv(params, x, cfg, sin, cos)
+    zero = jnp.zeros((), jnp.int32)
+    pos32 = jnp.asarray(cur_pos, jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (zero, pos32, zero, zero))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (zero, pos32, zero, zero))
+    # keep the cache in its canonical sharding through the in-place update —
+    # otherwise GSPMD may re-layout (copy!) the whole multi-GB cache per step
+    k_cache = constrain_kv_cache(k_cache)
+    v_cache = constrain_kv_cache(v_cache)
+    out = decode_attention(q, k_cache, v_cache, cur_pos, window=window,
+                           cap=cfg.attn_logit_softcap)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim) @ params["wo"]
+    return out, (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.num_heads
+    rank, nope, rp, vd = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": init_dense(ks[0], d, H * (nope + rp), dtype),
+        "w_dkv": init_dense(ks[1], d, rank + rp, dtype),
+        "kv_norm": init_rmsnorm(rank, dtype),
+        "w_uk": init_dense(ks[2], rank, H * nope, dtype),
+        "w_uv": init_dense(ks[3], rank, H * vd, dtype),
+        "wo": init_dense(ks[4], H * vd, d, dtype),
+    }
+
+
+def _mla_q(params, x, cfg, sin, cos):
+    B, S, _ = x.shape
+    H, nope, rp = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = (x @ params["wq"]).reshape(B, S, H, nope + rp)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def _mla_ckv(params, x, cfg, sin, cos):
+    rank, rp = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv = x @ params["w_dkv"]
+    c, k_rope = ckv[..., :rank], ckv[..., rank:]
+    c = rmsnorm(params["kv_norm"], c, cfg.norm_eps)
+    # shared (single-head) rope key
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+    return c, k_rope
+
+
+def mla_forward(params, x, cfg, sin, cos, *, q_chunk=256, kv_chunk=1024):
+    """Training/prefill MLA: expand k/v per head, chunked attention."""
+    B, S, _ = x.shape
+    H, nope, rp, vd = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(params, x, cfg, sin, cos)
+    c, k_rope = _mla_ckv(params, x, cfg, sin, cos)
+    k_nope = (c @ params["w_uk"]).reshape(B, S, H, nope)
+    v = (c @ params["w_uv"]).reshape(B, S, H, vd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rp))], axis=-1)
+    out = chunked_attention(
+        q, k, v, causal=True, scale=1.0 / math.sqrt(nope + rp),
+        q_chunk=q_chunk, kv_chunk=kv_chunk)
+    cache = jnp.concatenate([c, k_rope], axis=-1)  # compressed cache entry
+    return out.reshape(B, S, H * vd) @ params["wo"], cache
+
+
+def mla_decode(params, x, cfg, sin, cos, ckv_cache, cur_pos):
+    """Absorbed-MLA decode against the compressed cache [B, S, rank+rope]."""
+    B = x.shape[0]
+    H, nope, rp, vd = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rank = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(params, x, cfg, sin, cos)       # [B,1,H,*]
+    c_new, k_rope_new = _mla_ckv(params, x, cfg, sin, cos)  # [B,1,rank],[B,1,rp]
+    entry = jnp.concatenate([c_new, k_rope_new], axis=-1).astype(ckv_cache.dtype)
+    zero = jnp.zeros((), jnp.int32)
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, entry, (zero, jnp.asarray(cur_pos, jnp.int32), zero))
+    ckv_cache = constrain_kv_cache(ckv_cache)
+    cache_c, cache_rope = ckv_cache[..., :rank], ckv_cache[..., rank:]
+
+    # absorb W_uk into the query:  q_abs[b,h,r] = Σ_n q_nope[b,h,n]·W_uk[r,(h,n)]
+    w_uk = params["w_uk"].reshape(rank, H, nope)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32)
+    s = jnp.einsum("bhr,bsr->bhs", q_abs, cache_c.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    s += jnp.einsum("bhp,bsp->bhs", q_rope[:, 0].astype(jnp.float32),
+                    cache_rope.astype(jnp.float32))
+    s = constrain(s, "dp", "model", None)
+    s *= 1.0 / math.sqrt(nope + rp)
+    mask = jnp.arange(ckv_cache.shape[1]) <= cur_pos
+    s = jnp.where(mask[None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", p, cache_c.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    w_uv = params["w_uv"].reshape(rank, H, vd)
+    out = jnp.einsum("bhr,rhv->bhv", o_c, w_uv.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H * vd).astype(x.dtype) @ params["wo"]
+    return out, ckv_cache

@@ -1,0 +1,117 @@
+"""Shared model components: norms, rotary embeddings (incl. M-RoPE), MLPs.
+
+All modules are pure functions: ``init_*(key, ...) -> params`` and
+``apply(params, x, ...) -> y``.  Every array is created with an explicit
+dtype (the relational core enables jax_enable_x64; model code never relies on
+defaults).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_rmsnorm", "rmsnorm",
+    "init_dense", "init_mlp", "mlp",
+    "rope", "apply_rope", "mrope_freqs",
+    "softcap",
+]
+
+
+# -- RMSNorm -----------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + w) parameterization; init scale=0 → identity
+    return (xf * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+# -- Linear / MLP ----------------------------------------------------------
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype=jnp.float32).astype(dtype) * scale
+
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "gated_silu" or mlp_type == "gated_gelu":
+        return {
+            "wg": init_dense(ks[0], d_model, d_ff, dtype),
+            "wi": init_dense(ks[1], d_model, d_ff, dtype),
+            "wo": init_dense(ks[2], d_ff, d_model, dtype),
+        }
+    if mlp_type == "gelu":
+        return {
+            "wi": init_dense(ks[1], d_model, d_ff, dtype),
+            "wo": init_dense(ks[2], d_ff, d_model, dtype),
+        }
+    raise ValueError(mlp_type)
+
+
+def mlp(params, x, mlp_type: str):
+    if mlp_type == "gated_silu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    elif mlp_type == "gated_gelu":
+        h = jax.nn.gelu(x @ params["wg"], approximate=True) * (x @ params["wi"])
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ params["wi"], approximate=True)
+    else:
+        raise ValueError(mlp_type)
+    return h @ params["wo"]
+
+
+# -- Rotary position embeddings ----------------------------------------------
+
+def rope(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [..., S] -> (sin, cos) each [..., S, head_dim//2], f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def mrope_freqs(positions: jnp.ndarray, head_dim: int, theta: float,
+                sections: Tuple[int, ...]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multimodal RoPE (Qwen2-VL): 3 position streams (t, h, w) own disjoint
+    frequency sections.  positions: [3, B, S]; sections sum to head_dim//2."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles_all = positions.astype(jnp.float32)[..., None] * freqs  # [3,B,S,half]
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(angles_all[i, ..., start:start + sec])
+        start += sec
+    angles = jnp.concatenate(parts, axis=-1)  # [B,S,half]
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, H, D]; sin/cos: [B, S, D//2] (broadcast over heads)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    s = sin[..., None, :]  # head axis
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# -- misc -----------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)

@@ -1,0 +1,252 @@
+"""Mamba-2 (SSD, arXiv:2405.21060) in the chunked matmul ("state-space
+duality") form.
+
+The SSD reformulation is itself a structural cousin of the paper's thesis:
+instead of collapsing the sequence dimension into a strictly sequential
+recurrence (the "linearized" execution of an SSM), the sequence is kept as a
+chunk × intra-chunk tensor structure; intra-chunk work becomes dense matmuls
+(MXU-friendly) and only the O(S/chunk) inter-chunk recurrence stays
+sequential.  Decode is the classic O(1) state update — no KV cache, which is
+why the 500k-context shapes are assigned to the SSM/hybrid architectures.
+
+Layout conventions:
+  x-in   [B, S, H, P]    (H = d_inner/headdim heads, P = headdim)
+  dt     [B, S, H]
+  A      [H]             (negative; A = -exp(a_log))
+  B, C   [B, S, G, N]    (G groups broadcast over heads, N = ssm_state)
+  state  [B, H, P, N]
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import init_dense, init_rmsnorm, rmsnorm
+
+__all__ = ["init_mamba2", "mamba2_forward", "mamba2_decode", "ssd_scan", "ssd_ref"]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 128,
+             init_state: Optional[jnp.ndarray] = None):
+    """Chunked SSD. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    Bc = B.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    Cc = C.reshape(b, nc, chunk, g, n).transpose(1, 0, 2, 3, 4)
+    reps = h // g
+    tril = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(state, inp):
+        xk, dtk, Bk, Ck = inp  # [b,l,h,p], [b,l,h], [b,l,g,n] ×2
+        dA = dtk.astype(jnp.float32) * A  # [b,l,h] (A negative)
+        dA_cum = jnp.cumsum(dA, axis=1)
+        dA_sum = dA_cum[:, -1, :]  # [b,h]
+
+        # inter-chunk: contribution of the carried state (heads grouped as
+        # h = g·reps + r, matching jnp.repeat(B, reps, axis=...) ordering)
+        state_g = state.reshape(b, g, reps, p, n)
+        y_inter = jnp.einsum("blgn,bgrpn->blgrp",
+                             Ck.astype(jnp.float32), state_g,
+                             preferred_element_type=jnp.float32
+                             ).reshape(b, chunk, h, p)
+        y_inter = y_inter * jnp.exp(dA_cum)[..., None]
+
+        # intra-chunk: dense masked "attention-like" matmul over positions
+        CB = jnp.einsum("bign,bjgn->bgij", Ck.astype(jnp.float32),
+                        Bk.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)  # [b,g,l,l]
+        decay = jnp.exp(dA_cum[:, :, None, :] - dA_cum[:, None, :, :])  # [b,i,j,h]
+        decay = jnp.where(tril[None, :, :, None], decay, 0.0)
+        Gmat = (CB[:, :, None, :, :]  # [b,g,1,i,j] broadcast over reps
+                .repeat(reps, axis=2)
+                .reshape(b, h, chunk, chunk))
+        Gmat = Gmat * decay.transpose(0, 3, 1, 2) * dtk.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhij,bjhp->bihp", Gmat, xk.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+
+        # state update: decay carried state across the chunk, add chunk mass
+        ds = jnp.exp(dA_sum[:, None, :] - dA_cum) * dtk.astype(jnp.float32)  # [b,l,h]
+        ds_g = ds.reshape(b, chunk, g, reps)
+        x_g = xk.astype(jnp.float32).reshape(b, chunk, g, reps, p)
+        inc = jnp.einsum("blgn,blgr,blgrp->bgrpn",
+                         Bk.astype(jnp.float32), ds_g, x_g,
+                         preferred_element_type=jnp.float32
+                         ).reshape(b, h, p, n)
+        state_new = jnp.exp(dA_sum)[:, :, None, None] * state + inc
+        return state_new, (y_inter + y_intra)
+
+    final_state, yc = jax.lax.scan(body, init_state, (xc, dtc, Bc, Cc))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_ref(x, dt, A, B, C, init_state=None):
+    """Sequential-oracle SSD (O(S) scan over single steps) for tests."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    reps = h // g
+    state = (jnp.zeros((b, h, p, n), jnp.float32)
+             if init_state is None else init_state)
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t].astype(jnp.float32) * A)  # [b,h]
+        Bt = jnp.repeat(B[:, t], reps, axis=1).astype(jnp.float32)  # [b,h,n]
+        Ct = jnp.repeat(C[:, t], reps, axis=1).astype(jnp.float32)
+        inc = (dt[:, t].astype(jnp.float32)[:, :, None, None]
+               * x[:, t].astype(jnp.float32)[..., None] * Bt[:, :, None, :])
+        state = dA[:, :, None, None] * state + inc
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, Ct))
+    return jnp.stack(ys, axis=1).astype(x.dtype), state
+
+
+def ssd_step(x, dt, A, B, C, state):
+    """Single decode step. x [B,H,P], dt [B,H], B/C [B,G,N], state [B,H,P,N]."""
+    b, h, p = x.shape
+    g = B.shape[1]
+    reps = h // g
+    dA = jnp.exp(dt.astype(jnp.float32) * A)
+    Bt = jnp.repeat(B, reps, axis=1).astype(jnp.float32)
+    Ct = jnp.repeat(C, reps, axis=1).astype(jnp.float32)
+    inc = dt.astype(jnp.float32)[:, :, None, None] * x.astype(jnp.float32)[..., None] * Bt[:, :, None, :]
+    state = dA[:, :, None, None] * state + inc
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = d_inner + 2 * g * n
+    return d_inner, nheads, g, n, conv_ch
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, nheads, g, n, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    dt_floor = 1e-3
+    dt_init = jnp.exp(jax.random.uniform(ks[6], (nheads,), jnp.float32)
+                      * (math.log(0.1) - math.log(dt_floor)) + math.log(dt_floor))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "wz": init_dense(ks[0], d, d_inner, dtype),
+        "wx": init_dense(ks[1], d, d_inner, dtype),
+        "wb": init_dense(ks[2], d, g * n, dtype),
+        "wc": init_dense(ks[3], d, g * n, dtype),
+        "wdt": init_dense(ks[4], d, nheads, dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "a_log": jnp.log(1.0 + 15.0 * jax.random.uniform(ks[5], (nheads,), jnp.float32)),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[7], (cfg.conv_width, conv_ch), jnp.float32)
+                   * (1.0 / math.sqrt(cfg.conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "norm": init_rmsnorm(d_inner, dtype),
+        "wo": init_dense(jax.random.fold_in(key, 99), d_inner, d, dtype),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv via shifted adds. u [B,S,C], w [W,C], b [C]."""
+    W = w.shape[0]
+    out = u * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, : u.shape[1], :]
+        out = out + shifted * w[W - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(params, x, cfg, *, chunk: int = 128,
+                   seq_chunk: int = 2048):
+    """x [B,S,d] -> (y [B,S,d], (conv_state, ssd_state)) for cache priming.
+
+    Fully chunked over the sequence: projections, the causal conv (tail
+    carried between chunks) and the SSD recurrence all run inside one scan,
+    so peak memory is O(B · seq_chunk · d_inner) regardless of S — at
+    Jamba-scale (d_inner 16k, S 32k) the unchunked formulation held ~5 copies
+    of a 4.4 GB tensor per layer.
+    """
+    B_, S, _ = x.shape
+    d_inner, nheads, g, n, conv_ch = _dims(cfg)
+    W = cfg.conv_width
+    A = -jnp.exp(params["a_log"])
+    seq_chunk = min(seq_chunk, S)
+    assert S % seq_chunk == 0, (S, seq_chunk)
+    nsc = S // seq_chunk
+    xs = x.reshape(B_, nsc, seq_chunk, x.shape[-1]).transpose(1, 0, 2, 3)
+
+    def body(carry, xc):
+        conv_tail, state = carry  # [B, W-1, C], [B, H, P, N]
+        z = xc @ params["wz"]
+        u_new = jnp.concatenate(
+            [xc @ params["wx"], xc @ params["wb"], xc @ params["wc"]], axis=-1)
+        u_ext = jnp.concatenate([conv_tail, u_new], axis=1)  # [B, W-1+sc, C]
+        conv_out = u_ext[:, W - 1:, :] * params["conv_w"][W - 1]
+        for i in range(1, W):
+            conv_out = conv_out + u_ext[:, W - 1 - i:-i, :] * params["conv_w"][W - 1 - i]
+        conv_out = jax.nn.silu(conv_out + params["conv_b"])
+        new_tail = u_ext[:, -(W - 1):, :]
+        xin, Bssm, Cssm = jnp.split(conv_out, [d_inner, d_inner + g * n], axis=-1)
+        dt = jax.nn.softplus(
+            (xc @ params["wdt"]).astype(jnp.float32) + params["dt_bias"])
+        xh = xin.reshape(B_, seq_chunk, nheads, cfg.ssm_headdim)
+        y, state = ssd_scan(xh, dt, A,
+                            Bssm.reshape(B_, seq_chunk, g, n),
+                            Cssm.reshape(B_, seq_chunk, g, n),
+                            chunk=chunk, init_state=state)
+        y = y + params["d_skip"][:, None].astype(y.dtype) * xh
+        y = y.reshape(B_, seq_chunk, d_inner)
+        y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+        return (new_tail, state), y @ params["wo"]
+
+    tail0 = jnp.zeros((B_, W - 1, conv_ch), x.dtype)
+    state0 = jnp.zeros((B_, nheads, cfg.ssm_headdim, n), jnp.float32)
+    (conv_state, state), ys = jax.lax.scan(body, (tail0, state0), xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B_, S, x.shape[-1])
+    return y, (conv_state, state)
+
+
+def mamba2_decode(params, x, cfg, conv_state, ssd_state):
+    """One token. x [B,1,d]; conv_state [B,W-1,C]; ssd_state [B,H,P,N]."""
+    B_ = x.shape[0]
+    d_inner, nheads, g, n, conv_ch = _dims(cfg)
+    xt = x[:, 0, :]
+    z = xt @ params["wz"]
+    u_new = jnp.concatenate(
+        [xt @ params["wx"], xt @ params["wb"], xt @ params["wc"]], axis=-1)
+    window = jnp.concatenate([conv_state, u_new[:, None, :]], axis=1)  # [B,W,C]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32))
+        + params["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = window[:, 1:, :]
+    xin, Bssm, Cssm = jnp.split(conv_out, [d_inner, d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(
+        (xt @ params["wdt"]).astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    y, ssd_state = ssd_step(
+        xin.reshape(B_, nheads, cfg.ssm_headdim), dt, A,
+        Bssm.reshape(B_, g, n), Cssm.reshape(B_, g, n), ssd_state)
+    y = y + params["d_skip"][:, None].astype(y.dtype) * xin.reshape(B_, nheads, cfg.ssm_headdim)
+    y = y.reshape(B_, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return (y @ params["wo"])[:, None, :], (new_conv_state, ssd_state)

@@ -1,0 +1,80 @@
+"""Sharding-constraint helper usable from pure model code.
+
+``constrain(x, "dp", None, "model")`` applies a with_sharding_constraint built
+against the *ambient* mesh (the ``with mesh:`` scope the launcher lowers
+under).  Outside any mesh (unit tests, CPU examples) it is a no-op, so model
+code stays mesh-agnostic.  Logical names:
+
+  "dp"    → the data-parallel axes present in the mesh (("pod","data") or
+            ("data",)),
+  "model" → the tensor-parallel axis,
+  None    → replicated.
+
+A constraint is skipped when the dimension does not divide the axis size —
+GSPMD would reject it as an annotation; dropping it just returns inference to
+the solver for that tensor.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["constrain", "ambient_mesh"]
+
+
+def ambient_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def _resolve(name, mesh):
+    if name is None:
+        return None
+    if name == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    return name if name in mesh.axis_names else None
+
+
+def _axis_size(entry, mesh) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return int(mesh.shape[entry])
+
+
+def constrain(x, *names):
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    assert len(names) == x.ndim, (names, x.shape)
+    entries = []
+    for dim, name in zip(x.shape, names):
+        e = _resolve(name, mesh)
+        if e is not None and dim % _axis_size(e, mesh) != 0:
+            e = None  # not annotatable; leave to the solver
+        entries.append(e)
+    return jax.lax.with_sharding_constraint(x, P(*entries))
+
+
+def constrain_kv_cache(x):
+    """[B, S, KH, D] cache: context-parallel — SEQUENCE sharded over "model"
+    (mirrors distributed.sharding.cache_specs so the in-place decode update
+    never re-layouts the cache).  Attention over the sharded S axis costs one
+    all-reduce of softmax stats + the (B,H,D) output — independent of S."""
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    model = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    _, S = x.shape[0], x.shape[1]
+    if S % model == 0 and S >= model:
+        return constrain(x, "dp", "model", *([None] * (x.ndim - 2)))
+    return constrain(x, "dp", *([None] * (x.ndim - 1)))

@@ -1,0 +1,446 @@
+"""Model assembly: period-patterned blocks scanned over depth.
+
+Architectures are described by a *period pattern* (configs.base): a tuple of
+(mixer, ffn) slots tiled ``num_periods`` times, plus optional prefix layers.
+Parameters for the scanned body are stacked on a leading period axis and the
+depth loop is a single ``lax.scan`` — keeping HLO size (and 512-device compile
+time) independent of depth.  Heterogeneous stacks (Gemma-2 local/global,
+Jamba 7:1 Mamba:attention with alternating MoE) are periods with several
+slots, unrolled inside the scan body.
+
+Three entry points share the block code:
+  * ``forward``      — train/eval logits (+ MoE aux loss)
+  * ``prefill``      — forward that also returns a decode cache
+  * ``decode_step``  — one-token step against a preallocated cache
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .attention import (gqa_decode, gqa_forward, init_gqa, init_mla,
+                        mla_decode, mla_forward)
+from .common import init_dense, init_rmsnorm, mlp, init_mlp, mrope_freqs, rmsnorm, rope, softcap
+from .mamba2 import init_mamba2, mamba2_decode, mamba2_forward, _dims as mamba_dims
+from .moe import init_moe, moe_forward
+from .pspec import constrain
+
+__all__ = ["init_model", "forward", "prefill", "decode_step", "init_cache",
+           "cross_entropy_loss", "model_input_dtypes"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_slot(key, cfg: ArchConfig, spec, dtype):
+    mixer, ffn = spec
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model, dtype)}
+    if mixer == "mamba":
+        p["mixer"] = init_mamba2(ks[0], cfg, dtype)
+    elif cfg.attn_type == "mla":
+        p["mixer"] = init_mla(ks[0], cfg, dtype)
+    else:
+        p["mixer"] = init_gqa(ks[0], cfg, dtype)
+    if ffn != "none":
+        p["norm2"] = init_rmsnorm(cfg.d_model, dtype)
+        if ffn == "moe":
+            p["ffn"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    if cfg.use_post_norm:
+        p["postnorm1"] = init_rmsnorm(cfg.d_model, dtype)
+        if ffn != "none":
+            p["postnorm2"] = init_rmsnorm(cfg.d_model, dtype)
+    return p
+
+
+def _init_period(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, len(cfg.pattern))
+    return {f"s{i}": _init_slot(ks[i], cfg, spec, dtype)
+            for i, spec in enumerate(cfg.pattern)}
+
+
+def init_model(key, cfg: ArchConfig, dtype=jnp.float32):
+    k_embed, k_prefix, k_blocks, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    if cfg.modality == "audio_stub":
+        # frame embeddings arrive precomputed at d_model; learned input norm+proj
+        params["frontend"] = {
+            "proj": init_dense(k_embed, cfg.d_model, cfg.d_model, dtype),
+            "norm": init_rmsnorm(cfg.d_model, dtype),
+        }
+    else:
+        params["embed"] = {
+            "table": (jax.random.normal(k_embed, (cfg.padded_vocab, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dtype)
+        }
+    if cfg.prefix:
+        pk = jax.random.split(k_prefix, len(cfg.prefix))
+        params["prefix"] = {f"p{i}": _init_slot(pk[i], cfg, spec, dtype)
+                            for i, spec in enumerate(cfg.prefix)}
+    if cfg.num_periods:
+        bk = jax.random.split(k_blocks, cfg.num_periods)
+        params["blocks"] = jax.vmap(lambda k: _init_period(k, cfg, dtype))(bk)
+    params["final_norm"] = init_rmsnorm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_dense(k_head, cfg.d_model, cfg.padded_vocab, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared block application
+# ---------------------------------------------------------------------------
+
+def _mixer_window(cfg, mixer):
+    return cfg.sliding_window if mixer == "attn:local" else None
+
+
+def _apply_slot(p, cfg: ArchConfig, spec, x, sin, cos, *, moe_dispatch,
+                moe_budget, moe_token_chunk, q_chunk, kv_chunk):
+    """Full-sequence slot application. Returns (x, cache_entry, aux)."""
+    mixer, ffn = spec
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    cache_entry = {}
+    if mixer == "mamba":
+        out, (conv_state, ssd_state) = mamba2_forward(p["mixer"], h, cfg)
+        cache_entry = {"conv": conv_state, "ssd": ssd_state}
+    elif cfg.attn_type == "mla":
+        out, ckv = mla_forward(p["mixer"], h, cfg, sin, cos,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk)
+        cache_entry = {"ckv": ckv}
+    else:
+        out, (k, v) = gqa_forward(p["mixer"], h, cfg, sin, cos,
+                                  window=_mixer_window(cfg, mixer),
+                                  is_causal=cfg.causal,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk)
+        cache_entry = {"k": k, "v": v}
+    if cfg.use_post_norm:
+        out = rmsnorm(p["postnorm1"], out, cfg.norm_eps)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            out, aux = moe_forward(p["ffn"], h, cfg, dispatch=moe_dispatch,
+                                   budget_bytes=moe_budget,
+                                   token_chunk=moe_token_chunk)
+        else:
+            out = mlp(p["ffn"], h, cfg.mlp_type)
+        if cfg.use_post_norm:
+            out = rmsnorm(p["postnorm2"], out, cfg.norm_eps)
+        x = x + out
+    return x, cache_entry, aux
+
+
+def _rope_tables(cfg: ArchConfig, batch, seq_len, q_offset=0):
+    if cfg.mrope_sections:
+        positions = batch["positions"]  # [3, B, S]
+        return mrope_freqs(positions, cfg.head_dim if cfg.attn_type != "mla"
+                           else cfg.qk_rope_dim, cfg.rope_theta,
+                           cfg.mrope_sections)
+    positions = (jnp.arange(seq_len) + q_offset)[None, :]  # [1, S]
+    dim = cfg.qk_rope_dim if cfg.attn_type == "mla" else cfg.head_dim
+    return rope(positions, dim, cfg.rope_theta)
+
+
+def _embed(params, cfg: ArchConfig, batch):
+    if cfg.modality == "audio_stub":
+        f = params["frontend"]
+        x = rmsnorm(f["norm"], batch["features"] @ f["proj"], cfg.norm_eps)
+    else:
+        x = params["embed"]["table"][batch["tokens"]]
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return x
+
+
+def _head(params, cfg: ArchConfig, x):
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = x @ params["lm_head"]
+    logits = softcap(logits, cfg.final_logit_softcap)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask padding columns; keeps logsumexp/argmax/CE exact while the
+        # vocab axis stays mesh-divisible end to end
+        pad_mask = jnp.where(jnp.arange(cfg.padded_vocab) >= cfg.vocab_size,
+                             -1e30, 0.0).astype(jnp.float32)
+        logits = (logits.astype(jnp.float32) + pad_mask).astype(logits.dtype)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# forward (train / eval / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ArchConfig, batch, *, collect_cache: bool = False,
+            moe_dispatch: str = "auto", moe_budget: int = 2 << 30,
+            moe_token_chunk: int = 32_768,
+            remat: bool = False, remat_policy: str = "full",
+            q_chunk: int = 256, kv_chunk: int = 1024,
+            logits_sharding=None, return_hidden: bool = False):
+    """batch: {"tokens": [B,S]} | {"features": [B,S,d]} (+ "positions" for
+    M-RoPE).  Returns (logits [B,S,V], aux_loss, cache|None).
+
+    ``logits_sharding`` (a NamedSharding/PartitionSpec) constrains the logits
+    to stay vocab-sharded — without it GSPMD may replicate the [B,S,V] tensor,
+    which at 4k×100k-vocab is the single largest activation in the program.
+    """
+    x = _embed(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+    sin, cos = _rope_tables(cfg, batch, S)
+    apply_kw = dict(moe_dispatch=moe_dispatch, moe_budget=moe_budget,
+                    moe_token_chunk=moe_token_chunk,
+                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    prefix_cache = {}
+    for i, spec in enumerate(cfg.prefix):
+        x, entry, aux = _apply_slot(params["prefix"][f"p{i}"], cfg, spec, x,
+                                    sin, cos, **apply_kw)
+        aux_total += aux
+        if collect_cache:
+            prefix_cache[f"p{i}"] = entry
+
+    if cfg.num_periods:
+        def period_body(carry, period_params):
+            x, aux_acc = carry
+            # pin the residual stream: batch over dp, replicated elsewhere —
+            # keeps the scan's saved carries from being batch-replicated
+            x = constrain(x, "dp", None, None)
+            entries = {}
+            for i, spec in enumerate(cfg.pattern):
+                x, entry, aux = _apply_slot(period_params[f"s{i}"], cfg, spec,
+                                            x, sin, cos, **apply_kw)
+                aux_acc += aux
+                entries[f"s{i}"] = entry
+            outputs = entries if collect_cache else None
+            return (constrain(x, "dp", None, None), aux_acc), outputs
+
+        if remat:
+            ckpt_policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                           if remat_policy == "dots" else None)
+            body = jax.checkpoint(period_body, policy=ckpt_policy)
+        else:
+            body = period_body
+        (x, aux_total), block_cache = jax.lax.scan(
+            body, (x, aux_total), params["blocks"])
+    else:
+        block_cache = None
+
+    if return_hidden:
+        logits = x
+    else:
+        logits = _head(params, cfg, x)
+        if logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+    cache = None
+    if collect_cache:
+        cache = {"prefix": prefix_cache, "blocks": block_cache,
+                 "pos": jnp.asarray(S, jnp.int32)}
+    return logits, aux_total, cache
+
+
+def prefill(params, cfg: ArchConfig, batch, **kw):
+    """Forward returning (last-token logits, cache) — the serving prefill.
+
+    The head is applied to the LAST position only: at 32k×256k-vocab the full
+    [B,S,V] logits would dwarf everything else in the prefill program."""
+    kw.pop("logits_sharding", None)
+    hidden, aux, cache = forward(params, cfg, batch, collect_cache=True,
+                                 return_hidden=True, **kw)
+    logits = _head(params, cfg, hidden[:, -1:, :])
+    return logits[:, 0, :], cache
+
+
+def hidden_forward(params, cfg: ArchConfig, batch, **kw):
+    """Forward WITHOUT the head: returns (hidden [B,S,d], aux_loss).
+
+    Training uses this + ``chunked_softmax_xent`` so the [B,S,V] logits tensor
+    is never materialized (at 4k seq × 100k vocab it would be the largest
+    activation in the program by an order of magnitude)."""
+    kw.pop("logits_sharding", None)
+    hidden, aux, _ = forward(params, cfg, batch, return_hidden=True, **kw)
+    return hidden, aux
+
+
+def chunked_softmax_xent(params, cfg: ArchConfig, hidden, labels, *,
+                         chunk: int = 512, logits_sharding=None):
+    """CE over sequence chunks: head-matmul + logsumexp + gold extraction per
+    chunk, rematerialized in backward.  Peak memory is O(B·chunk·V/shards)
+    instead of O(B·S·V)."""
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xs = hidden.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_body(carry, inp):
+        nll_acc, cnt_acc = carry
+        xc, lc = inp
+        logits = _head(params, cfg, xc)
+        if logits_sharding is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+        mask = (lc >= 0).astype(jnp.float32)
+        lab = jnp.maximum(lc, 0)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        onehot = jax.nn.one_hot(lab, lf.shape[-1], dtype=lf.dtype)
+        gold = jnp.einsum("bcv,bcv->bc", lf, onehot)
+        nll = ((lse - gold) * mask).sum()
+        return (nll_acc + nll, cnt_acc + mask.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        chunk_body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_seq: int,
+               dtype=jnp.float32):
+    """Preallocated decode cache (zeros).  Layout mirrors forward's
+    collect_cache pytree, but attention entries are fixed at max_seq."""
+    def slot_cache(spec):
+        mixer, _ = spec
+        if mixer == "mamba":
+            d_inner, nheads, g, n, conv_ch = mamba_dims(cfg)
+            return {
+                "conv": jnp.zeros((batch_size, cfg.conv_width - 1, conv_ch), dtype),
+                "ssd": jnp.zeros((batch_size, nheads, cfg.ssm_headdim, n),
+                                 jnp.float32),
+            }
+        if cfg.attn_type == "mla":
+            width = cfg.kv_lora_rank + cfg.qk_rope_dim
+            return {"ckv": jnp.zeros((batch_size, max_seq, width), dtype)}
+        return {
+            "k": jnp.zeros((batch_size, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch_size, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+        }
+
+    cache: Dict[str, Any] = {
+        "prefix": {f"p{i}": slot_cache(spec) for i, spec in enumerate(cfg.prefix)},
+        "blocks": None,
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.num_periods:
+        per = {f"s{i}": slot_cache(spec) for i, spec in enumerate(cfg.pattern)}
+        cache["blocks"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_periods,) + a.shape).copy(),
+            per)
+    return cache
+
+
+def _decode_slot(p, cfg: ArchConfig, spec, x, sin, cos, cache_entry, pos):
+    mixer, ffn = spec
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if mixer == "mamba":
+        out, (conv_s, ssd_s) = mamba2_decode(p["mixer"], h, cfg,
+                                             cache_entry["conv"],
+                                             cache_entry["ssd"])
+        new_entry = {"conv": conv_s, "ssd": ssd_s}
+    elif cfg.attn_type == "mla":
+        out, ckv = mla_decode(p["mixer"], h, cfg, sin, cos,
+                              cache_entry["ckv"], pos)
+        new_entry = {"ckv": ckv}
+    else:
+        out, (k_c, v_c) = gqa_decode(p["mixer"], h, cfg, sin, cos,
+                                     cache_entry["k"], cache_entry["v"], pos,
+                                     window=_mixer_window(cfg, mixer))
+        new_entry = {"k": k_c, "v": v_c}
+    if cfg.use_post_norm:
+        out = rmsnorm(p["postnorm1"], out, cfg.norm_eps)
+    x = x + out
+    if ffn != "none":
+        h = rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if ffn == "moe":
+            out, _ = moe_forward(p["ffn"], h, cfg, dispatch="einsum")
+        else:
+            out = mlp(p["ffn"], h, cfg.mlp_type)
+        if cfg.use_post_norm:
+            out = rmsnorm(p["postnorm2"], out, cfg.norm_eps)
+        x = x + out
+    return x, new_entry
+
+
+def decode_step(params, cfg: ArchConfig, cache, batch):
+    """One decode step.  batch: {"tokens": [B, 1]} (+ "positions" [3,B,1] for
+    M-RoPE).  Returns (logits [B, V], new_cache)."""
+    pos = cache["pos"]
+    x = _embed(params, cfg, batch)
+    if cfg.mrope_sections:
+        sin, cos = _rope_tables(cfg, batch, 1)
+    else:
+        positions = pos[None, None].astype(jnp.int32)  # [1,1]
+        dim = cfg.qk_rope_dim if cfg.attn_type == "mla" else cfg.head_dim
+        sin, cos = rope(positions, dim, cfg.rope_theta)
+
+    new_prefix = {}
+    for i, spec in enumerate(cfg.prefix):
+        x, entry = _decode_slot(params["prefix"][f"p{i}"], cfg, spec, x,
+                                sin, cos, cache["prefix"][f"p{i}"], pos)
+        new_prefix[f"p{i}"] = entry
+
+    new_blocks = None
+    if cfg.num_periods:
+        def body(x, inp):
+            period_params, period_cache = inp
+            new_entries = {}
+            for i, spec in enumerate(cfg.pattern):
+                x, entry = _decode_slot(period_params[f"s{i}"], cfg, spec, x,
+                                        sin, cos, period_cache[f"s{i}"], pos)
+                new_entries[f"s{i}"] = entry
+            return x, new_entries
+
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+
+    logits = _head(params, cfg, x)[:, 0, :]
+    new_cache = {"prefix": new_prefix, "blocks": new_blocks, "pos": pos + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """Stable CE.  labels [B,S] int; mask 1.0/0.0 (or labels<0 → masked).
+
+    The gold logit is extracted with a one-hot contraction rather than
+    ``take_along_axis`` — under a vocab-sharded mesh the contraction stays
+    local + one small all-reduce, whereas a gather over the sharded axis
+    forces GSPMD to all-gather the full logits."""
+    if mask is None:
+        mask = (labels >= 0).astype(jnp.float32)
+    labels = jnp.maximum(labels, 0)
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype)
+    gold = jnp.einsum("...v,...v->...", lf, onehot)
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def model_input_dtypes(cfg: ArchConfig):
+    """Which inputs this arch consumes (used by input_specs / data pipeline)."""
+    inputs = {}
+    if cfg.modality == "audio_stub":
+        inputs["features"] = "float32"
+    else:
+        inputs["tokens"] = "int32"
+    if cfg.mrope_sections:
+        inputs["positions"] = "int32"
+    return inputs

@@ -1,0 +1,259 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE — for a
+scan-over-depth program that under-counts flops/bytes by the layer count, so
+we walk the optimized HLO ourselves:
+
+  * computations are parsed into op lists with resolved operand/result shapes;
+  * ``while`` ops carry ``"known_trip_count":{"n":...}`` in backend_config
+    (JAX scans always do) — body & condition totals are scaled by it;
+  * dot flops = 2 · numel(result) · Π contracting-dims(lhs);
+  * bytes = Σ (operand + result bytes) per op at fusion granularity (ops
+    *inside* fused computations are skipped for bytes — the fusion call site
+    already accounts its true HBM traffic — but their dots still count flops);
+  * collective bytes = result bytes per all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute, trip-scaled.
+
+Everything is per-device (the module is the SPMD-partitioned program), so
+roofline terms divide by per-chip peaks directly:
+
+  compute    = flops / PEAK_FLOPS_BF16
+  memory     = bytes / HBM_BW
+  collective = collective_bytes / ICI_LINK_BW
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+from .hw import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+__all__ = ["analyze_hlo", "roofline_terms", "collective_bytes", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s4|s8|s16|s32|s64|u4|u8|u16|u32|u64|c64|c128|f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(r"^\s+(?:ROOT )?%?([\w.\-]+)\s*=\s*(.+)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_ARGS_RE = re.compile(r"\(((?:[^()]|\([^()]*\))*)\)")  # first (...) group
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_list(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+class _Comp:
+    def __init__(self, name):
+        self.name = name
+        self.sym: Dict[str, list] = {}        # op/param name -> result shapes
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+        self.edges: List[Tuple[str, float]] = []  # (callee, multiplier)
+        self.transcendentals = 0.0
+
+
+def _parse(hlo: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for raw in hlo.splitlines():
+        if not raw.strip():
+            continue
+        if not raw[0].isspace():
+            # header params may contain nested tuple types — split the header
+            # at the LAST "->" to isolate "name (params)"
+            m = _COMP_HDR_RE.match(raw.strip())
+            if m and "{" in raw:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if raw.startswith("ENTRY"):
+                    entry = cur.name
+                # parameters: "p.1: f32[2,3], p.2: (s32[], bf16[4])"
+                for pm in re.finditer(
+                        r"([\w.\-]+):\s*(\((?:[^()]|\([^()]*\))*\)|[\w\[\],]+)",
+                        m.group(2)):
+                    cur.sym[pm.group(1)] = _shape_list(pm.group(2))
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(raw)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type = everything before the op token; op token = first
+        # bare word after the type.  Tuple types may contain /*index=N*/
+        # comments, so match balanced parens rather than excluding '='.
+        op_m = re.match(
+            r"((?:\((?:[^()]|\([^()]*\))*\))|(?:[\w\[\],{}\.:]+))\s+([\w\-]+)",
+            rhs)
+        if not op_m:
+            continue
+        result_type, op = op_m.group(1), op_m.group(2)
+        shapes = _shape_list(result_type)
+        cur.sym[name] = shapes
+        out_bytes = _bytes_of(shapes)
+
+        # operand bytes (resolve names; inline types if present)
+        args_m = _ARGS_RE.search(rhs[op_m.end():])
+        arg_bytes = 0
+        max_arg = 0
+        lhs_name = None
+        if args_m:
+            inner = args_m.group(1)
+            inline = _shape_list(inner)
+            names = _OPERAND_RE.findall(inner)
+            if inline:
+                per = [_bytes_of([s]) for s in inline]
+            else:
+                per = [_bytes_of(cur.sym.get(nm, [])) for nm in names]
+            arg_bytes = sum(per)
+            max_arg = max(per) if per else 0
+            if names:
+                lhs_name = names[0]
+
+        # byte accounting: only ops that actually move data.  Loop plumbing
+        # (tuple/GTE re-stating the whole carried scan state every iteration),
+        # views and control ops would inflate traffic by orders of magnitude.
+        skip_comp = (cur.name.startswith("fused_computation")
+                     or cur.name.startswith("wrapped_"))
+        plumbing = op in ("tuple", "get-tuple-element", "parameter", "constant",
+                          "bitcast", "while", "call", "conditional",
+                          "after-all", "iota", "get-dimension-size")
+        if not skip_comp and not plumbing:
+            # scan machinery aliases the big carried array: a DUS touches only
+            # the update slice; a DS reads only the slice it produces
+            if op == "dynamic-update-slice" or "dynamic-update-slice" in name:
+                cur.bytes += max(2 * (arg_bytes - max_arg), 0)
+            elif op == "dynamic-slice" or "dynamic-slice" in name:
+                cur.bytes += 2 * out_bytes
+            else:
+                cur.bytes += out_bytes + arg_bytes
+
+        if op == "dot":
+            cdims = _LHS_CDIMS_RE.search(rhs)
+            contract = 1
+            if cdims and lhs_name:
+                lhs_shapes = cur.sym.get(lhs_name) or (
+                    _shape_list(args_m.group(1))[:1] if args_m else [])
+                if lhs_shapes:
+                    _, lshape = lhs_shapes[0]
+                    for di in cdims.group(1).split(","):
+                        if di and int(di) < len(lshape):
+                            contract *= lshape[int(di)]
+            out_n = sum(_prod(sh[1]) for sh in shapes) if shapes else 0
+            cur.flops += 2.0 * out_n * contract
+        elif op in ("exponential", "tanh", "log", "rsqrt", "power"):
+            cur.transcendentals += _prod(shapes[0][1]) if shapes else 0
+
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                cur.coll[c] += out_bytes
+                break
+
+        if op == "while":
+            wm = _WHILE_RE.search(rhs)
+            tm = _TRIP_RE.search(rhs)
+            trip = float(tm.group(1)) if tm else 1.0
+            if wm:
+                cur.edges.append((wm.group(2), trip))
+                cur.edges.append((wm.group(1), trip))
+        elif op == "fusion":
+            cm = _CALLS_RE.search(rhs)
+            if cm:
+                cur.edges.append((cm.group(1), 1.0))
+        elif op in ("call", "custom-call", "reduce", "reduce-window", "sort",
+                    "scatter", "select-and-scatter", "map", "conditional"):
+            for pat in (_TO_APPLY_RE, _CALLS_RE):
+                cm = pat.search(rhs)
+                if cm:
+                    cur.edges.append((cm.group(1), 1.0))
+    return comps, entry
+
+
+def _prod(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps, entry = _parse(hlo)
+    if entry is None:
+        return {"error": 1.0}
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def total(name: str, depth=0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 64:
+            return {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+                    **{c: 0.0 for c in _COLLECTIVES}}
+        memo[name] = {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+                      **{c: 0.0 for c in _COLLECTIVES}}  # cycle guard
+        acc = {"flops": comp.flops, "bytes": comp.bytes,
+               "transcendentals": comp.transcendentals,
+               **{c: comp.coll[c] for c in _COLLECTIVES}}
+        for callee, mult in comp.edges:
+            sub = total(callee, depth + 1)
+            for k in acc:
+                acc[k] += mult * sub[k]
+        memo[name] = acc
+        return acc
+
+    result = total(entry)
+    result["collective_bytes"] = sum(result[c] for c in _COLLECTIVES)
+    return result
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Back-compat helper: per-kind collective bytes, trip-scaled."""
+    r = analyze_hlo(hlo_text)
+    return {k: r.get(k, 0.0) for k in _COLLECTIVES}
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float) -> Dict[str, float]:
+    t_compute = flops_per_device / PEAK_FLOPS_BF16
+    t_memory = bytes_per_device / HBM_BW
+    t_coll = coll_bytes_per_device / ICI_LINK_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+        key=lambda kv: kv[1])[0]
+    total = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": total,
+        "roofline_fraction": t_compute / total if total > 0 else 0.0,
+    }

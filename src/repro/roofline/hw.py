@@ -1,0 +1,11 @@
+"""TPU v5e hardware constants (the assignment's target machine)."""
+
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_LINK_BW = 50e9           # bytes/s per ICI link (per direction, approx.)
+
+HBM_BYTES = 16 * 2**30       # 16 GiB HBM per v5e chip
+
+# mesh sizes
+SINGLE_POD_CHIPS = 256       # 16 x 16
+MULTI_POD_CHIPS = 512        # 2 x 16 x 16

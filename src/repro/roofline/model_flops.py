@@ -1,0 +1,81 @@
+"""Analytic MODEL_FLOPS per (arch × shape): the "useful" compute.
+
+Convention (recorded in EXPERIMENTS.md):
+  * parameter-matmul term: 2·N_active per token (forward), ×3 for training
+    (fwd+bwd), embedding lookups excluded;
+  * attention term: 2 matmuls (QK^T, PV) = 4·S_kv·H·Dh per query token per
+    attention layer, halved for causal masking in full-sequence passes;
+  * SSD term: intra-chunk matmuls ≈ attention over chunk length + state
+    updates (small; included via the chunked formula).
+
+The ratio MODEL_FLOPS / HLO_FLOPs then exposes remat recompute, dispatch
+overheads and padding waste in the compiled program.
+"""
+from __future__ import annotations
+
+from ..configs.base import ArchConfig
+from ..configs.shapes import ShapeSpec
+
+__all__ = ["model_flops"]
+
+
+def _attn_layer_flops(cfg: ArchConfig, s_q: int, s_kv: int, causal_half: bool):
+    if cfg.attn_type == "mla":
+        dh = cfg.qk_nope_dim + cfg.qk_rope_dim
+        dv = cfg.v_head_dim
+    else:
+        dh = dv = cfg.head_dim
+    f = 2.0 * s_q * s_kv * cfg.num_heads * (dh + dv)
+    return f * (0.5 if causal_half else 1.0)
+
+
+def _layer_counts(cfg: ArchConfig):
+    specs = list(cfg.prefix) + list(cfg.pattern) * cfg.num_periods
+    n_attn_g = sum(1 for m, _ in specs if m == "attn:global")
+    n_attn_l = sum(1 for m, _ in specs if m == "attn:local")
+    n_mamba = sum(1 for m, _ in specs if m == "mamba")
+    return n_attn_g, n_attn_l, n_mamba
+
+
+def _ssd_layer_flops(cfg: ArchConfig, s: int, chunk: int = 128):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_headdim
+    n = cfg.ssm_state
+    c = min(chunk, s)
+    # intra: G matmul (c×c×n per head-group) + y_intra (c×c×p); inter: state ops
+    per_chunk = 2 * c * c * cfg.ssm_groups * n + 2 * c * c * h * cfg.ssm_headdim \
+        + 2 * c * h * cfg.ssm_headdim * n * 2
+    return (s // c) * per_chunk if c else 0.0
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    n_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    n_g, n_l, n_m = _layer_counts(cfg)
+
+    if shape.kind == "train":
+        tokens = B * S
+        param_f = 6.0 * n_active * tokens
+        attn_f = 3.0 * B * (
+            n_g * _attn_layer_flops(cfg, S, S, causal_half=cfg.causal)
+            + n_l * _attn_layer_flops(cfg, S, min(S, cfg.sliding_window or S),
+                                      causal_half=False)
+            + n_m * _ssd_layer_flops(cfg, S))
+        return param_f + attn_f
+    if shape.kind == "prefill":
+        tokens = B * S
+        param_f = 2.0 * n_active * tokens
+        attn_f = B * (
+            n_g * _attn_layer_flops(cfg, S, S, causal_half=cfg.causal)
+            + n_l * _attn_layer_flops(cfg, S, min(S, cfg.sliding_window or S),
+                                      causal_half=False)
+            + n_m * _ssd_layer_flops(cfg, S))
+        return param_f + attn_f
+    # decode: one token against seq_len of context
+    param_f = 2.0 * n_active * B
+    attn_f = B * (
+        n_g * _attn_layer_flops(cfg, 1, S, causal_half=False)
+        + n_l * _attn_layer_flops(cfg, 1, min(S, cfg.sliding_window or S),
+                                  causal_half=False)
+        + n_m * _ssd_layer_flops(cfg, 1, chunk=1))
+    return param_f + attn_f

@@ -1,0 +1,101 @@
+"""Build the EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .hw import HBM_BYTES
+
+_MOVE_HINT = {
+    "compute": "more MXU-efficient matmul shapes / less remat recompute",
+    "memory": "fuse/bf16-ify the biggest intermediates; raise arithmetic "
+              "intensity (larger microbatch, wider tiles)",
+    "collective": "re-shard to cut the dominant collective (all-gather of "
+                  "FSDP params or MoE all-to-all); overlap with compute",
+}
+
+
+def load(dir_: str, mesh: str):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        rows.append(json.loads(open(f).read()))
+    return rows
+
+
+def dryrun_table(dir_: str) -> str:
+    out = ["| arch | shape | mesh | status | lower s | compile s | args GiB | temp GiB | HLO MB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for mesh in ("single", "multi"):
+        for r in load(dir_, mesh):
+            if r["status"] == "skipped":
+                out.append(f"| {r['arch']} | {r['shape']} | {mesh} | SKIP ({r['reason'][:40]}…) | | | | | |")
+                continue
+            ma = r.get("memory_analysis", {})
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | {r['status']} "
+                f"| {r.get('lower_s', '')} | {r.get('compile_s', '')} "
+                f"| {ma.get('argument_size_in_bytes', 0) / 2**30:.2f} "
+                f"| {ma.get('temp_size_in_bytes', 0) / 2**30:.2f} "
+                f"| {r.get('hlo_text_bytes', 0) / 1e6:.0f} |")
+    return "\n".join(out)
+
+
+def roofline_table(dir_: str) -> str:
+    out = ["| arch | shape | t_compute s | t_memory s | t_coll s | dominant | "
+           "roofline frac | MODEL_FLOPS/dev | useful ratio | lever |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(dir_, "single"):
+        if r["status"] != "ok":
+            continue
+        rl = r.get("roofline", {})
+        dom = rl.get("dominant", "?")
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {rl.get('t_compute_s', 0):.4f} | {rl.get('t_memory_s', 0):.4f} "
+            f"| {rl.get('t_collective_s', 0):.4f} | {dom} "
+            f"| {rl.get('roofline_fraction', 0):.3f} "
+            f"| {r.get('model_flops_per_device', 0):.2e} "
+            f"| {r.get('useful_flops_ratio') or 0:.2f} "
+            f"| {_MOVE_HINT.get(dom, '')} |")
+    return "\n".join(out)
+
+
+def hbm_check(dir_: str) -> str:
+    out = ["| arch | shape | mesh | args+temp GiB | fits 16 GiB HBM |",
+           "|---|---|---|---|---|"]
+    for mesh in ("single", "multi"):
+        for r in load(dir_, mesh):
+            if r["status"] != "ok":
+                continue
+            ma = r.get("memory_analysis", {})
+            tot = (ma.get("argument_size_in_bytes", 0)
+                   + ma.get("temp_size_in_bytes", 0)) / 2**30
+            fits = "yes" if tot * 2**30 <= HBM_BYTES else "**no**"
+            out.append(f"| {r['arch']} | {r['shape']} | {mesh} | {tot:.2f} | {fits} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "hbm"])
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run\n")
+        print(dryrun_table(args.dir))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline (single-pod 16×16)\n")
+        print(roofline_table(args.dir))
+    if args.section in ("all", "hbm"):
+        print("\n### HBM budget\n")
+        print(hbm_check(args.dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Serving: prefill/decode step factories + a continuous-batching scheduler.
+
+The scheduler orders admitted requests with the relational core's tensor sort
+(multi-key: priority, arrival) — the paper's execution path applied to the
+serving control plane — and drives the jitted decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core import Relation, tensor_sort
+from ..models import decode_step, init_cache, prefill
+
+__all__ = ["make_prefill_step", "make_decode_step", "Request", "BatchScheduler",
+           "generate"]
+
+
+def make_prefill_step(cfg: ArchConfig, **fw_kw) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, **fw_kw)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    def step(params, cache, batch):
+        return decode_step(params, cfg, cache, batch)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [S] token ids
+    max_new_tokens: int
+    priority: int = 0
+    arrived_s: float = dataclasses.field(default_factory=time.monotonic)
+    output: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class BatchScheduler:
+    """Admits up to ``batch_size`` requests; orders the admission queue via the
+    tensor execution path (multi-key sort: priority desc, arrival asc)."""
+
+    def __init__(self, batch_size: int):
+        self.batch_size = batch_size
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self, free_slots: int) -> List[Request]:
+        if not self.queue or free_slots <= 0:
+            return []
+        rel = Relation({
+            "neg_priority": np.asarray([-r.priority for r in self.queue], np.int64),
+            "arrival_us": np.asarray([int(r.arrived_s * 1e6) for r in self.queue], np.int64),
+            "idx": np.arange(len(self.queue), dtype=np.int64),
+        })
+        ordered, _ = tensor_sort(rel, ["neg_priority", "arrival_us"])
+        take = [self.queue[i] for i in ordered["idx"][:free_slots]]
+        taken_ids = {r.rid for r in take}
+        self.queue = [r for r in self.queue if r.rid not in taken_ids]
+        return take
+
+
+def generate(params, cfg: ArchConfig, prompts: np.ndarray, max_new_tokens: int,
+             *, greedy: bool = True, cache_len: Optional[int] = None):
+    """Batched greedy generation on CPU (example/e2e-test scale)."""
+    B, S = prompts.shape
+    total = S + max_new_tokens
+    cache_len = cache_len or total
+    cache = init_cache(cfg, B, cache_len)
+    step = jax.jit(lambda p, c, b: decode_step(p, cfg, c, b))
+    tokens = jnp.asarray(prompts, jnp.int32)
+    out = []
+    last = None
+    for t in range(total - 1):
+        if t < S:
+            tok = tokens[:, t:t + 1]
+        else:
+            tok = last
+            out.append(np.asarray(tok)[:, 0])
+        logits, cache = step(params, cache, {"tokens": tok})
+        last = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out.append(np.asarray(last)[:, 0])
+    return np.stack(out, axis=1)  # [B, max_new_tokens]

@@ -1,0 +1,59 @@
+"""Int8 KV-cache quantization (2× decode cache capacity / context length).
+
+Per-(position, head) symmetric scales keep the quantization error local: a
+token with outlier keys cannot degrade other positions.  At 32k context the
+bf16 KV cache is the dominant decode working set (yi-34b decode_32k:
+~1 TB global); int8 halves it — or equivalently doubles servable batch or
+context at the same HBM.
+
+Decode integration: quantize entries as they are appended; dequantize the
+whole (sharded) cache at attention time — on TPU this is a VPU-cheap cast
+fused into the QK^T producer.  Accuracy is validated against bf16 attention
+in tests (cosine > 0.999 at 4k context).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["QuantizedKV", "quantize_kv", "dequantize_kv", "append_quantized",
+           "decode_attention_quantized"]
+
+
+class QuantizedKV(NamedTuple):
+    q: jnp.ndarray       # int8 [B, S, KH, D]
+    scale: jnp.ndarray   # f32  [B, S, KH] per-(position, head)
+
+
+def quantize_kv(x: jnp.ndarray) -> QuantizedKV:
+    """x [B, S, KH, D] → int8 + per-(pos, head) scale."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return QuantizedKV(q, scale)
+
+
+def dequantize_kv(qkv: QuantizedKV, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (qkv.q.astype(jnp.float32) * qkv.scale[..., None]).astype(dtype)
+
+
+def append_quantized(cache: QuantizedKV, new: jnp.ndarray,
+                     pos: jnp.ndarray) -> QuantizedKV:
+    """Write one new [B, 1, KH, D] entry at position pos (in-place DUS)."""
+    entry = quantize_kv(new)
+    zero = jnp.zeros((), jnp.int32)
+    p = jnp.asarray(pos, jnp.int32)
+    q = jax.lax.dynamic_update_slice(cache.q, entry.q, (zero, p, zero, zero))
+    s = jax.lax.dynamic_update_slice(cache.scale, entry.scale, (zero, p, zero))
+    return QuantizedKV(q, s)
+
+
+def decode_attention_quantized(q, k_cache: QuantizedKV, v_cache: QuantizedKV,
+                               cur_pos, **kw):
+    """decode_attention against int8 caches (dequantize at use)."""
+    from ..models.attention import decode_attention
+    return decode_attention(q, dequantize_kv(k_cache, q.dtype),
+                            dequantize_kv(v_cache, q.dtype), cur_pos, **kw)

@@ -1,0 +1,57 @@
+"""Gradient compression for cross-pod all-reduce: int8 + error feedback.
+
+At multi-pod scale the gradient all-reduce crosses the slow inter-pod links;
+8-bit quantization cuts that traffic 4× (bf16) / 2× (int8 vs bf16).  Error
+feedback keeps the quantization bias from accumulating: the residual of each
+step is added back before the next quantization (Seide et al. / EF-SGD).
+
+``compress_tree``/``decompress_tree`` are pure and jit-able; the trainer
+applies them around the (implicit, GSPMD-inserted) gradient reduction when
+``TrainPolicy.compress_grads`` is set — on the dry-run mesh this materializes
+as int8 collectives in the HLO, which the roofline parser then prices.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_tree",
+           "decompress_tree", "init_error_state", "apply_error_feedback"]
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any) -> Any:
+    return jax.tree.map(lambda g: quantize_int8(g), grads)
+
+
+def decompress_tree(cgrads: Any) -> Any:
+    return jax.tree.map(lambda qs: dequantize_int8(*qs), cgrads,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def apply_error_feedback(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Returns (quantized-and-restored grads, new error residuals)."""
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error)
+    restored = jax.tree.map(
+        lambda c: dequantize_int8(*quantize_int8(c)), corrected)
+    new_error = jax.tree.map(lambda c, r: c - r, corrected, restored)
+    return restored, new_error

@@ -1,0 +1,133 @@
+"""Optimizers: AdamW and Adafactor, built for sharded execution.
+
+State layout mirrors the parameter pytree, so parameter PartitionSpecs apply
+verbatim (ZeRO-style: since every large parameter is already 2-D sharded over
+("data","model"), the optimizer state inherits the same full sharding — the
+v5e HBM budget math in DESIGN.md §6 depends on this).  Adafactor keeps
+factored second moments (row/col vectors, replicated — they are tiny) which
+is what makes the 398B Jamba config fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "make_optimizer", "global_norm"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (new_params, new_state, metrics)
+    name: str
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = _clip_by_global_norm(grads, clip_norm) if clip_norm else (
+            jax.tree.map(lambda g: g.astype(jnp.float32), grads), global_norm(grads))
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        is_tup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t3: t3[0], out, is_leaf=is_tup)
+        new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=is_tup)
+        new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=is_tup)
+        return new_params, {"step": step, "m": new_m, "v": new_v}, {"grad_norm": gnorm}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_norm: Optional[float] = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second moments for >=2-D leaves; no first moment."""
+
+    def init(params):
+        def state_for(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),   # reduce cols
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(state_for, params)}
+
+    def update(grads, state, params):
+        grads, gnorm = _clip_by_global_norm(grads, clip_norm) if clip_norm else (
+            jax.tree.map(lambda g: g.astype(jnp.float32), grads), global_norm(grads))
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta * s["v"] + (1 - beta) * g2
+                new_s = {"v": vhat}
+            u = g / jnp.sqrt(vhat + eps)
+            # Adafactor update clipping (RMS of update <= 1)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms)
+            newp = p.astype(jnp.float32) - lr * u
+            if weight_decay:
+                newp -= lr * weight_decay * p.astype(jnp.float32)
+            return newp.astype(p.dtype), new_s
+
+        out = jax.tree.map(upd, params, grads, state["v"])
+        is_tup = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda t2: t2[0], out, is_leaf=is_tup)
+        new_v = jax.tree.map(lambda t2: t2[1], out, is_leaf=is_tup)
+        return new_params, {"step": step, "v": new_v}, {"grad_norm": gnorm}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,111 @@
+"""Train-step factory: loss, grad accumulation, remat, optimizer application.
+
+``make_train_step`` builds the jit-able pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` that the
+launcher lowers under the production mesh.  Microbatch gradient accumulation
+is a ``lax.scan`` over a reshaped batch (keeps activation memory at
+1/microbatches); remat wraps each scanned period (transformer.forward).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import cross_entropy_loss, forward
+from ..models.transformer import chunked_softmax_xent, hidden_forward
+from .optimizer import Optimizer
+
+__all__ = ["TrainPolicy", "make_train_step", "make_eval_step", "default_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPolicy:
+    optimizer: str = "adamw"
+    microbatches: int = 1
+    remat: bool = True
+    moe_dispatch: str = "auto"
+    moe_budget_bytes: int = 2 << 30
+    moe_token_chunk: int = 32_768
+    remat_policy: str = "full"   # full (recompute all) | dots (save matmul outs)
+    grad_accum_dtype: Any = jnp.float32
+    logits_sharding: Any = None   # NamedSharding: keep [B,S,V] vocab-sharded
+
+
+def default_policy(cfg: ArchConfig) -> TrainPolicy:
+    """Per-arch training policy (DESIGN.md §6): Adafactor + bf16-native grads
+    for the 398B hybrid so optimizer state fits v5e HBM; AdamW elsewhere."""
+    if cfg.param_count() > 100e9:
+        return TrainPolicy(optimizer="adafactor", microbatches=1,
+                           grad_accum_dtype=jnp.bfloat16)
+    return TrainPolicy(optimizer="adamw", microbatches=1)
+
+
+def _loss_for_batch(params, cfg: ArchConfig, mb, policy: TrainPolicy):
+    # head + CE fused per sequence chunk: full [B,S,V] logits never exist
+    hidden, aux = hidden_forward(
+        params, cfg, mb, remat=policy.remat, remat_policy=policy.remat_policy,
+        moe_dispatch=policy.moe_dispatch, moe_budget=policy.moe_budget_bytes,
+        moe_token_chunk=policy.moe_token_chunk)
+    loss = chunked_softmax_xent(params, cfg, hidden, mb["labels"],
+                                logits_sharding=policy.logits_sharding)
+    return loss + aux
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    policy: Optional[TrainPolicy] = None) -> Callable:
+    policy = policy or default_policy(cfg)
+    n_mb = policy.microbatches
+
+    def train_step(params, opt_state, batch):
+        if n_mb == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: _loss_for_batch(p, cfg, batch, policy))(params)
+        else:
+            # microbatch m = strided rows {r·n_mb + m}: keeps the ROW axis on
+            # the data shards and the scanned mb axis local to every device
+            # (the naive (n_mb, B/n_mb) reshape puts whole microbatches on
+            # single devices → sequential execution)
+            def split(x):
+                return x.reshape((x.shape[0] // n_mb, n_mb) + x.shape[1:]).swapaxes(0, 1)
+            def split_positions(x):  # [3, B, S] → [n_mb, 3, B/n_mb, S]
+                return x.reshape((3, x.shape[1] // n_mb, n_mb) + x.shape[2:]
+                                 ).transpose(2, 0, 1, 3)
+            mbs = {k: (split_positions(v) if k == "positions" else split(v))
+                   for k, v in batch.items()}
+
+            def accum(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(
+                    lambda p: _loss_for_batch(p, cfg, mb, policy))(params)
+                grads_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(policy.grad_accum_dtype),
+                    grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, policy.grad_accum_dtype), params)
+            (loss_sum, grads_sum), _ = jax.lax.scan(
+                accum, (jnp.zeros((), jnp.float32), zeros), mbs)
+            loss = loss_sum / n_mb
+            grads = jax.tree.map(lambda g: g / n_mb, grads_sum)
+
+        new_params, new_opt, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, **opt_metrics}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, policy: Optional[TrainPolicy] = None) -> Callable:
+    policy = policy or default_policy(cfg)
+
+    def eval_step(params, batch):
+        logits, aux, _ = forward(params, cfg, batch,
+                                 moe_dispatch=policy.moe_dispatch)
+        return cross_entropy_loss(logits, batch["labels"]) + aux
+
+    return eval_step

@@ -1,0 +1,84 @@
+"""chunked_attention / decode_attention vs. a naive dense-softmax oracle."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import chunked_attention, decode_attention
+
+
+def naive_attention(q, k, v, *, causal=True, q_offset=0, window=None,
+                    cap=None, scale=None):
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale or 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if cap is not None:
+        s = jnp.tanh(s / cap) * cap
+    pos_q = q_offset + jnp.arange(Sq)
+    pos_k = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= pos_q[:, None] >= pos_k[None, :]
+    if window is not None:
+        mask &= (pos_q[:, None] - pos_k[None, :]) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+
+
+@pytest.mark.parametrize("B,S,H,KH,D", [
+    (2, 64, 4, 4, 16),    # MHA
+    (1, 128, 8, 2, 32),   # GQA
+    (2, 64, 4, 1, 16),    # MQA
+])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None),
+    (True, 16, None),       # sliding window
+    (True, None, 50.0),     # softcap
+    (False, None, None),    # encoder
+])
+def test_chunked_matches_naive(B, S, H, KH, D, causal, window, cap):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, D), jnp.float32)
+    ref = naive_attention(q, k, v, causal=causal, window=window, cap=cap)
+    for q_chunk, kv_chunk in [(16, 32), (64, 16), (S, S)]:
+        out = chunked_attention(q, k, v, causal=causal, window=window, cap=cap,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_naive_last_row():
+    B, S, H, KH, D = 2, 48, 8, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q_all = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, D), jnp.float32)
+    ref = naive_attention(q_all, k, v, causal=True)
+    cur = S - 1
+    out = decode_attention(q_all[:, cur:cur + 1], k, v, jnp.asarray(cur))
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref[:, cur]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_masks_future_cache():
+    """Garbage beyond cur_pos in the cache must not leak into the output."""
+    B, S, H, KH, D = 1, 32, 4, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KH, D), jnp.float32)
+    cur = 10
+    out1 = decode_attention(q, k, v, jnp.asarray(cur))
+    k2 = k.at[:, cur + 1:].set(1e6)
+    v2 = v.at[:, cur + 1:].set(-1e6)
+    out2 = decode_attention(q, k2, v2, jnp.asarray(cur))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))

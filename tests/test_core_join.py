@@ -1,0 +1,122 @@
+"""Join correctness: linear (in-memory + spilling) vs tensor path.
+
+The paper's invariant (§III.C): "execution-time selection does not change the
+semantic result of the operation" — both paths must produce identical result
+sets on identical inputs, under any work_mem.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    HashTable,
+    Relation,
+    hash_join_linear,
+    join_capacity,
+    tensor_join,
+    tensor_join_aggregate,
+)
+
+
+def _mk(rng, n_build, n_probe, key_domain):
+    build = Relation({
+        "k": rng.integers(0, key_domain, n_build).astype(np.int64),
+        "v": rng.integers(0, 1 << 30, n_build).astype(np.int64),
+    })
+    probe = Relation({
+        "k": rng.integers(0, key_domain, n_probe).astype(np.int64),
+        "w": rng.integers(0, 1 << 30, n_probe).astype(np.int64),
+    })
+    return build, probe
+
+
+@pytest.mark.parametrize("work_mem", [1 << 30, 256 * 1024, 32 * 1024])
+@pytest.mark.parametrize("n_build,n_probe,domain", [
+    (1000, 3000, 5000),      # mostly unique build keys
+    (5000, 5000, 50),        # heavy duplicates
+    (1, 10, 1),              # degenerate
+    (4096, 0, 100),          # empty probe
+])
+def test_join_paths_agree(work_mem, n_build, n_probe, domain):
+    rng = np.random.default_rng(42)
+    build, probe = _mk(rng, n_build, n_probe, domain)
+    lin, m_lin = hash_join_linear(build, probe, "k", work_mem)
+    ten, m_ten = tensor_join(build, probe, "k")
+    assert lin.sort_canonical().equals(ten.sort_canonical())
+    assert m_ten.spill.temp_bytes == 0  # tensor path has no spill regime
+    if work_mem == 1 << 30:
+        assert m_lin.spill.temp_bytes == 0
+
+
+def test_unique_key_join_uses_hash_table():
+    rng = np.random.default_rng(0)
+    n = 4096
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": np.arange(n, dtype=np.int64)})
+    probe = Relation({"k": rng.integers(0, n, 2 * n).astype(np.int64),
+                      "w": np.arange(2 * n, dtype=np.int64)})
+    out, _ = hash_join_linear(build, probe, "k", 1 << 30)
+    # PK-FK: every probe row matches exactly once
+    assert len(out) == 2 * n
+    assert np.array_equal(np.sort(out["w"]), np.arange(2 * n))
+    # payloads correctly paired
+    kv = dict(zip(build["k"].tolist(), build["v"].tolist()))
+    assert all(kv[k] == v for k, v in zip(out["k"][:100], out["b_v"][:100]))
+
+
+def test_hash_table_duplicate_detection():
+    keys = np.array([1, 2, 3, 2], dtype=np.int64)
+    with pytest.raises(HashTable.DuplicateKeys):
+        HashTable(keys)
+
+
+def test_hash_table_probe_miss():
+    keys = np.arange(100, dtype=np.int64)
+    tab = HashTable(keys)
+    res = tab.probe(np.array([5, 500, 99, -1], dtype=np.int64))
+    assert res[0] == 5 and res[2] == 99
+    assert res[1] == -1 and res[3] == -1
+
+
+def test_join_capacity_exact():
+    rng = np.random.default_rng(1)
+    build, probe = _mk(rng, 2000, 3000, 40)
+    cap = join_capacity(build["k"], probe["k"])
+    out, _ = hash_join_linear(build, probe, "k", 1 << 30)
+    assert cap == len(out)
+
+
+def test_tensor_join_capacity_overflow_detected():
+    build = Relation({"k": np.zeros(100, np.int64), "v": np.arange(100, dtype=np.int64)})
+    probe = Relation({"k": np.zeros(100, np.int64), "w": np.arange(100, dtype=np.int64)})
+    with pytest.raises(ValueError, match="capacity"):
+        tensor_join(build, probe, "k", capacity=16)
+
+
+def test_join_aggregate_matches_materialized():
+    rng = np.random.default_rng(7)
+    build, probe = _mk(rng, 3000, 4000, 64)
+    mat, _ = hash_join_linear(build, probe, "k", 1 << 30)
+    agg, m = tensor_join_aggregate(build, probe, "k", "v", "w", key_domain=64)
+    assert int(agg["count"]) == len(mat)
+    bv = mat["b_v"].astype(np.float64)
+    w = mat["w"].astype(np.float64)
+    np.testing.assert_allclose(agg["sum_add"], (bv + w).sum(), rtol=1e-6)
+    np.testing.assert_allclose(agg["sum_prod"], (bv * w).sum(), rtol=1e-6)
+    assert m.spill.temp_bytes == 0  # fused aggregate never materializes the join
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_build=st.integers(1, 400),
+    n_probe=st.integers(0, 400),
+    domain=st.integers(1, 60),
+    work_mem=st.sampled_from([8 * 1024, 1 << 30]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_join_paths_agree(n_build, n_probe, domain, work_mem, seed):
+    rng = np.random.default_rng(seed)
+    build, probe = _mk(rng, n_build, n_probe, domain)
+    lin, _ = hash_join_linear(build, probe, "k", work_mem)
+    ten, _ = tensor_join(build, probe, "k")
+    assert lin.sort_canonical().equals(ten.sort_canonical())

@@ -1,0 +1,86 @@
+"""Sort correctness: linear (in-memory + external) vs tensor multi-key path."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Relation, sort_linear, tensor_sort
+
+
+def _lex_ok(rel: Relation, keys) -> bool:
+    cols = [rel[k] for k in keys]
+    n = len(rel)
+    if n < 2:
+        return True
+    le = np.zeros(n - 1, dtype=bool)
+    undecided = np.ones(n - 1, dtype=bool)
+    for c in cols:
+        lt = c[:-1] < c[1:]
+        gt = c[:-1] > c[1:]
+        le |= undecided & lt
+        undecided &= ~(lt | gt)
+    return bool(np.all(le | undecided))
+
+
+def _mk(rng, n, domains):
+    cols = {f"k{i}": rng.integers(0, d, n).astype(np.int64) for i, d in enumerate(domains)}
+    cols["payload"] = rng.integers(0, 1 << 40, n).astype(np.int64)
+    return Relation(cols)
+
+
+@pytest.mark.parametrize("work_mem", [1 << 30, 64 * 1024, 16 * 1024])
+@pytest.mark.parametrize("domains", [(1000,), (40, 1 << 35), (8, 8, 8)])
+def test_sort_paths_agree(work_mem, domains):
+    rng = np.random.default_rng(3)
+    rel = _mk(rng, 20_000, domains)
+    keys = [f"k{i}" for i in range(len(domains))]
+    lin, m_lin = sort_linear(rel, keys, work_mem)
+    ten, m_ten = tensor_sort(rel, keys)
+    assert _lex_ok(lin, keys)
+    assert _lex_ok(ten, keys)
+    assert lin.sort_canonical().equals(ten.sort_canonical())
+    assert m_ten.spill.temp_bytes == 0
+    if work_mem >= rel.nbytes():
+        assert m_lin.spill.temp_bytes == 0
+    else:
+        assert m_lin.spill.temp_bytes > 0  # external sort really spilled
+
+
+def test_external_sort_multi_pass():
+    """Tiny work_mem forces multiple merge passes (spill amplification)."""
+    rng = np.random.default_rng(5)
+    rel = _mk(rng, 60_000, (100, 1 << 30))
+    _, m_small = sort_linear(rel, ["k0", "k1"], 16 * 1024)
+    _, m_large = sort_linear(rel, ["k0", "k1"], 512 * 1024)
+    assert m_small.spill.partition_passes > m_large.spill.partition_passes
+    assert m_small.spill.bytes_written > m_large.spill.bytes_written
+
+
+def test_sort_stability_on_payload_order():
+    """Tensor sort's stable LSD passes preserve input order for equal keys."""
+    n = 1000
+    rel = Relation({
+        "k0": np.zeros(n, dtype=np.int64),
+        "payload": np.arange(n, dtype=np.int64),
+    })
+    out, _ = tensor_sort(rel, ["k0"])
+    assert np.array_equal(out["payload"], np.arange(n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(0, 500),
+    nkeys=st.integers(1, 3),
+    domain=st.integers(1, 30),
+    work_mem=st.sampled_from([4 * 1024, 1 << 30]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_sort_paths_agree(n, nkeys, domain, work_mem, seed):
+    if n == 0:
+        return
+    rng = np.random.default_rng(seed)
+    rel = _mk(rng, n, tuple([domain] * nkeys))
+    keys = [f"k{i}" for i in range(nkeys)]
+    lin, _ = sort_linear(rel, keys, work_mem)
+    ten, _ = tensor_sort(rel, keys)
+    assert _lex_ok(lin, keys) and _lex_ok(ten, keys)
+    assert lin.sort_canonical().equals(ten.sort_canonical())

@@ -1,0 +1,60 @@
+"""Data pipeline: relational preprocessing through the dual-path engine."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataPipeline, PipelineConfig, batches, prepare_order
+from repro.data.synthetic import synth_corpus
+
+
+def test_corpus_has_duplicates():
+    docs = synth_corpus(5000, 1000)
+    assert len(np.unique(docs["content_hash"])) < len(docs)
+
+
+@pytest.mark.parametrize("policy", ["linear", "tensor", "auto"])
+def test_prepare_order_policies_agree(policy):
+    cfg = PipelineConfig(num_docs=3000, policy=policy, work_mem=64 * 1024)
+    rel, metrics, decisions = prepare_order(cfg)
+    # dedup: content hashes unique afterwards
+    assert len(np.unique(rel["content_hash"])) == len(rel)
+    # quality filter applied
+    assert rel["quality"].min() >= cfg.min_quality
+    # multi-key order: (domain, bucket, length) lexicographic
+    d, b, l = rel["domain"], rel["bucket"], rel["length"]
+    key = (d.astype(object) * 10**12 + b * 10**6 + l)
+    assert np.all(key[:-1] <= key[1:])
+
+
+def test_policies_produce_identical_order():
+    rels = {}
+    for policy in ("linear", "tensor"):
+        cfg = PipelineConfig(num_docs=3000, policy=policy, work_mem=64 * 1024)
+        rel, _, _ = prepare_order(cfg)
+        rels[policy] = rel
+    assert rels["linear"].sort_canonical().equals(rels["tensor"].sort_canonical())
+
+
+def test_batches_shape_and_determinism():
+    cfg = PipelineConfig(num_docs=2000, seq_len=64, batch_size=4)
+    b1 = list(batches(cfg))
+    b2 = list(batches(cfg))
+    assert len(b1) > 2
+    assert b1[0]["tokens"].shape == (4, 64)
+    assert b1[0]["labels"].shape == (4, 64)
+    np.testing.assert_array_equal(b1[1]["tokens"], b2[1]["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1[0]["tokens"][:, 1:], b1[0]["labels"][:, :-1])
+
+
+def test_pipeline_resume_deterministic():
+    cfg = PipelineConfig(num_docs=2000, seq_len=64, batch_size=4)
+    p1 = DataPipeline(cfg)
+    it = iter(p1)
+    consumed = [next(it) for _ in range(3)]
+    state = p1.state()
+    # fresh pipeline restored from state yields the SAME next batch
+    p2 = DataPipeline(cfg)
+    p2.restore(state)
+    nxt_resumed = next(iter(p2))
+    nxt_original = next(it)
+    np.testing.assert_array_equal(nxt_resumed["tokens"], nxt_original["tokens"])

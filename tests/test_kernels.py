@@ -1,0 +1,136 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, with
+shape/dtype sweeps (assignment requirement: per kernel, sweep shapes/dtypes
+and assert_allclose against the ref.py oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.moe_dispatch.ops import combine, dispatch, moe_dispatch_pallas
+from repro.kernels.moe_dispatch.ref import combine_ref, dispatch_ref
+from repro.kernels.multikey_sort.ops import multikey_sort_lsd, tile_sort
+from repro.kernels.multikey_sort.ref import tile_sort_ref
+from repro.kernels.segment_join.ops import join_aggregate_kernel, segment_sum
+from repro.kernels.segment_join.ref import segment_sum_ref
+
+
+# ---------------------------------------------------------------------------
+# moe_dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,d,E,C", [
+    (256, 128, 4, 64),
+    (512, 256, 8, 128),
+    (1024, 128, 16, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_dispatch_sweep(T, d, E, C, dtype):
+    rng = np.random.default_rng(T + E)
+    x = jnp.asarray(rng.normal(size=(T, d)), dtype)
+    eidx = jnp.asarray(rng.integers(0, E, T), jnp.int32)
+    slot = jnp.asarray(rng.integers(0, C + C // 4, T), jnp.int32)  # overflow mix
+    w = jnp.asarray(rng.random(T), jnp.float32)
+    buf = dispatch(x, eidx, slot, E, C, interpret=True)
+    buf_r = dispatch_ref(x, eidx, slot, E, C)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(buf, np.float32),
+                               np.asarray(buf_r, np.float32), rtol=tol, atol=tol)
+    y = combine(buf_r, eidx, slot, w, interpret=True)
+    y_r = combine_ref(buf_r, eidx, slot, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_r, np.float32), rtol=tol, atol=tol)
+
+
+def test_moe_dispatch_matches_model_einsum_path():
+    """The kernel path reproduces the model's einsum dispatch end to end."""
+    from repro.configs import get_smoke_config
+    from repro.models.moe import (_dispatch_einsum, _expert_ffn, _route,
+                                  capacity_per_expert, init_moe)
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    T = 128
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, cfg.d_model), jnp.float32)
+    topk_idx, topk_w, _ = _route(params, x, cfg)
+    cap = capacity_per_expert(T, cfg.num_experts, cfg.experts_per_token,
+                              cfg.capacity_factor)
+    y_einsum = _dispatch_einsum(params, x, topk_idx, topk_w, cfg, cap)
+    y_kernel = moe_dispatch_pallas(params, x, topk_idx, topk_w, cfg, cap,
+                                   _expert_ffn, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_einsum),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# multikey_sort
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,tile", [(256, 64), (1024, 256), (2048, 2048)])
+@pytest.mark.parametrize("domain", [8, 1 << 20])
+def test_bitonic_tile_sort_sweep(n, tile, domain):
+    rng = np.random.default_rng(n + domain)
+    keys = jnp.asarray(rng.integers(0, domain, n), jnp.int32)
+    vals = jnp.asarray(rng.permutation(n), jnp.int32)
+    ks, vs = tile_sort(keys, vals, tile=tile, interpret=True)
+    kr, vr = tile_sort_ref(keys, vals, tile)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(kr))
+    np.testing.assert_array_equal(np.asarray(vs), np.asarray(vr))
+
+
+def test_bitonic_stability_via_index_payload():
+    n = 512
+    keys = jnp.zeros(n, jnp.int32)  # all equal keys
+    vals = jnp.arange(n, dtype=jnp.int32)
+    ks, vs = tile_sort(keys, vals, tile=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(vs), np.arange(n))
+
+
+@pytest.mark.parametrize("nkeys", [1, 2, 3])
+def test_multikey_sort_lsd_matches_lexsort(nkeys):
+    rng = np.random.default_rng(nkeys)
+    n = 1024
+    cols = tuple(jnp.asarray(rng.integers(0, 16, n), jnp.int32)
+                 for _ in range(nkeys))
+    perm = multikey_sort_lsd(cols, tile=256, interpret=True)
+    ref = np.lexsort([np.asarray(c) for c in cols[::-1]])
+    got = np.stack([np.asarray(c)[np.asarray(perm)] for c in cols])
+    want = np.stack([np.asarray(c)[ref] for c in cols])
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# segment_join
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,S,tblk", [(2048, 64, 512), (4096, 256, 1024),
+                                      (1024, 1024, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_segment_sum_sweep(n, S, tblk, dtype):
+    rng = np.random.default_rng(n + S)
+    seg = jnp.asarray(rng.integers(0, S, n), jnp.int32)
+    val = jnp.asarray(rng.normal(size=n), dtype)
+    got = segment_sum(seg, val, S, tblk=tblk, interpret=True)
+    want = segment_sum_ref(seg, val, S)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_join_aggregate_kernel_matches_core():
+    """Kernel-path fused aggregate join == relational-core tensor path."""
+    from repro.core import Relation, tensor_join_aggregate
+    rng = np.random.default_rng(9)
+    nb, npr, dom = 2048, 4096, 128
+    bk = rng.integers(0, dom, nb)
+    pk = rng.integers(0, dom, npr)
+    bv = rng.integers(0, 50, nb).astype(np.float64)
+    pv = rng.integers(0, 50, npr).astype(np.float64)
+    agg = join_aggregate_kernel(
+        jnp.asarray(bk, jnp.int32), jnp.asarray(bv, jnp.float32),
+        jnp.asarray(pk, jnp.int32), jnp.asarray(pv, jnp.float32),
+        dom, interpret=True)
+    core, _ = tensor_join_aggregate(
+        Relation({"k": bk.astype(np.int64), "v": bv}),
+        Relation({"k": pk.astype(np.int64), "w": pv}),
+        "k", "v", "w", key_domain=dom)
+    np.testing.assert_allclose(float(agg["count"]), core["count"], rtol=1e-6)
+    np.testing.assert_allclose(float(agg["sum_prod"]), core["sum_prod"], rtol=1e-5)
+    np.testing.assert_allclose(float(agg["sum_add"]), core["sum_add"], rtol=1e-5)

@@ -1,0 +1,68 @@
+"""Int8 KV-cache quantization: accuracy + roundtrip + decode parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import decode_attention
+from repro.serving.kv_quant import (QuantizedKV, append_quantized,
+                                    decode_attention_quantized, dequantize_kv,
+                                    quantize_kv)
+
+
+def _kv(seed=0, B=2, S=128, KH=4, D=32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    k = jax.random.normal(ks[0], (B, S, KH, D), jnp.float32)
+    v = jax.random.normal(ks[1], (B, S, KH, D), jnp.float32)
+    return k, v
+
+
+def test_quantize_roundtrip_error_bounded():
+    k, _ = _kv()
+    deq = dequantize_kv(quantize_kv(k), jnp.float32)
+    err = jnp.abs(deq - k)
+    # symmetric int8: |err| <= scale/2 = amax/254 per (pos, head)
+    amax = jnp.max(jnp.abs(k), axis=-1, keepdims=True)
+    assert bool(jnp.all(err <= amax / 254 + 1e-6))
+
+
+def test_outlier_positions_stay_local():
+    """Per-(pos, head) scales: an outlier position cannot change the
+    quantization of any other position (unlike per-tensor scaling)."""
+    k, _ = _kv()
+    k_out = k.at[:, 7].multiply(1000.0)
+    deq_base = dequantize_kv(quantize_kv(k), jnp.float32)
+    deq_out = dequantize_kv(quantize_kv(k_out), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(deq_out[:, 8:]),
+                                  np.asarray(deq_base[:, 8:]))
+    # contrast: per-TENSOR scaling would blow other positions' error up 1000×
+    scale_pt = jnp.max(jnp.abs(k_out)) / 127.0
+    deq_pt = jnp.round(k_out / scale_pt).clip(-127, 127) * scale_pt
+    err_pt = float(jnp.abs(deq_pt[:, 8:] - k_out[:, 8:]).mean())
+    err_local = float(jnp.abs(deq_out[:, 8:] - k_out[:, 8:]).mean())
+    assert err_local < err_pt / 100
+
+
+def test_decode_attention_parity():
+    B, S, H, KH, D = 2, 128, 8, 4, 32
+    k, v = _kv(B=B, S=S, KH=KH, D=D)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, 1, H, D), jnp.float32)
+    ref = decode_attention(q, k, v, jnp.asarray(S - 1))
+    got = decode_attention_quantized(q, quantize_kv(k), quantize_kv(v),
+                                     jnp.asarray(S - 1))
+    a = np.asarray(ref).ravel()
+    b = np.asarray(got).ravel()
+    cos = float(np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b)))
+    assert cos > 0.999, cos
+    np.testing.assert_allclose(b, a, rtol=0.05, atol=0.02)
+
+
+def test_append_matches_full_quantization():
+    k, _ = _kv(S=16)
+    cache = QuantizedKV(jnp.zeros_like(quantize_kv(k).q),
+                        jnp.zeros_like(quantize_kv(k).scale))
+    for t in range(16):
+        cache = append_quantized(cache, k[:, t:t + 1], t)
+    full = quantize_kv(k)
+    np.testing.assert_array_equal(np.asarray(cache.q), np.asarray(full.q))
+    np.testing.assert_allclose(np.asarray(cache.scale),
+                               np.asarray(full.scale), rtol=1e-6)

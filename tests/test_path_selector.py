@@ -1,0 +1,79 @@
+"""Execution-time path selection (§III.C) and regime-shift model (§VI)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CostModel,
+    Executor,
+    Join,
+    PathSelector,
+    Relation,
+    Scan,
+    Sort,
+    table_bytes_estimate,
+)
+
+
+def _tables(n=40_000, seed=0):
+    rng = np.random.default_rng(seed)
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 99, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 99, n).astype(np.int64)})
+    return build, probe
+
+
+def test_selector_prefers_linear_when_fits():
+    build, probe = _tables(1000)
+    sel = PathSelector(work_mem=1 << 30)
+    d = sel.choose_join(build, probe, "k")
+    assert d.path == "linear"
+    assert "fits" in d.reason
+
+
+def test_selector_predicts_spill_under_pressure():
+    build, probe = _tables(200_000)
+    sel = PathSelector(work_mem=1 << 20)
+    d = sel.choose_join(build, probe, "k")
+    assert d.predicted_spill_bytes > 0
+    assert d.t_linear > 0 and d.t_tensor > 0
+
+
+def test_selector_forced_paths():
+    build, probe = _tables(1000)
+    for force in ("linear", "tensor"):
+        sel = PathSelector(work_mem=1 << 20, force=force)
+        assert sel.choose_join(build, probe, "k").path == force
+        assert sel.choose_sort(build, ["k"]).path == force
+
+
+def test_executor_policies_agree_semantically():
+    build, probe = _tables(20_000)
+    plan = lambda: Sort(Join(Scan(build), Scan(probe), "k"), ["k", "w"])
+    results = {}
+    for policy in ("linear", "tensor", "auto"):
+        ex = Executor(work_mem=128 * 1024, policy=policy)
+        results[policy] = ex.execute(plan()).relation.sort_canonical()
+    assert results["linear"].equals(results["tensor"])
+    assert results["linear"].equals(results["auto"])
+
+
+def test_regime_model_alpha_superlinear_in_deficit():
+    """α(N, M) grows superlinearly as memory pressure increases (§VI)."""
+    model = CostModel()
+    n = 1_000_000
+    spills = []
+    for mem in (1 << 26, 1 << 23, 1 << 20):  # 64MB, 8MB, 1MB
+        s, _ = model.join_spill_bytes(n, n, 16, 16, mem)
+        spills.append(s)
+    assert spills[0] <= spills[1] <= spills[2]
+    assert spills[2] > 0
+    # sort spill passes grow as memory shrinks
+    p_small = model.sort_spill_bytes(n, 24, 1 << 20)[1]
+    p_large = model.sort_spill_bytes(n, 24, 1 << 26)[1]
+    assert p_small >= p_large
+
+
+def test_table_bytes_monotonic():
+    assert table_bytes_estimate(10) <= table_bytes_estimate(1000)
+    assert table_bytes_estimate(1000) <= table_bytes_estimate(10**6)

@@ -1,0 +1,65 @@
+"""Roofline HLO walker: flop/trip-count accounting against known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analyze import analyze_hlo, roofline_terms
+from repro.roofline.model_flops import model_flops
+from repro.configs import SHAPES, get_config
+
+
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_counted():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    r = analyze_hlo(_hlo_of(lambda x, y: x @ y, a, b))
+    want = 2 * 128 * 256 * 512
+    assert abs(r["flops"] - want) / want < 0.05, (r["flops"], want)
+
+
+def test_scan_trip_count_scaling():
+    """A matmul inside a scan must be counted trip_count times."""
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def body(c, _):
+        return c @ a, None
+
+    def fn(x):
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    r = analyze_hlo(_hlo_of(fn, a))
+    want = 10 * 2 * 64**3
+    assert abs(r["flops"] - want) / want < 0.05, (r["flops"], want)
+
+
+def test_bytes_reasonable_for_elementwise():
+    """y = x + 1 should move ~2·|x|, not orders of magnitude more."""
+    x = jnp.zeros((1 << 20,), jnp.float32)
+    r = analyze_hlo(_hlo_of(lambda v: v + 1.0, x))
+    assert r["bytes"] <= 4 * x.nbytes
+    assert r["bytes"] >= x.nbytes
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(197e12, 819e9, 0.0)  # exactly 1s compute, 1s memory
+    assert t["dominant"] in ("compute", "memory")
+    t = roofline_terms(1.0, 1.0, 50e9 * 10)
+    assert t["dominant"] == "collective"
+    assert 0 <= t["roofline_fraction"] <= 1
+
+
+@pytest.mark.parametrize("arch", ["yi-9b", "jamba-1.5-large-398b"])
+def test_model_flops_sane(arch):
+    cfg = get_config(arch)
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    f_decode = model_flops(cfg, SHAPES["decode_32k"])
+    # train ≈ 3× prefill per token; decode ≪ prefill
+    assert f_train > f_prefill > f_decode > 0
+    # 6·N_active·tokens lower bound
+    assert f_train >= 6 * cfg.active_param_count() * 256 * 4096 * 0.99

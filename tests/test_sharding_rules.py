@@ -1,0 +1,67 @@
+"""Sharding rules: every full-config parameter spec must divide the mesh.
+
+These tests catch config/sharding regressions WITHOUT compiling: they build
+abstract params for all 10 production architectures and check each
+PartitionSpec'd dimension divides the (16, 16) axes.
+"""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import param_specs
+from repro.launch.specs import abstract_params, sharded_config
+
+MESH_SIZES = {"data": 16, "model": 16, "pod": 2}
+
+
+def _axis_size(entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([MESH_SIZES[a] for a in entry]))
+    return MESH_SIZES[entry]
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_divisible(arch):
+    cfg = sharded_config(get_config(arch))
+    params = abstract_params(cfg)
+    specs = param_specs(params, cfg)
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        assert len(spec) <= len(leaf.shape), (path, spec, leaf.shape)
+        for dim, entry in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if entry is None:
+                continue
+            size = _axis_size(entry)
+            assert dim % size == 0, (
+                f"{arch}: {jax.tree_util.keystr(path)} dim {dim} not divisible "
+                f"by {entry}={size} (shape {leaf.shape}, spec {spec})")
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_large_params_are_sharded(arch):
+    """Nothing bigger than 64 MB (bf16) may be fully replicated."""
+    cfg = sharded_config(get_config(arch))
+    params = abstract_params(cfg)
+    specs = param_specs(params, cfg)
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        nbytes = int(np.prod(leaf.shape)) * 2
+        if nbytes > 64 * 2**20:
+            assert any(e is not None for e in spec), (
+                f"{arch}: {jax.tree_util.keystr(path)} "
+                f"({nbytes / 2**20:.0f} MB) is replicated")
+
+
+def test_vocab_padding():
+    cfg = sharded_config(get_config("mamba2-370m"))
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+    # unpadded configs unchanged
+    assert get_config("mamba2-370m").padded_vocab == 50_280

@@ -1,0 +1,126 @@
+"""Training substrate: optimizers, checkpointing, compression, fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint, Checkpointer)
+from repro.train.compression import (apply_error_feedback, dequantize_int8,
+                                     init_error_state, quantize_int8)
+from repro.train.fault_tolerance import ResilientLoop, plan_mesh
+from repro.train.optimizer import adafactor, adamw, global_norm
+
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (8, 16)),
+            "b": jax.random.normal(k2, (16,)),
+            "nested": {"u": jax.random.normal(k2, (4, 4, 4))}}
+
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor])
+def test_optimizer_reduces_quadratic(make_opt):
+    opt = make_opt(lr=0.1)
+    params = _toy_params(jax.random.PRNGKey(0))
+    target = _toy_params(jax.random.PRNGKey(9))
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return sum(jnp.sum((a - b) ** 2)
+                   for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    first = float(loss_fn(params))
+    for _ in range(60):
+        grads = jax.grad(loss_fn)(params)
+        params, state, metrics = opt.update(grads, state, params)
+    assert float(loss_fn(params)) < 0.2 * first
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_optimizer_state_structure_stable():
+    """jit-compatibility: update preserves the state pytree structure."""
+    opt = adamw()
+    params = _toy_params(jax.random.PRNGKey(0))
+    state = opt.init(params)
+    grads = jax.tree.map(jnp.ones_like, params)
+    _, new_state, _ = opt.update(grads, state, params)
+    assert (jax.tree_util.tree_structure(state)
+            == jax.tree_util.tree_structure(new_state))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": _toy_params(jax.random.PRNGKey(1)),
+            "step_scalar": jnp.asarray(7)}
+    save_checkpoint(str(tmp_path), 42, tree)
+    assert latest_step(str(tmp_path)) == 42
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 42
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_corruption(tmp_path):
+    tree = {"w": jnp.ones((4,))}
+    for s in (10, 20, 30, 40):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [30, 40]
+    # corrupt newest manifest → restore falls back is NOT automatic; but
+    # latest_step must skip unreadable manifests
+    (tmp_path / "step_00000040" / "manifest.json").write_text("{broken")
+    assert latest_step(str(tmp_path)) == 30
+
+
+def test_int8_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(256,)) * 1e-3, jnp.float32)
+    grads = {"g": g}
+    err = init_error_state(grads)
+    # accumulate the same gradient 50 steps with and without feedback
+    naive_sum = np.zeros(256)
+    ef_sum = np.zeros(256)
+    for _ in range(50):
+        q, s = quantize_int8(g)
+        naive_sum += np.asarray(dequantize_int8(q, s))
+        restored, err = apply_error_feedback(grads, err)
+        ef_sum += np.asarray(restored["g"])
+    true_sum = np.asarray(g) * 50
+    assert np.abs(ef_sum - true_sum).max() < np.abs(naive_sum - true_sum).max()
+
+
+def test_plan_mesh_elasticity():
+    assert plan_mesh(512) == ((2, 16, 16), ("pod", "data", "model"))
+    assert plan_mesh(256) == ((16, 16), ("data", "model"))
+    # losing a host (8 devices): shrink data axis, keep model axis intact
+    shape, axes = plan_mesh(248)
+    assert axes == ("data", "model") and shape == (15, 16)
+    with pytest.raises(ValueError):
+        plan_mesh(8)
+
+
+def test_resilient_loop_recovers_from_failure(tmp_path):
+    """A mid-run failure restores the checkpoint and replays data."""
+    ckpt = Checkpointer(str(tmp_path), interval=2)
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        return state + batch, float(state)
+
+    def fail_once(step):
+        if step == 5 and calls["n"] == 0:
+            calls["n"] += 1
+            raise RuntimeError("injected node failure")
+
+    def data_factory():
+        return iter([1] * 100)
+
+    loop = ResilientLoop(step_fn, ckpt, lambda: {"consumed": 0},
+                         lambda s: None, max_retries=2)
+    state, report = loop.run(0, data_factory, num_steps=10,
+                             fail_hook=fail_once)
+    assert report.retries == 1
+    assert report.restores == 1
+    assert report.steps_run >= 10
