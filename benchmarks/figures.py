@@ -10,9 +10,11 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import (BLOCK_BYTES, CostModel, Executor, Join, PathSelector,
-                        Relation, Scan, Sort, hash_join_linear, sort_linear,
+from repro.core import (BLOCK_BYTES, Aggregate, CostModel, Executor, Join,
+                        OpMetrics, PathSelector, Relation, Scan, Sort,
+                        SpillAccount, hash_join_linear, sort_linear,
                         tensor_join, tensor_sort)
+from repro.core.metrics import Timer
 
 from .common import emit, join_tables, measure, sort_table
 
@@ -238,6 +240,119 @@ def moe_dispatch_paths(reps: int = 7) -> Dict:
     return out
 
 
+# -- Fig 8: device-resident fused pipeline vs per-operator host round trips ----
+
+def _seed_tensor_join(build, probe, key):
+    """Replica of the SEED tensor_join: duplicate host-side O(N log N)
+    planning sort, then per-column host gathers — the premature
+    materialization this PR's device-resident path eliminates.  Kept here
+    (not in the engine) as the before/after baseline."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.tensor_engine import _next_pow2, aligned_join_indices
+
+    bk = np.asarray(build[key], dtype=np.int64)
+    pk = np.asarray(probe[key], dtype=np.int64)
+    syncs = 0
+    with Timer() as t:
+        # host planning pass: a full sort the device will redo
+        sk = np.sort(bk)
+        cap = int((np.searchsorted(sk, pk, side="right")
+                   - np.searchsorted(sk, pk, side="left")).sum())
+        capacity = _next_pow2(max(1, cap))
+        build_idx, probe_idx, valid, total = aligned_join_indices(
+            jnp.asarray(bk), jnp.asarray(pk), capacity)
+        jax.block_until_ready((build_idx, probe_idx, valid))
+        n = int(total); syncs += 1
+        b_idx = np.asarray(build_idx)[:n]; syncs += 1
+        p_idx = np.asarray(probe_idx)[:n]; syncs += 1
+        out = {}
+        for name, col in probe.columns.items():
+            out[name] = np.asarray(col)[p_idx]
+        for name, col in build.columns.items():
+            if name != key:
+                out[f"b_{name}"] = np.asarray(col)[b_idx]
+        result = Relation(out)
+    return result, OpMetrics(op="hash_join", path="tensor", rows_in=len(build)
+                             + len(probe), rows_out=len(result),
+                             wall_s=t.elapsed, spill=SpillAccount(),
+                             host_syncs=syncs)
+
+
+def _seed_tensor_sort(rel, keys):
+    """Replica of the SEED tensor_sort: permutation fetched to host, payload
+    gathered row-by-row in numpy."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.tensor_engine import _multikey_perm
+
+    key_cols = tuple(jnp.asarray(rel[k]) for k in keys)
+    with Timer() as t:
+        perm = _multikey_perm(key_cols, None, len(keys), has_valid=False)
+        perm = np.asarray(jax.block_until_ready(perm))
+        out = rel.take(perm)
+    return out, OpMetrics(op="sort", path="tensor", rows_in=len(rel),
+                          rows_out=len(out), wall_s=t.elapsed,
+                          spill=SpillAccount(), host_syncs=1)
+
+
+def fig8_pipeline(reps: int = 7) -> Dict:
+    """Join→Sort→Aggregate at N=1M: the seed per-operator tensor path (host
+    round trip between every operator) vs the fused device-resident pipeline
+    (one compiled program, one device→host transfer per query)."""
+    n = 1_000_000
+    build, probe = join_tables(n)
+    sort_keys = ["k", "w"]
+    agg_col, agg_fn = "b_v", "sum"
+    out = {}
+
+    last_vals = {}
+
+    def run_seed():
+        j, mj = _seed_tensor_join(build, probe, "k")
+        s, ms = _seed_tensor_sort(j, sort_keys)
+        val = float(s[agg_col].sum())
+        last_vals["seed"] = val
+        m = OpMetrics(op="pipeline", path="tensor", rows_in=mj.rows_in,
+                      rows_out=1, wall_s=mj.wall_s + ms.wall_s,
+                      spill=SpillAccount(),
+                      host_syncs=mj.host_syncs + ms.host_syncs)
+        return (val, m)
+
+    plan = lambda: Aggregate(Sort(Join(Scan(build), Scan(probe), "k"),
+                                  sort_keys), agg_col, agg_fn)
+    ex = Executor(work_mem=1 * MB, policy="tensor")
+
+    def run_fused():
+        q = ex.execute(plan())
+        last_vals["fused"] = q.scalar
+        m = OpMetrics(op="pipeline", path="tensor", rows_in=2 * n, rows_out=1,
+                      wall_s=q.total_wall_s, spill=SpillAccount(),
+                      host_syncs=q.total_host_syncs)
+        return (q.scalar, m)
+
+    r_seed = measure(run_seed, reps=reps)
+    r_fused = measure(run_fused, reps=reps)
+    # semantic parity gate over the already-measured runs (int64 sums are
+    # bit-exact on both paths, so equality is the right comparison)
+    if last_vals["seed"] != last_vals["fused"]:
+        raise RuntimeError(f"pipeline paths disagree: {last_vals}")
+    speedup = r_seed["stats"].p50 / max(r_fused["stats"].p50, 1e-12)
+    emit("fig8/per_op_seed_1m", r_seed["stats"].p50 * 1e6,
+         {"p99_s": round(r_seed["stats"].p99, 4),
+          "host_syncs": r_seed["metrics"].host_syncs})
+    emit("fig8/fused_device_resident_1m", r_fused["stats"].p50 * 1e6,
+         {"p99_s": round(r_fused["stats"].p99, 4),
+          "host_syncs": r_fused["metrics"].host_syncs,
+          "speedup_vs_per_op": round(speedup, 2)})
+    out["per_op"] = {"p50": r_seed["stats"].p50,
+                     "host_syncs": r_seed["metrics"].host_syncs}
+    out["fused"] = {"p50": r_fused["stats"].p50,
+                    "host_syncs": r_fused["metrics"].host_syncs,
+                    "speedup": speedup}
+    return out
+
+
 ALL = {
     "fig1": fig1_scalability,
     "fig3": fig3_hashtable_growth,
@@ -245,6 +360,7 @@ ALL = {
     "fig5": fig5_multikey_sort,
     "fig6": fig6_p99_workmem,
     "fig7": fig7_spill,
+    "fig8": fig8_pipeline,
     "headline": headline,
     "selector": selector_analysis,
     "regime": regime_model,

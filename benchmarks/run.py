@@ -7,6 +7,7 @@ trims repetition counts for CI-style smoke runs.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import pathlib
 import sys
@@ -29,8 +30,14 @@ def main() -> None:
         fn = ALL[name]
         t0 = time.time()
         kw = {}
-        if args.fast and "reps" in fn.__code__.co_varnames:
-            kw["reps"] = 3
+        # inspect.signature sees through functools.wraps/partial wrappers,
+        # unlike fn.__code__.co_varnames which only works on plain functions
+        if args.fast:
+            try:
+                if "reps" in inspect.signature(fn).parameters:
+                    kw["reps"] = 3
+            except (TypeError, ValueError):
+                pass
         try:
             summary[name] = fn(**kw)
         except Exception as e:  # keep the harness going; record the failure

@@ -3,8 +3,12 @@ relational operations, with execution-time path selection (the paper's
 contribution), plus the faithful linear (spilling) baseline it is measured
 against."""
 from .cost_model import CostConstants, CostModel
-from .aggregate import group_aggregate_linear, group_aggregate_tensor
+from .aggregate import (group_aggregate_device, group_aggregate_linear,
+                        group_aggregate_tensor)
+from .device_relation import DeviceColumn, DeviceRelation
 from .executor import Aggregate, Executor, Filter, GroupBy, Join, QueryResult, Scan, Sort
+from .fused import (FusedSpec, match_fragment, pipeline_cache_clear,
+                    pipeline_cache_info, run_fused)
 from .linear_engine import HashTable, hash_join_linear, sort_linear, table_bytes_estimate
 from .metrics import BLOCK_BYTES, LatencyStats, OpMetrics, SpillAccount, latency_stats
 from .path_selector import Decision, PathSelector
@@ -12,18 +16,25 @@ from .relation import Relation
 from .spill import SpillManager
 from .tensor_engine import (
     aligned_join_indices,
+    capacity_bucket,
     join_capacity,
     tensor_join,
     tensor_join_aggregate,
+    tensor_join_device,
     tensor_sort,
+    tensor_sort_device,
 )
 
 __all__ = [
     "Aggregate", "BLOCK_BYTES", "CostConstants", "CostModel", "Decision",
-    "Executor", "Filter", "GroupBy", "HashTable", "Join", "LatencyStats", "OpMetrics",
+    "DeviceColumn", "DeviceRelation", "Executor", "Filter", "FusedSpec",
+    "GroupBy", "HashTable", "Join", "LatencyStats", "OpMetrics",
     "PathSelector", "QueryResult", "Relation", "Scan", "Sort", "SpillAccount",
-    "SpillManager", "aligned_join_indices", "hash_join_linear", "join_capacity",
-    "group_aggregate_linear", "group_aggregate_tensor",
-    "latency_stats", "sort_linear", "table_bytes_estimate", "tensor_join",
-    "tensor_join_aggregate", "tensor_sort",
+    "SpillManager", "aligned_join_indices", "capacity_bucket",
+    "hash_join_linear", "join_capacity",
+    "group_aggregate_device", "group_aggregate_linear", "group_aggregate_tensor",
+    "latency_stats", "match_fragment", "pipeline_cache_clear",
+    "pipeline_cache_info", "run_fused", "sort_linear", "table_bytes_estimate",
+    "tensor_join", "tensor_join_aggregate", "tensor_join_device",
+    "tensor_sort", "tensor_sort_device",
 ]

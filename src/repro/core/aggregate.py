@@ -17,7 +17,8 @@ from .metrics import OpMetrics, SpillAccount, Timer
 from .relation import Relation
 from .spill import SpillManager
 
-__all__ = ["group_aggregate_linear", "group_aggregate_tensor"]
+__all__ = ["group_aggregate_linear", "group_aggregate_tensor",
+           "group_aggregate_device"]
 
 _AGGS = ("sum", "count", "min", "max")
 
@@ -110,36 +111,149 @@ def group_aggregate_linear(rel: Relation, key: str, values: Dict[str, str],
                           peak_working_set_bytes=peak)
 
 
-def group_aggregate_tensor(rel: Relation, key: str, values: Dict[str, str],
-                           key_domain: int = None) -> Tuple[Relation, OpMetrics]:
-    """Dimension-preserving aggregate: segment reductions along the key axis
-    (jit, static segment count) — no group hash table ever exists."""
+def _group_reduce_impl(keys, valid, cols, fns, num_segments, use_kernel):
+    """Device group-by core: factorize the key axis ON DEVICE (sort + run
+    boundaries), then segment-reduce every aggregate column.
+
+    ``valid`` masks physical rows that are not logical rows (the device-
+    resident pipeline's capacity padding / filtered rows); masked rows carry
+    zero weight and sink to the tail of the sorted key axis.  Output arrays
+    are ``num_segments``-padded; the returned prefix mask selects the real
+    groups.  No host transfer happens anywhere in here.
+    """
     import jax
     import jax.numpy as jnp
 
-    keys_np = np.asarray(rel[key], dtype=np.int64)
-    uniq = np.unique(keys_np)
+    from .tensor_engine import segment_sum_dispatch
+
+    n = keys.shape[0]
+    order = jnp.argsort(keys, stable=True)
+    if valid is None:
+        vmask = jnp.ones((n,), bool)
+    else:
+        # second stable pass on invalidity: masked rows sink to the tail
+        # WITHOUT remapping their keys (a sentinel remap would collide with
+        # real rows at the dtype extreme and merge segments)
+        order = jnp.take(order, jnp.argsort(
+            jnp.logical_not(jnp.take(valid, order)), stable=True))
+        vmask = jnp.take(valid, order)
+    sk = jnp.take(keys, order)
+    boundary = jnp.concatenate(
+        [jnp.ones((1,), bool), sk[1:] != sk[:-1]]) if n > 1 else jnp.ones((1,), bool)
+    # valid rows form a prefix, so within it `boundary` is exact
+    newseg = boundary & vmask
+    seg = jnp.cumsum(newseg.astype(jnp.int32)) - 1  # masked rows inherit ids; weight 0
+    nseg = newseg.sum()
+    uniq = jax.ops.segment_max(
+        jnp.where(vmask, sk, jnp.iinfo(keys.dtype).min), seg,
+        num_segments=num_segments)
+    results = []
+    for col, fn in zip(cols, fns):
+        v = jnp.take(col.astype(jnp.float64), order)
+        if fn == "sum":
+            r = segment_sum_dispatch(jnp.where(vmask, v, 0.0), seg,
+                                     num_segments, use_kernel)
+        elif fn == "count":
+            r = segment_sum_dispatch(vmask.astype(jnp.float64), seg,
+                                     num_segments, use_kernel)
+        elif fn == "min":
+            r = jax.ops.segment_min(jnp.where(vmask, v, jnp.inf), seg,
+                                    num_segments=num_segments)
+        elif fn == "max":
+            r = jax.ops.segment_max(jnp.where(vmask, v, -jnp.inf), seg,
+                                    num_segments=num_segments)
+        else:
+            raise ValueError(fn)
+        results.append(r)
+    valid_out = jnp.arange(num_segments) < nseg
+    return uniq, tuple(results), valid_out
+
+
+def group_aggregate_device(rel, key: str, values: Dict[str, str],
+                           use_kernel: bool = None):
+    """Device-resident GROUP BY: DeviceRelation → DeviceRelation, zero syncs.
+
+    The seed's tensor group-by factorized keys on the host (np.unique) —
+    a full device→host→device round trip per operator.  Here factorization
+    is a device sort; the output stays device-resident with its real group
+    count carried as a prefix validity mask.
+    """
+    import jax.numpy as jnp
+
+    from .device_relation import DeviceRelation
+    from .tensor_engine import use_pallas
+
+    cols_in = tuple(rel.col(c) for c in values)
+    fns = tuple(values.values())
+    keys_dev = rel.col(key)
+    if not jnp.issubdtype(keys_dev.dtype, jnp.integer):
+        # seed-compatible coercion: non-integer group keys truncate to int64
+        # (the segment machinery needs an integer coordinate axis)
+        keys_dev = keys_dev.astype(jnp.int64)
+    n = rel.num_physical_rows
+    if n == 0:
+        out_cols = {key: keys_dev}
+        for col, agg in values.items():
+            out_cols[f"{agg}_{col}"] = jnp.zeros((0,), jnp.float64)
+        return (DeviceRelation.from_arrays(out_cols),
+                OpMetrics(op="group_aggregate", path="tensor", rows_in=0,
+                          rows_out=0, wall_s=0.0, spill=SpillAccount()))
+    if use_kernel is None:
+        use_kernel = use_pallas(n)
     with Timer() as t:
-        # key axis = dense segment ids (host factorization, O(N log N))
-        seg = np.searchsorted(uniq, keys_np)
-        nseg = len(uniq)
-        segs_j = jnp.asarray(seg, jnp.int32)
-        out: Dict[str, np.ndarray] = {key: uniq}
-        for col, fn in values.items():
-            v = jnp.asarray(rel[col], jnp.float64)
-            if fn == "sum":
-                r = jax.ops.segment_sum(v, segs_j, num_segments=nseg)
-            elif fn == "count":
-                r = jax.ops.segment_sum(jnp.ones_like(v), segs_j, num_segments=nseg)
-            elif fn == "min":
-                r = jax.ops.segment_min(v, segs_j, num_segments=nseg)
-            elif fn == "max":
-                r = jax.ops.segment_max(v, segs_j, num_segments=nseg)
-            else:
-                raise ValueError(fn)
-            out[f"{fn}_{col}"] = np.asarray(jax.block_until_ready(r))
-    peak = rel.nbytes() + nseg * 8 * (1 + len(values))
-    return Relation(out), OpMetrics(op="group_aggregate", path="tensor",
-                                    rows_in=len(rel), rows_out=nseg,
-                                    wall_s=t.elapsed, spill=SpillAccount(),
-                                    peak_working_set_bytes=peak)
+        fn = _group_reduce_jit()
+        uniq, results, valid_out = fn(keys_dev, rel.valid, cols_in, fns, n,
+                                      use_kernel)
+        out_cols = {key: uniq}
+        for (col, agg), r in zip(values.items(), results):
+            out_cols[f"{agg}_{col}"] = r
+        out = DeviceRelation.from_arrays(out_cols, valid=valid_out)
+    peak = n * 8 * (2 + len(values))
+    return out, OpMetrics(op="group_aggregate", path="tensor",
+                          rows_in=n, rows_out=n,
+                          wall_s=t.elapsed, spill=SpillAccount(),
+                          peak_working_set_bytes=peak, host_syncs=0)
+
+
+_GROUP_REDUCE_JIT = None
+
+
+def _group_reduce_jit():
+    """Lazy jit of the group reduce (fns/num_segments/use_kernel static)."""
+    import jax
+
+    global _GROUP_REDUCE_JIT
+    if _GROUP_REDUCE_JIT is None:
+        _GROUP_REDUCE_JIT = jax.jit(
+            _group_reduce_impl,
+            static_argnames=("fns", "num_segments", "use_kernel"))
+    return _GROUP_REDUCE_JIT
+
+
+def group_aggregate_tensor(rel: Relation, key: str, values: Dict[str, str],
+                           key_domain: int = None) -> Tuple[Relation, OpMetrics]:
+    """Dimension-preserving aggregate: segment reductions along the key axis
+    (jit, static segment count) — no group hash table ever exists.
+
+    Host-Relation API over :func:`group_aggregate_device`: lift, reduce on
+    device, one batched fetch."""
+    from .device_relation import DeviceRelation
+
+    dev = DeviceRelation.from_host(rel)
+    with Timer() as t:
+        out_dev, m = group_aggregate_device(dev, key, values)
+        syncs = 1
+        if out_dev.valid is not None:
+            # group outputs are padded to the physical row count; fetch the
+            # group count (scalar sync) and device-slice so the batched
+            # result fetch is O(groups), not O(rows)
+            nseg = int(out_dev.valid.sum())
+            syncs = 2
+            out_dev = DeviceRelation.from_arrays(
+                {k: out_dev.col(k)[:nseg] for k in out_dev.names})
+        out = out_dev.to_host()
+    peak = rel.nbytes() + len(out) * 8 * (1 + len(values))
+    return out, OpMetrics(op="group_aggregate", path="tensor",
+                          rows_in=len(rel), rows_out=len(out),
+                          wall_s=t.elapsed, spill=SpillAccount(),
+                          peak_working_set_bytes=peak, host_syncs=syncs)

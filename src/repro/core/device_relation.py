@@ -1,0 +1,160 @@
+"""Device-resident columnar relation with late materialization.
+
+The seed engine lowered every intermediate back to a host-numpy
+:class:`~repro.core.relation.Relation` between operators — exactly the
+"premature materialization" the paper argues against.  A
+:class:`DeviceRelation` keeps columns as JAX device arrays across operators
+and carries two pieces of deferred state instead of moving payload bytes:
+
+  * a **pending gather index** per column (late materialization): a join or
+    sort does not shuffle payload columns, it composes an ``int`` index array;
+    the gather runs on device only when a column is actually consumed;
+  * a **validity mask** over the (statically shaped) physical rows: joins
+    produce ``capacity``-padded index spaces, filters AND their predicate into
+    the mask, and no compaction (a dynamic-shape operation jit cannot express)
+    ever happens on device.
+
+Host materialization happens exactly once, at the query root, via
+:meth:`to_host` — a single batched ``jax.device_get`` for all columns plus the
+mask.  Callers that track :class:`~repro.core.metrics.OpMetrics` count that as
+one host sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .relation import Relation
+
+__all__ = ["DeviceColumn", "DeviceRelation"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceColumn:
+    """A device array plus an optional pending gather index.
+
+    The logical column is ``base[gather]`` (or ``base`` when ``gather`` is
+    None), but the gather is deferred until :meth:`force` — composing two
+    takes costs one index gather, never a payload gather.
+    """
+
+    base: jnp.ndarray
+    gather: Optional[jnp.ndarray] = None
+
+    def force(self) -> jnp.ndarray:
+        if self.gather is None:
+            return self.base
+        return jnp.take(self.base, self.gather, axis=0)
+
+    def take_lazy(self, idx: jnp.ndarray) -> "DeviceColumn":
+        if self.gather is None:
+            return DeviceColumn(self.base, idx)
+        return DeviceColumn(self.base, jnp.take(self.gather, idx, axis=0))
+
+    @property
+    def num_rows(self) -> int:
+        arr = self.gather if self.gather is not None else self.base
+        return int(arr.shape[0])
+
+    @property
+    def dtype(self):
+        return self.base.dtype
+
+
+class DeviceRelation:
+    """Columns on device; physical rows are static, logical rows are masked."""
+
+    def __init__(self, columns: Dict[str, DeviceColumn],
+                 valid: Optional[jnp.ndarray] = None):
+        if not columns:
+            raise ValueError("DeviceRelation needs at least one column")
+        lengths = {k: c.num_rows for k, c in columns.items()}
+        if len(set(lengths.values())) != 1:
+            raise ValueError(f"ragged device columns: {lengths}")
+        self.columns = columns
+        self.valid = valid  # None = all physical rows are logical rows
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def from_host(rel: Relation) -> "DeviceRelation":
+        return DeviceRelation(
+            {k: DeviceColumn(jnp.asarray(v)) for k, v in rel.columns.items()})
+
+    @staticmethod
+    def from_arrays(cols: Mapping[str, jnp.ndarray],
+                    valid: Optional[jnp.ndarray] = None) -> "DeviceRelation":
+        return DeviceRelation({k: DeviceColumn(v) for k, v in cols.items()},
+                              valid=valid)
+
+    # -- properties --------------------------------------------------------
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self.columns.keys())
+
+    @property
+    def num_physical_rows(self) -> int:
+        return next(iter(self.columns.values())).num_rows
+
+    def __len__(self) -> int:
+        # Upper bound on logical rows without a device sync; exact count
+        # requires materializing the mask (the selector only needs scale).
+        return self.num_physical_rows
+
+    def row_bytes(self) -> int:
+        return int(sum(c.dtype.itemsize for c in self.columns.values()))
+
+    def col(self, name: str) -> jnp.ndarray:
+        """The logical column as a device array (runs the pending gather)."""
+        return self.columns[name].force()
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self.col(name)
+
+    # -- transforms (all lazy / device-side, never a host sync) ------------
+    def take_lazy(self, idx: jnp.ndarray,
+                  valid: Optional[jnp.ndarray] = None) -> "DeviceRelation":
+        """Row selection by device index array; payload gathers stay pending.
+
+        Columns sharing one physical gather array compose it once.
+        """
+        composed: Dict[int, jnp.ndarray] = {}
+        out: Dict[str, DeviceColumn] = {}
+        for k, c in self.columns.items():
+            if c.gather is None:
+                out[k] = DeviceColumn(c.base, idx)
+                continue
+            key = id(c.gather)
+            if key not in composed:
+                composed[key] = jnp.take(c.gather, idx, axis=0)
+            out[k] = DeviceColumn(c.base, composed[key])
+        new_valid = valid
+        if new_valid is None and self.valid is not None:
+            new_valid = jnp.take(self.valid, idx, axis=0)
+        return DeviceRelation(out, valid=new_valid)
+
+    def with_valid(self, valid: jnp.ndarray) -> "DeviceRelation":
+        return DeviceRelation(dict(self.columns), valid=valid)
+
+    def mask_and(self, mask: jnp.ndarray) -> "DeviceRelation":
+        valid = mask if self.valid is None else (self.valid & mask)
+        return DeviceRelation(dict(self.columns), valid=valid)
+
+    def select(self, names: Iterable[str]) -> "DeviceRelation":
+        return DeviceRelation({k: self.columns[k] for k in names},
+                              valid=self.valid)
+
+    # -- the single host-materialization point -----------------------------
+    def to_host(self) -> Relation:
+        """Materialize to a host Relation with ONE batched device→host fetch."""
+        forced = {k: c.force() for k, c in self.columns.items()}
+        if self.valid is not None:
+            payload = jax.device_get((forced, self.valid))
+            cols, valid = payload
+            keep = np.nonzero(np.asarray(valid))[0]
+            return Relation({k: np.asarray(v)[keep] for k, v in cols.items()})
+        cols = jax.device_get(forced)
+        return Relation({k: np.asarray(v) for k, v in cols.items()})

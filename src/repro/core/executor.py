@@ -9,8 +9,17 @@ models the structure the paper critiques and the fix it proposes:
     *open* and resolves them at execution time via :class:`PathSelector`,
     using the actually-observed input relations.
 
+Tensor-path execution is **device-resident**: once an operator lands on the
+tensor path its output stays on device as a :class:`DeviceRelation` (lazy
+gather indices + validity mask), downstream tensor operators chain without
+any host round trip, and materialization happens exactly once at the query
+root (reported as a ``materialize`` entry in the metrics with its host-sync
+count).  Recognized ``Join→[Filter]→[Sort]→[Aggregate]`` fragments compile
+into a single fused jitted program (see :mod:`repro.core.fused`) that pays
+≤ 1 device→host transfer for the whole query.
+
 The executor records per-operator :class:`OpMetrics` so benchmarks can report
-latency, Temp_MB and working-set peaks per path.
+latency, Temp_MB, working-set peaks and host-sync counts per path.
 """
 from __future__ import annotations
 
@@ -19,14 +28,16 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
+from .device_relation import DeviceRelation
 from .linear_engine import hash_join_linear, sort_linear
-from .metrics import OpMetrics
+from .metrics import OpMetrics, SpillAccount, Timer
 from .path_selector import Decision, PathSelector
 from .relation import Relation
 from .spill import SpillManager
-from .tensor_engine import tensor_join, tensor_sort
+from .tensor_engine import (tensor_join_device, tensor_sort_device)
 
-__all__ = ["Scan", "Filter", "Join", "Sort", "Aggregate", "Executor", "QueryResult"]
+__all__ = ["Scan", "Filter", "Join", "Sort", "Aggregate", "GroupBy",
+           "Executor", "QueryResult"]
 
 
 # -- logical plan nodes ------------------------------------------------------
@@ -39,6 +50,15 @@ class Scan:
 
 @dataclasses.dataclass
 class Filter:
+    """Row-wise selection.
+
+    ``predicate`` must be a ROW-WISE (element-wise) expression over the
+    relation's columns returning a boolean mask — the relational WHERE
+    contract.  On the device-resident paths it may be evaluated over a
+    capacity-padded physical row space (masked rows included), so
+    whole-column aggregates inside a predicate (e.g. ``r['w'].mean()``)
+    are out of contract and would see padding.
+    """
     child: object
     predicate: Callable[[Relation], np.ndarray]  # rows mask
     name: str = "filter"
@@ -90,13 +110,18 @@ class QueryResult:
     def total_temp_mb(self) -> float:
         return sum(m.spill.temp_mb for m in self.metrics)
 
+    @property
+    def total_host_syncs(self) -> int:
+        return sum(m.host_syncs for m in self.metrics)
+
 
 class Executor:
     """Walks a plan; resolves deferred join/sort decision points at run time."""
 
     def __init__(self, work_mem: int, policy: str = "auto",
                  selector: Optional[PathSelector] = None,
-                 spill_root: Optional[str] = None):
+                 spill_root: Optional[str] = None,
+                 fuse: bool = True):
         if policy not in ("auto", "linear", "tensor"):
             raise ValueError(policy)
         force = None if policy == "auto" else policy
@@ -105,15 +130,98 @@ class Executor:
             self.selector.force = force
         self.work_mem = work_mem
         self.spill_root = spill_root
+        self.fuse = fuse
 
     def execute(self, plan) -> QueryResult:
         metrics: List[OpMetrics] = []
         decisions: List[Decision] = []
+
+        # fused device-resident fast path for recognized fragments
+        if self.fuse and self.selector.force != "linear":
+            fused = self._try_fused(plan, metrics, decisions)
+            if fused is not None:
+                return fused
+
         with SpillManager(self.spill_root) as mgr:
             out = self._exec(plan, metrics, decisions, mgr)
+            out = self._materialize_root(out, metrics)
         if isinstance(out, Relation):
             return QueryResult(out, None, metrics, decisions)
         return QueryResult(None, float(out), metrics, decisions)
+
+    # -- fused fragment dispatch -------------------------------------------
+    def _try_fused(self, plan, metrics, decisions) -> Optional[QueryResult]:
+        from .fused import match_fragment, run_fused
+
+        frag = match_fragment(plan)
+        if frag is None:
+            return None
+        spec, build, probe = frag
+        decision = self.selector.choose_join(build, probe, spec.join_key)
+        if decision.path != "tensor":
+            return None
+        decisions.append(decision)
+        try:
+            result, m = run_fused(spec, build, probe,
+                                  decision_reason=decision.reason)
+        except Exception:
+            # e.g. a predicate that cannot trace (np.nonzero & friends):
+            # fall back to the generic walk, which evaluates it on host
+            decisions.pop()
+            return None
+        m.decision_reason = decision.reason
+        metrics.append(m)
+        if isinstance(result, Relation):
+            return QueryResult(result, None, metrics, decisions)
+        return QueryResult(None, float(result), metrics, decisions)
+
+    # -- root materialization ----------------------------------------------
+    def _materialize_root(self, out, metrics):
+        """The single host-materialization point of a device-resident query."""
+        if isinstance(out, DeviceRelation):
+            with Timer() as t:
+                rel = out.to_host()
+            metrics.append(OpMetrics(
+                op="materialize", path="tensor", rows_in=len(out),
+                rows_out=len(rel), wall_s=t.elapsed, spill=SpillAccount(),
+                host_syncs=1))
+            return rel
+        if isinstance(out, _DeviceScalar):
+            # 0-d device scalar from an Aggregate over a device relation;
+            # one fetch brings the value and its supporting row count
+            with Timer() as t:
+                import jax
+                val, n_valid = (float(x) for x in
+                                jax.device_get((out.value, out.n_valid)))
+            metrics.append(OpMetrics(
+                op="materialize", path="tensor", rows_in=1, rows_out=1,
+                wall_s=t.elapsed, spill=SpillAccount(), host_syncs=1))
+            if out.fn in ("min", "max") and n_valid == 0:
+                raise ValueError(
+                    f"{out.fn} over an empty result has no identity")
+            return val
+        return out
+
+    @staticmethod
+    def _lower_for_linear(*rels):
+        """Lower device relations for a linear-path operator (regime
+        crossing).  Returns the host relations plus the number of
+        device→host transfers performed, which the caller charges to the
+        operator that demanded the lowering."""
+        out = []
+        syncs = 0
+        for rel in rels:
+            if isinstance(rel, DeviceRelation):
+                rel = rel.to_host()
+                syncs += 1
+            out.append(rel)
+        return (*out, syncs)
+
+    @staticmethod
+    def _to_device(rel) -> DeviceRelation:
+        if isinstance(rel, DeviceRelation):
+            return rel
+        return DeviceRelation.from_host(rel)
 
     # -- node dispatch -----------------------------------------------------
     def _exec(self, node, metrics, decisions, mgr):
@@ -121,6 +229,21 @@ class Executor:
             return node.relation
         if isinstance(node, Filter):
             child = self._exec(node.child, metrics, decisions, mgr)
+            if isinstance(child, DeviceRelation):
+                try:
+                    import jax.numpy as jnp
+                    mask = jnp.asarray(node.predicate(child), bool)
+                    return child.mask_and(mask)
+                except Exception:
+                    # predicate needs host numpy: a real regime crossing,
+                    # accounted against this operator
+                    n_in = len(child)
+                    with Timer() as t:
+                        child = child.to_host()
+                    metrics.append(OpMetrics(
+                        op="filter_materialize", path="tensor",
+                        rows_in=n_in, rows_out=len(child), wall_s=t.elapsed,
+                        spill=SpillAccount(), host_syncs=1))
             mask = node.predicate(child)
             return child.take(np.nonzero(mask)[0])
         if isinstance(node, Join):
@@ -129,9 +252,13 @@ class Executor:
             decision = self.selector.choose_join(build, probe, node.key)
             decisions.append(decision)
             if decision.path == "tensor":
-                out, m = tensor_join(build, probe, node.key)
+                out, m = tensor_join_device(self._to_device(build),
+                                            self._to_device(probe), node.key)
             else:
-                out, m = hash_join_linear(build, probe, node.key, self.work_mem, mgr)
+                build, probe, syncs = self._lower_for_linear(build, probe)
+                out, m = hash_join_linear(build, probe, node.key,
+                                          self.work_mem, mgr)
+                m.host_syncs += syncs
             m.decision_reason = decision.reason
             metrics.append(m)
             return out
@@ -140,29 +267,36 @@ class Executor:
             decision = self.selector.choose_sort(child, node.keys)
             decisions.append(decision)
             if decision.path == "tensor":
-                out, m = tensor_sort(child, node.keys)
+                out, m = tensor_sort_device(self._to_device(child), node.keys)
             else:
+                child, syncs = self._lower_for_linear(child)
                 out, m = sort_linear(child, node.keys, self.work_mem, mgr)
+                m.host_syncs += syncs
             m.decision_reason = decision.reason
             metrics.append(m)
             return out
         if isinstance(node, GroupBy):
             child = self._exec(node.child, metrics, decisions, mgr)
-            from .aggregate import group_aggregate_linear, group_aggregate_tensor
+            from .aggregate import group_aggregate_device, group_aggregate_linear
             # GROUP BY is the third linearizing operator: the group hash
             # table is the linearized intermediate; selection mirrors sort
             decision = self.selector.choose_sort(child, [node.key])
             decisions.append(decision)
             if decision.path == "tensor":
-                out, m = group_aggregate_tensor(child, node.key, node.values)
+                out, m = group_aggregate_device(self._to_device(child),
+                                                node.key, node.values)
             else:
+                child, syncs = self._lower_for_linear(child)
                 out, m = group_aggregate_linear(child, node.key, node.values,
                                                 self.work_mem, mgr)
+                m.host_syncs += syncs
             m.decision_reason = decision.reason
             metrics.append(m)
             return out
         if isinstance(node, Aggregate):
             child = self._exec(node.child, metrics, decisions, mgr)
+            if isinstance(child, DeviceRelation):
+                return _device_aggregate(child, node.column, node.fn)
             col = child[node.column]
             if node.fn == "sum":
                 return float(col.sum())
@@ -174,3 +308,40 @@ class Executor:
                 return float(col.max())
             raise ValueError(node.fn)
         raise TypeError(f"unknown plan node {node!r}")
+
+
+@dataclasses.dataclass
+class _DeviceScalar:
+    """A deferred aggregate: the 0-d device value plus the valid-row count
+    backing it (min/max over zero rows has no identity and must error at
+    materialization, matching the host path's numpy reduction)."""
+    value: object
+    n_valid: object
+    fn: str
+
+
+def _device_aggregate(rel: DeviceRelation, column: str, fn: str) -> _DeviceScalar:
+    """Masked scalar reduction on device; the root fetches the 0-d result."""
+    import jax.numpy as jnp
+
+    col = rel.col(column)
+    valid = rel.valid
+    is_int = jnp.issubdtype(col.dtype, jnp.integer)
+    n_valid = (jnp.asarray(col.shape[0], jnp.int64) if valid is None
+               else valid.sum())
+    if fn == "sum":
+        if valid is None:
+            out = col.sum()
+        else:
+            out = jnp.where(valid, col, jnp.asarray(0, col.dtype)).sum()
+    elif fn == "count":
+        out = n_valid
+    elif fn == "min":
+        fill = jnp.iinfo(col.dtype).max if is_int else jnp.inf
+        out = (col if valid is None else jnp.where(valid, col, fill)).min()
+    elif fn == "max":
+        fill = jnp.iinfo(col.dtype).min if is_int else -jnp.inf
+        out = (col if valid is None else jnp.where(valid, col, fill)).max()
+    else:
+        raise ValueError(fn)
+    return _DeviceScalar(out, n_valid, fn)

@@ -1,0 +1,501 @@
+"""Fused device-resident pipelines: Join→[Filter]→[Sort]→[Aggregate] as ONE
+jitted program.
+
+The seed executor lowered every intermediate to a host-numpy Relation between
+operators — its own premature materialization.  This module compiles the
+common pipeline fragment into a single XLA program that:
+
+  * carries **gather indices** between the fused operators (late
+    materialization): the join emits index arrays, the filter emits a mask,
+    the sort permutes the indices — payload columns are gathered on device
+    only at the moment a stage actually consumes them, and columns nobody
+    consumes never move at all;
+  * keeps every shape **static and bucketed**: input columns are padded to
+    power-of-two buckets and join capacity is a power-of-two bucket, so
+    repeated queries (even with drifting row counts) hit the compile cache
+    instead of recompiling — cache keys are
+    ``(fragment shape, capacity, input buckets, dtypes, num sort keys, agg)``;
+  * performs **≤ 1 device→host transfer per query** on the happy path: the
+    single batched fetch of the root result (plus the piggybacked exact match
+    count).  If the optimistic capacity bucket overflows — detected from that
+    same fetch, never from a separate sync — the driver re-runs at the exact
+    bucket, which the cache then holds for every later query of that shape.
+
+Host-side planning (capacity estimation from a key sample) reads only the
+numpy inputs and costs no device traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import OpMetrics, SpillAccount, Timer
+from .relation import Relation
+from .tensor_engine import capacity_bucket
+
+__all__ = ["FusedSpec", "match_fragment", "run_fused", "pipeline_cache_info",
+           "pipeline_cache_clear"]
+
+_I64_MAX = np.iinfo(np.int64).max
+
+
+# ---------------------------------------------------------------------------
+# Fragment description + plan matching
+# ---------------------------------------------------------------------------
+
+import types
+
+_VALUE_TYPES = (int, float, complex, bool, str, bytes, type(None),
+                types.ModuleType)
+
+
+def _value_safe(v) -> bool:
+    """Is ``v`` safe to compare *by value* in a cache key?  Only immutable
+    primitives (and module references, which act as namespaces) qualify —
+    an object with the default identity hash can mutate underneath while
+    its key stays equal, which would resurrect a stale traced program."""
+    if isinstance(v, tuple):
+        return all(_value_safe(x) for x in v)
+    return isinstance(v, _VALUE_TYPES)
+
+
+def _predicate_key(fn: Optional[Callable]):
+    """Cache identity for a filter predicate.
+
+    Plans typically rebuild their predicate lambda per query; keying on
+    ``id(fn)`` would miss the cache every time and pin each dead lambda
+    alive inside a compiled program.  Identical code at the same source
+    location with equal closure/default/global captures is the same
+    predicate — but only when every captured value is value-comparable
+    (:func:`_value_safe`).  Anything else (mutable objects, arrays, nested
+    functions) falls back to object identity: fresh lambdas then re-trace
+    (correct, just slower), and a *reused* lambda over mutated state keeps
+    jax.jit's own closed-over-state semantics.
+    """
+    if fn is None:
+        return None
+    try:
+        code = fn.__code__
+        cells = tuple(c.cell_contents for c in (fn.__closure__ or ()))
+        # referenced globals are baked into the traced program too — a
+        # module-level THRESHOLD change must be a different cache entry
+        globs = tuple((nm, fn.__globals__.get(nm)) for nm in code.co_names)
+        defaults = fn.__defaults__ or ()
+        if not (_value_safe(cells) and _value_safe(defaults)
+                and all(_value_safe(v) for _, v in globs)):
+            return ("id", id(fn))
+        key = ("code", code.co_filename, code.co_firstlineno, code.co_code,
+               code.co_consts, cells, globs, defaults)
+        hash(key)
+        return key
+    except Exception:
+        return ("id", id(fn))
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSpec:
+    """A fusable plan fragment rooted at Aggregate or Sort over a Scan join."""
+
+    join_key: str
+    filter_fn: Optional[Callable]  # predicate over a column view, or None
+    sort_keys: Tuple[str, ...]     # () = no sort stage
+    agg: Optional[Tuple[str, str]]  # (column, fn) for a scalar root, or None
+
+    def cache_signature(self) -> Tuple:
+        return (self.join_key, _predicate_key(self.filter_fn),
+                self.sort_keys, self.agg)
+
+
+def match_fragment(plan):
+    """Recognize Aggregate?(Sort?(Filter?(Join(Scan, Scan)))) fragments.
+
+    Returns ``(spec, build_relation, probe_relation)`` or None.  At least one
+    of the Sort/Aggregate stages must be present (a bare join gains nothing
+    from fusion over the device-resident per-op path).
+    """
+    from .executor import Aggregate, Filter, Join, Scan, Sort
+
+    node = plan
+    agg = None
+    sort_keys: Tuple[str, ...] = ()
+    filter_fn = None
+    if isinstance(node, Aggregate):
+        agg = (node.column, node.fn)
+        node = node.child
+    if isinstance(node, Sort):
+        sort_keys = tuple(node.keys)
+        node = node.child
+    if isinstance(node, Filter):
+        filter_fn = node.predicate
+        node = node.child
+    if not isinstance(node, Join):
+        return None
+    if not (isinstance(node.build, Scan) and isinstance(node.probe, Scan)):
+        return None
+    if agg is None and not sort_keys:
+        return None
+    build, probe = node.build.relation, node.probe.relation
+    if len(build) == 0 or len(probe) == 0:
+        return None  # degenerate inputs keep the generic path's exact semantics
+    return (FusedSpec(node.key, filter_fn, sort_keys, agg), build, probe)
+
+
+# ---------------------------------------------------------------------------
+# Column view: late materialization inside the traced program
+# ---------------------------------------------------------------------------
+
+class _JoinView:
+    """Column access over the joined index space; gathers on first touch only.
+
+    Presents the joined schema (probe columns under their own names, build
+    columns as ``b_<name>``, probe's key column under the join key).  Filter
+    predicates receive this view — numpy-style expressions trace through it.
+    """
+
+    def __init__(self, bcols, pcols, key, build_idx, probe_idx):
+        self._bcols = bcols
+        self._pcols = pcols
+        self._key = key
+        self._bidx = build_idx
+        self._pidx = probe_idx
+        self._cache: Dict[str, jnp.ndarray] = {}
+
+    def names(self):
+        out = list(self._pcols)
+        out += [f"b_{n}" for n in self._bcols if n != self._key]
+        return out
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        if name not in self._cache:
+            if name in self._pcols:
+                self._cache[name] = jnp.take(self._pcols[name], self._pidx)
+            elif name.startswith("b_") and name[2:] in self._bcols:
+                self._cache[name] = jnp.take(self._bcols[name[2:]], self._bidx)
+            else:
+                raise KeyError(name)
+        return self._cache[name]
+
+
+# ---------------------------------------------------------------------------
+# Program construction + shape-bucketed compile cache
+# ---------------------------------------------------------------------------
+
+class _PipelineCache:
+    """Explicit compile cache keyed on the bucketed shape signature.
+
+    jit would deduplicate compilations on its own, but an explicit cache (a)
+    avoids re-tracing the program closure per query and (b) exposes hit/miss
+    counters that tests use to prove shape bucketing prevents recompile
+    churn."""
+
+    def __init__(self):
+        self._programs: Dict[Tuple, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: Tuple, builder: Callable[[], Callable]) -> Callable:
+        prog = self._programs.get(key)
+        if prog is None:
+            self.misses += 1
+            prog = builder()
+            self._programs[key] = prog
+        else:
+            self.hits += 1
+        return prog
+
+    def info(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "programs": len(self._programs)}
+
+    def clear(self) -> None:
+        self._programs.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+_CACHE = _PipelineCache()
+
+
+def pipeline_cache_info() -> Dict[str, int]:
+    return _CACHE.info()
+
+
+def pipeline_cache_clear() -> None:
+    _CACHE.clear()
+
+
+def _join_sorted(bk, pk, n_build, n_probe, capacity):
+    """General join core: sorted coordinate alignment (one device sort)."""
+    B = bk.shape[0]
+    P = pk.shape[0]
+    iota_b = jnp.arange(B)
+    iota_p = jnp.arange(P)
+    # bucket padding rows sort to the tail and can never match
+    bk_m = jnp.where(iota_b < n_build, bk, _I64_MAX)
+    order = jnp.argsort(bk_m, stable=True)
+    sk = jnp.take(bk_m, order)
+    left = jnp.searchsorted(sk, pk, side="left")
+    right = jnp.searchsorted(sk, pk, side="right")
+    counts = right - left
+    # padded probe rows contribute nothing; a real probe key equal to the
+    # int64 sentinel would false-match padded build rows, so it is
+    # excluded (documented key-domain contract)
+    counts = jnp.where((iota_p < n_probe) & (pk != _I64_MAX), counts, 0)
+    ends = jnp.cumsum(counts)
+    starts = ends - counts
+    total = ends[-1]
+    slot = jnp.arange(capacity, dtype=ends.dtype)
+    # expansion by scan, not binary search: scatter each matched probe row's
+    # index at its start slot, then forward-fill with a running max
+    seed_slots = jnp.full((capacity + 1,), -1, jnp.int64)
+    tgt = jnp.where(counts > 0, jnp.minimum(starts, capacity), capacity)
+    seeded = seed_slots.at[tgt].max(iota_p)[:capacity]
+    probe_idx = jnp.maximum(jax.lax.cummax(seeded), 0)
+    build_pos = left[probe_idx] + (slot - starts[probe_idx])
+    build_idx = jnp.take(order, jnp.clip(build_pos, 0, B - 1))
+    valid = slot < total
+    has_dup = jnp.asarray(False)
+    return build_idx, probe_idx, valid, total, has_dup
+
+
+def _join_dense(bk, pk, n_build, n_probe, capacity, domain: int, kmin):
+    """Dense-domain join core: the key IS a coordinate axis.
+
+    When the build key domain is dense enough to materialize as an axis of
+    length ``domain`` (a static power-of-two bucket; ``kmin`` is a traced
+    offset) and build keys are unique (PK-FK joins), alignment is direct
+    scatter/gather addressing — NO device sort at all.  Uniqueness is
+    *verified on device* and the flag rides back with the result fetch; the
+    driver re-runs on the sorted core if the optimistic choice was wrong.
+    Slot ``domain`` of every scatter target is the spill-over slot for rows
+    that must not write (bucket padding / out-of-domain keys).
+    """
+    B = bk.shape[0]
+    P = pk.shape[0]
+    iota_b = jnp.arange(B)
+    iota_p = jnp.arange(P)
+    bk0 = bk - kmin
+    b_live = iota_b < n_build
+    bk0c = jnp.where(b_live & (bk0 >= 0) & (bk0 < domain), bk0, domain)
+    cnt = jnp.zeros((domain + 1,), jnp.int32).at[bk0c].add(1)
+    has_dup = cnt[:domain].max() > 1
+    inv = jnp.zeros((domain + 1,), jnp.int64).at[bk0c].set(iota_b)
+    pk0 = pk - kmin
+    p_live = (iota_p < n_probe) & (pk0 >= 0) & (pk0 < domain)
+    pk0c = jnp.where(p_live, pk0, domain)
+    matched = p_live & (cnt[pk0c] > 0)
+    ends = jnp.cumsum(matched.astype(jnp.int64))
+    total = ends[-1]
+    slot = jnp.arange(capacity, dtype=jnp.int64)
+    pos = jnp.where(matched, jnp.minimum(ends - 1, capacity - 1), capacity)
+    probe_idx = jnp.zeros((capacity + 1,), jnp.int64).at[pos].max(iota_p)[:capacity]
+    build_idx = jnp.take(inv, jnp.take(pk0c, probe_idx))
+    valid = slot < total
+    return build_idx, probe_idx, valid, total, has_dup
+
+
+def _build_program(spec: FusedSpec, key: str, capacity: int,
+                   dense_domain: Optional[int] = None):
+    """Trace-time closure for one (fragment, capacity, bucket) cache entry.
+
+    ``dense_domain`` (a static power-of-two bucket) selects the sort-free
+    coordinate join core; the domain offset ``kmin`` stays a traced scalar so
+    drifting key ranges reuse the compiled program.
+    """
+
+    def program(bcols: Dict[str, jnp.ndarray], pcols: Dict[str, jnp.ndarray],
+                n_build, n_probe, kmin):
+        # join coordinates are int64 (same coercion as tensor_join); the
+        # view/output below serves the ORIGINAL key column — dtype and
+        # values of result columns never depend on fusion
+        bk = bcols[key].astype(jnp.int64)
+        pk = pcols[key].astype(jnp.int64)
+        if dense_domain is not None:
+            build_idx, probe_idx, valid, total, has_dup = _join_dense(
+                bk, pk, n_build, n_probe, capacity, dense_domain, kmin)
+        else:
+            build_idx, probe_idx, valid, total, has_dup = _join_sorted(
+                bk, pk, n_build, n_probe, capacity)
+
+        view = _JoinView(bcols, pcols, key, build_idx, probe_idx)
+        if spec.filter_fn is not None:
+            mask = jnp.asarray(spec.filter_fn(view), bool)
+            valid = valid & mask
+
+        perm = None
+        if spec.sort_keys:
+            # ONE multi-operand lexicographic device sort: key axes stay
+            # separate operands (no linearization into a composite scalar)
+            # and the permutation rides as the trailing payload.  Invalid
+            # rows sink by pinning their most-significant key to the dtype
+            # maximum — their relative position among real max-key rows is
+            # irrelevant because only valid rows survive materialization.
+            keys0 = [view[k] for k in spec.sort_keys]
+            msk = keys0[0]
+            if jnp.issubdtype(msk.dtype, jnp.integer):
+                fill = jnp.iinfo(msk.dtype).max
+            else:
+                fill = jnp.inf
+            operands = [jnp.where(valid, msk, fill)] + keys0[1:]
+            operands.append(jnp.arange(capacity, dtype=jnp.int32))
+            sorted_ops = jax.lax.sort(tuple(operands), dimension=0,
+                                      is_stable=True,
+                                      num_keys=len(operands) - 1)
+            perm = sorted_ops[-1]
+
+        if spec.agg is not None:
+            col_name, fn = spec.agg
+            col = view[col_name]
+            v = valid if perm is None else jnp.take(valid, perm)
+            c = col if perm is None else jnp.take(col, perm)
+            # integer columns reduce in int64 (exact, matches the host path
+            # bit-for-bit — f64 would lose integer sums past 2^53)
+            is_int = jnp.issubdtype(c.dtype, jnp.integer)
+            if fn == "sum":
+                zero = jnp.asarray(0, c.dtype)
+                scalar = jnp.where(v, c, zero).sum()
+            elif fn == "count":
+                scalar = v.sum().astype(jnp.int64)
+            elif fn == "min":
+                fill = jnp.iinfo(c.dtype).max if is_int else jnp.inf
+                scalar = jnp.where(v, c, fill).min()
+            elif fn == "max":
+                fill = jnp.iinfo(c.dtype).min if is_int else -jnp.inf
+                scalar = jnp.where(v, c, fill).max()
+            else:
+                raise ValueError(fn)
+            # agg_n rides the fetch so the driver can reject min/max over an
+            # empty result (the fill value is not a legitimate answer) the
+            # way the host path's numpy reduction does
+            return {"total": total, "has_dup": has_dup, "scalar": scalar,
+                    "agg_n": v.sum()}
+
+        # relation root (sort is the last stage): gather the full joined
+        # schema through the sorted indices — the only payload gathers in
+        # the whole pipeline, and they happen once, on device
+        out_cols = {name: (view[name] if perm is None
+                           else jnp.take(view[name], perm))
+                    for name in view.names()}
+        out_valid = valid if perm is None else jnp.take(valid, perm)
+        return {"total": total, "has_dup": has_dup, "cols": out_cols,
+                "valid": out_valid}
+
+    return jax.jit(program)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+def _host_plan(build: Relation, probe: Relation, key: str):
+    """Host-side planning from the numpy inputs — free of device traffic.
+
+    Returns ``(capacity, dense_domain, kmin)``: an optimistic capacity bucket
+    from a key sample, and — when the build key domain is dense enough to
+    materialize as a coordinate axis and the sample predicts unique keys —
+    the power-of-two domain bucket for the sort-free dense join core.  Both
+    predictions are *verified on device* (overflow / has_dup piggyback on the
+    result fetch), so a wrong guess costs one retry, never a wrong answer.
+    """
+    bk = np.asarray(build[key])
+    sample = bk[: min(len(bk), 65536)]
+    card = max(1, len(np.unique(sample)))
+    dup = max(1.0, len(sample) / card)
+    capacity = capacity_bucket(int(len(probe) * dup))
+    dense_domain = None
+    kmin = 0
+    if dup == 1.0:
+        kmin = int(bk.min())
+        width = int(bk.max()) - kmin + 1
+        if width <= 4 * capacity_bucket(len(bk)):
+            dense_domain = capacity_bucket(width)
+    return capacity, dense_domain, kmin
+
+
+def _pad_pow2(col: np.ndarray, bucket: int) -> jnp.ndarray:
+    pad = bucket - len(col)
+    if pad:
+        col = np.concatenate([col, np.zeros(pad, col.dtype)])
+    return jnp.asarray(col)
+
+
+def _device_columns(rel: Relation, bucket: int) -> Dict[str, jnp.ndarray]:
+    """Bucket-padded device uploads of a relation's columns (original
+    dtypes), cached on the Relation instance — base tables are effectively
+    pinned device-resident, so repeated queries over the same Scan pay zero
+    re-upload (Relations are immutable by convention)."""
+    cache = rel.__dict__.setdefault("_device_cols", {})
+    out = {}
+    for name, col in rel.columns.items():
+        ck = (name, bucket)
+        if ck not in cache:
+            cache[ck] = _pad_pow2(col, bucket)
+        out[name] = cache[ck]
+    return out
+
+
+def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
+              decision_reason: str = "") -> Tuple[object, OpMetrics]:
+    """Execute a fused fragment; returns (Relation | float, OpMetrics).
+
+    Happy path: one compiled program launch + one batched device→host fetch.
+    Capacity overflow (optimistic bucket too small) re-runs once at the exact
+    bucket; both programs stay cached for subsequent queries.
+    """
+    n_build, n_probe = len(build), len(probe)
+    b_bucket = capacity_bucket(n_build)
+    p_bucket = capacity_bucket(n_probe)
+    syncs = 0
+    with Timer() as t:
+        # host planning is part of the query's wall time (the per-op
+        # baseline pays for its planning inside its timers too)
+        capacity, dense_domain, kmin = _host_plan(build, probe, spec.join_key)
+        bcols = _device_columns(build, b_bucket)
+        pcols = _device_columns(probe, p_bucket)
+        dtypes = tuple(sorted((k, str(v.dtype)) for k, v in bcols.items()))
+        dtypes += tuple(sorted((k, str(v.dtype)) for k, v in pcols.items()))
+        while True:
+            cache_key = (spec.cache_signature(), capacity, b_bucket, p_bucket,
+                         dense_domain, dtypes)
+            prog = _CACHE.get(
+                cache_key,
+                lambda: _build_program(spec, spec.join_key, capacity,
+                                       dense_domain))
+            out = prog(bcols, pcols, n_build, n_probe, kmin)
+            fetched = jax.device_get(out)  # THE host sync of the query
+            syncs += 1
+            total = int(fetched["total"])
+            if dense_domain is not None and bool(fetched["has_dup"]):
+                dense_domain = None  # optimistic unique-key guess was wrong
+                continue
+            if total <= capacity:
+                break
+            capacity = capacity_bucket(total)  # rare: optimistic bucket overflowed
+        if spec.agg is not None:
+            if spec.agg[1] in ("min", "max") and int(fetched["agg_n"]) == 0:
+                raise ValueError(
+                    f"{spec.agg[1]} over an empty result has no identity")
+            result = float(fetched["scalar"])
+            rows_out = 1
+        else:
+            keep = np.nonzero(np.asarray(fetched["valid"]))[0]
+            result = Relation({k: np.asarray(v)[keep]
+                               for k, v in fetched["cols"].items()})
+            rows_out = len(result)
+    metrics = OpMetrics(
+        op="fused_pipeline",
+        path="tensor",
+        rows_in=n_build + n_probe,
+        rows_out=rows_out,
+        wall_s=t.elapsed,
+        spill=SpillAccount(),
+        peak_working_set_bytes=(b_bucket + p_bucket) * 8 * 3
+        + capacity * 8 * (3 + len(spec.sort_keys)),
+        decision_reason=decision_reason,
+        host_syncs=syncs,
+    )
+    return result, metrics

@@ -65,6 +65,11 @@ class OpMetrics:
     spill: SpillAccount
     peak_working_set_bytes: int = 0
     decision_reason: str = ""
+    # Device→host synchronization events for this operator (a transfer of
+    # results or a blocking scalar read such as a match count).  The linear
+    # path is host-native and reports 0; the per-operator tensor path pays
+    # 1-2 per operator; the fused device-resident path pays 1 per *query*.
+    host_syncs: int = 0
 
     def as_row(self) -> Dict[str, object]:
         return {
@@ -77,6 +82,7 @@ class OpMetrics:
             "temp_blocks": self.spill.blocks,
             "passes": self.spill.partition_passes,
             "peak_ws_mb": round(self.peak_working_set_bytes / 1e6, 3),
+            "host_syncs": self.host_syncs,
             "reason": self.decision_reason,
         }
 

@@ -20,6 +20,7 @@ from typing import Optional
 import numpy as np
 
 from .cost_model import CostModel
+from .device_relation import DeviceRelation
 from .relation import Relation
 
 __all__ = ["Decision", "PathSelector"]
@@ -48,10 +49,16 @@ class PathSelector:
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
         n_b, n_p = len(build), len(probe)
-        # execution-time observables: scale + key cardinality → output estimate
-        sample = np.asarray(build[key][: min(n_b, 65536)])
-        card = max(1, len(np.unique(sample)))
-        dup = max(1.0, len(sample) / card)
+        # execution-time observables: scale + key cardinality → output estimate.
+        # A device-resident input is NOT sampled — pulling 64k keys to the
+        # host for planning would be exactly the regime-crossing round trip
+        # this layer exists to avoid; scale alone decides (dup ≈ 1).
+        if isinstance(build, DeviceRelation):
+            dup = 1.0
+        else:
+            sample = np.asarray(build[key][: min(n_b, 65536)])
+            card = max(1, len(np.unique(sample)))
+            dup = max(1.0, len(sample) / card)
         est_out = int(n_p * dup)
         est = self.model.estimate_join(
             n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out, self.work_mem)

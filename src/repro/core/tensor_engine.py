@@ -21,6 +21,15 @@ explicit* programs instead of pointer-chasing linearized intermediates:
     immediately reduced to linear comparison operations but sorted
     step-by-step within the multidimensional structure".
 
+Device residency (this layer's contract): join capacity is computed *on
+device* by the same sort+searchsorted the join itself uses — there is no
+separate host planning sort — and the only device→host traffic a per-operator
+call pays is one scalar match count plus one batched result fetch.  The
+``*_device`` variants take and return :class:`DeviceRelation` and pay *zero*
+syncs (or one scalar when a join must discover its capacity), deferring all
+materialization to the query root.  Capacities are padded to powers of two so
+repeated queries hit the jit compile cache instead of recompiling.
+
 All entry points are jit-compiled with static capacities, so the compiled
 program's working set is known at compile time — the tensor path cannot
 "discover" at runtime that it must spill.
@@ -28,8 +37,9 @@ program's working set is known at compile time — the tensor path cannot
 from __future__ import annotations
 
 import math
+import os
 from functools import partial
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +50,7 @@ import numpy as np
 # dtypes, so enabling x64 here is safe for the LM substrate.
 jax.config.update("jax_enable_x64", True)
 
+from .device_relation import DeviceColumn, DeviceRelation
 from .metrics import OpMetrics, SpillAccount, Timer
 from .relation import Relation
 
@@ -47,18 +58,117 @@ __all__ = [
     "tensor_join",
     "tensor_join_aggregate",
     "tensor_sort",
+    "tensor_join_device",
+    "tensor_sort_device",
     "join_capacity",
     "aligned_join_indices",
+    "capacity_bucket",
+    "sort_perm_device",
+    "use_pallas",
+    "segment_sum_dispatch",
 ]
+
+# Distinct sentinels so masked-out build rows can never meet masked-out probe
+# rows at the same key value.  Relations whose key domain includes these two
+# extreme int64 values are not supported by the masked device join (documented
+# contract; SQL bigint workloads never reach them).
+_BUILD_DEAD_KEY = -(2**62) - 11
+_PROBE_DEAD_KEY = -(2**62) - 22
 
 
 def _next_pow2(n: int) -> int:
     return 1 << max(4, int(math.ceil(math.log2(max(1, n)))))
 
 
+def capacity_bucket(n: int) -> int:
+    """Power-of-two shape bucket: the static capacity handed to jit.
+
+    Bucketing means nearby match counts land on the same compiled program —
+    the compile cache is keyed on (capacity, dtypes, num_keys), not on the
+    exact data-dependent count.
+    """
+    return _next_pow2(max(1, n))
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel dispatch (interpret-mode fallback on CPU)
+# ---------------------------------------------------------------------------
+
+def use_pallas(num_segments: Optional[int] = None) -> bool:
+    """Should the engine route segment/sort inner loops to Pallas kernels?
+
+    ``REPRO_PALLAS=1`` forces the kernels on (interpret mode off-TPU),
+    ``REPRO_PALLAS=0`` forces pure jnp, and the default ``auto`` uses the
+    kernels on TPU backends only — interpret mode is a correctness fallback,
+    not a fast path.  The one-hot segment-sum kernel is additionally gated to
+    modest segment counts (its accumulator tile is [tblk, num_segments]).
+    """
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env == "0":
+        return False
+    if num_segments is not None and num_segments > 4096:
+        return False
+    if env == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def segment_sum_dispatch(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                         num_segments: int, use_kernel: bool) -> jnp.ndarray:
+    """Segment sum via the Pallas kernel when requested, else pure jnp.
+
+    ``use_kernel`` is resolved by the caller *outside* any jit trace (via
+    :func:`use_pallas`) so the env-var toggle is honored per call, not frozen
+    into a compiled program.
+    """
+    if use_kernel:
+        from ..kernels.segment_join.ops import segment_sum as _pallas_segsum
+        return _pallas_segsum(seg_ids, values, num_segments).astype(values.dtype)
+    return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)
+
+
 # ---------------------------------------------------------------------------
 # Join: sorted coordinate alignment
 # ---------------------------------------------------------------------------
+
+def _join_plan_impl(build_keys, probe_keys):
+    """Shared device planning stage: ONE sort + searchsorted produces both the
+    exact match count (the capacity signal) and the alignment arrays the join
+    expansion reuses — the seed's duplicate host-side planning sort is gone."""
+    order = jnp.argsort(build_keys, stable=True)
+    sorted_keys = jnp.take(build_keys, order)
+    left = jnp.searchsorted(sorted_keys, probe_keys, side="left")
+    right = jnp.searchsorted(sorted_keys, probe_keys, side="right")
+    counts = right - left
+    ends = jnp.cumsum(counts)
+    starts = ends - counts
+    if counts.shape[0]:
+        total = ends[-1]
+    else:
+        total = jnp.asarray(0, ends.dtype)
+    return order, left, starts, ends, total
+
+
+_join_plan = jax.jit(_join_plan_impl)
+
+
+def _expand_join_impl(order, left, starts, ends, capacity: int):
+    n_build = order.shape[0]
+    n_probe = ends.shape[0]
+    slot = jnp.arange(capacity, dtype=ends.dtype)
+    # which probe row does output slot s belong to?
+    probe_idx = jnp.searchsorted(ends, slot, side="right")
+    probe_idx_c = jnp.minimum(probe_idx, max(n_probe - 1, 0))
+    offset = slot - starts[probe_idx_c]
+    build_pos = left[probe_idx_c] + offset
+    build_idx = jnp.take(order, jnp.clip(build_pos, 0, max(n_build - 1, 0)))
+    total = ends[-1] if n_probe else jnp.asarray(0, ends.dtype)
+    valid = slot < total
+    return build_idx, probe_idx_c, valid
+
+
+_expand_join = jax.jit(_expand_join_impl, static_argnames=("capacity",))
+
 
 @partial(jax.jit, static_argnames=("capacity",))
 def aligned_join_indices(
@@ -71,37 +181,26 @@ def aligned_join_indices(
     masks real matches, and ``total`` is the exact match count (callers can
     detect capacity overflow as ``total > capacity``).
     """
-    order = jnp.argsort(build_keys, stable=True)
-    sorted_keys = build_keys[order]
-    left = jnp.searchsorted(sorted_keys, probe_keys, side="left")
-    right = jnp.searchsorted(sorted_keys, probe_keys, side="right")
-    counts = right - left
-    ends = jnp.cumsum(counts)
-    starts = ends - counts
-    total = ends[-1] if counts.shape[0] else jnp.asarray(0, counts.dtype)
-
-    slot = jnp.arange(capacity, dtype=ends.dtype)
-    # which probe row does output slot s belong to?
-    probe_idx = jnp.searchsorted(ends, slot, side="right")
-    probe_idx_c = jnp.minimum(probe_idx, len(probe_keys) - 1)
-    offset = slot - starts[probe_idx_c]
-    build_pos = left[probe_idx_c] + offset
-    build_idx = order[jnp.clip(build_pos, 0, len(build_keys) - 1)]
-    valid = slot < total
-    return build_idx, jnp.asarray(probe_idx_c), valid, total
+    order, left, starts, ends, total = _join_plan_impl(build_keys, probe_keys)
+    build_idx, probe_idx, valid = _expand_join_impl(order, left, starts, ends,
+                                                    capacity)
+    return build_idx, probe_idx, valid, total
 
 
-def join_capacity(build_keys: np.ndarray, probe_keys: np.ndarray) -> int:
-    """Exact match count, computed on host (cheap O(N log N) planning step).
+def join_capacity(build_keys, probe_keys) -> int:
+    """Exact match count, computed ON DEVICE by the join's own planning stage.
 
     This models the "expected intermediate result size" signal the paper's
-    execution-time selector observes (§III.C); the static capacity handed to
-    the jitted join is padded to the next power of two for compile reuse.
+    execution-time selector observes (§III.C).  The seed ran a duplicate
+    host-side O(N log N) sort here; now the one device sort is shared with
+    the join itself and only the scalar count crosses to the host.
     """
-    sk = np.sort(np.asarray(build_keys))
-    left = np.searchsorted(sk, probe_keys, side="left")
-    right = np.searchsorted(sk, probe_keys, side="right")
-    return int((right - left).sum())
+    bk = jnp.asarray(build_keys)
+    pk = jnp.asarray(probe_keys)
+    if bk.shape[0] == 0 or pk.shape[0] == 0:
+        return 0
+    *_, total = _join_plan(bk, pk)
+    return int(total)
 
 
 def tensor_join(
@@ -110,7 +209,13 @@ def tensor_join(
     key: str,
     capacity: Optional[int] = None,
 ) -> Tuple[Relation, OpMetrics]:
-    """Tensor-path equi-join producing the same schema as the linear path."""
+    """Tensor-path equi-join producing the same schema as the linear path.
+
+    Host-Relation convenience API: internally runs the device-resident join
+    and pays exactly two host syncs — the scalar match count (capacity
+    discovery + overflow check) and one batched result fetch.  The seed paid
+    a full host planning sort plus one transfer per payload column.
+    """
     bk = np.asarray(build[key], dtype=np.int64)
     pk = np.asarray(probe[key], dtype=np.int64)
     if len(bk) == 0 or len(pk) == 0:
@@ -119,29 +224,31 @@ def tensor_join(
         return Relation(out), OpMetrics(
             op="hash_join", path="tensor", rows_in=len(build) + len(probe),
             rows_out=0, wall_s=0.0, spill=SpillAccount())
-    if capacity is None:
-        capacity = _next_pow2(max(1, join_capacity(bk, pk)))
     with Timer() as t:
-        build_idx, probe_idx, valid, total = aligned_join_indices(
-            jnp.asarray(bk), jnp.asarray(pk), capacity
-        )
-        jax.block_until_ready((build_idx, probe_idx, valid))
-        # Late materialization: gather payload columns only now, only valid rows.
-        n = int(total)
-        if n > capacity:
+        order, left, starts, ends, total = _join_plan(jnp.asarray(bk),
+                                                      jnp.asarray(pk))
+        n = int(total)  # host sync #1: one scalar, no data
+        if capacity is None:
+            capacity = capacity_bucket(n)
+        elif n > capacity:
             raise ValueError(f"capacity {capacity} < exact match count {n}")
-        b_idx = np.asarray(build_idx)[:n]
-        p_idx = np.asarray(probe_idx)[:n]
-        out = {}
+        build_idx, probe_idx, _valid = _expand_join(order, left, starts, ends,
+                                                    capacity)
+        b_idx = build_idx[:n]
+        p_idx = probe_idx[:n]
+        # Late materialization: gather payload columns ON DEVICE, only valid
+        # rows, then fetch everything in one batched transfer.
+        out_dev: Dict[str, jnp.ndarray] = {}
         for name, col in probe.columns.items():
-            out[name] = np.asarray(col)[p_idx]
+            out_dev[name] = jnp.take(jnp.asarray(col), p_idx)
         for name, col in build.columns.items():
             if name == key:
                 continue
-            out[f"b_{name}"] = np.asarray(col)[b_idx]
-        if not out:
-            out[key] = np.asarray(probe[key])[p_idx]
-        result = Relation(out)
+            out_dev[f"b_{name}"] = jnp.take(jnp.asarray(col), b_idx)
+        if not out_dev:
+            out_dev[key] = jnp.take(jnp.asarray(probe[key]), p_idx)
+        fetched = jax.device_get(out_dev)  # host sync #2: the result
+        result = Relation({k: np.asarray(v) for k, v in fetched.items()})
     peak = (
         bk.nbytes * 3  # keys + order + sorted copy
         + pk.nbytes * 3  # searchsorted operands
@@ -155,26 +262,101 @@ def tensor_join(
         wall_s=t.elapsed,
         spill=SpillAccount(),  # structurally zero: no spill regime exists
         peak_working_set_bytes=peak,
+        host_syncs=2,
     )
     return result, metrics
+
+
+def tensor_join_device(
+    build: DeviceRelation,
+    probe: DeviceRelation,
+    key: str,
+    capacity: Optional[int] = None,
+) -> Tuple[DeviceRelation, OpMetrics]:
+    """Device-resident equi-join: payload columns never move.
+
+    The output :class:`DeviceRelation` carries *gather indices* into the
+    input relations' base columns (late materialization) plus a validity
+    mask over the capacity-padded index space.  Host traffic: one scalar
+    match count when ``capacity`` must be discovered, otherwise zero.
+    """
+    if build.num_physical_rows == 0 or probe.num_physical_rows == 0:
+        cols = {name: c.take_lazy(jnp.zeros((0,), jnp.int64))
+                for name, c in probe.columns.items()}
+        cols.update({f"b_{name}": c.take_lazy(jnp.zeros((0,), jnp.int64))
+                     for name, c in build.columns.items() if name != key})
+        if not cols:
+            cols[key] = probe.columns[key].take_lazy(jnp.zeros((0,), jnp.int64))
+        return DeviceRelation(cols), OpMetrics(
+            op="hash_join", path="tensor",
+            rows_in=len(build) + len(probe), rows_out=0, wall_s=0.0,
+            spill=SpillAccount())
+    bk = build.col(key).astype(jnp.int64)
+    pk = probe.col(key).astype(jnp.int64)
+    # masked-out input rows must never match: move them to dead key values
+    if build.valid is not None:
+        bk = jnp.where(build.valid, bk, _BUILD_DEAD_KEY)
+    if probe.valid is not None:
+        pk = jnp.where(probe.valid, pk, _PROBE_DEAD_KEY)
+    with Timer() as t:
+        order, left, starts, ends, total = _join_plan(bk, pk)
+        # scalar sync: the capacity / overflow signal.  Even with an explicit
+        # capacity the count must be verified — silently truncating the join
+        # would corrupt results (the fused pipeline instead piggybacks this
+        # check on its single result fetch).
+        n = int(total)
+        syncs = 1
+        if capacity is None:
+            capacity = capacity_bucket(n)
+        elif n > capacity:
+            raise ValueError(f"capacity {capacity} < exact match count {n}")
+        build_idx, probe_idx, valid = _expand_join(order, left, starts, ends,
+                                                   capacity)
+        cols: Dict[str, DeviceColumn] = {}
+        for name, c in probe.columns.items():
+            cols[name] = c.take_lazy(probe_idx)
+        for name, c in build.columns.items():
+            if name == key:
+                continue
+            cols[f"b_{name}"] = c.take_lazy(build_idx)
+        if not cols:
+            cols[key] = probe.columns[key].take_lazy(probe_idx)
+        out = DeviceRelation(cols, valid=valid)
+    metrics = OpMetrics(
+        op="hash_join",
+        path="tensor",
+        rows_in=len(build) + len(probe),
+        rows_out=capacity,  # physical (padded) rows; logical count is masked
+        wall_s=t.elapsed,
+        spill=SpillAccount(),
+        peak_working_set_bytes=bk.nbytes * 3 + pk.nbytes * 3 + capacity * 8 * 3,
+        host_syncs=syncs,
+    )
+    return out, metrics
 
 
 # ---------------------------------------------------------------------------
 # Fused join + aggregate (join output never materialized)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("num_segments",))
+# Both relations' values are contracted at ONE explicit dtype.  With x64
+# enabled (module policy above) that is float64; the seed promoted build
+# values to f64 while always truncating probe values to f32, which made
+# Σ(b·p) silently lose probe precision.
+_AGG_DTYPE = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+@partial(jax.jit, static_argnames=("num_segments", "use_kernel"))
 def _join_aggregate(
-    build_keys, build_vals, probe_keys, probe_vals, num_segments: int
+    build_keys, build_vals, probe_keys, probe_vals, num_segments: int,
+    use_kernel: bool = False
 ):
-    seg_b = jax.ops.segment_sum(build_vals, build_keys, num_segments=num_segments)
-    cnt_b = jax.ops.segment_sum(
-        jnp.ones_like(build_vals), build_keys, num_segments=num_segments
-    )
-    seg_p = jax.ops.segment_sum(probe_vals, probe_keys, num_segments=num_segments)
-    cnt_p = jax.ops.segment_sum(
-        jnp.ones_like(probe_vals), probe_keys, num_segments=num_segments
-    )
+    seg_b = segment_sum_dispatch(build_vals, build_keys, num_segments, use_kernel)
+    cnt_b = segment_sum_dispatch(
+        jnp.ones_like(build_vals), build_keys, num_segments, use_kernel)
+    seg_p = segment_sum_dispatch(probe_vals, probe_keys, num_segments, use_kernel)
+    cnt_p = segment_sum_dispatch(
+        jnp.ones_like(probe_vals), probe_keys, num_segments, use_kernel)
     # SUM over join pairs of (b_val + p_val) decomposes along the key axis:
     #   sum_k [ cnt_p[k]*seg_b[k] + cnt_b[k]*seg_p[k] ]
     # and SUM of products contracts directly:  sum_k seg_b[k]*seg_p[k].
@@ -195,19 +377,19 @@ def tensor_join_aggregate(
     """SUM-style aggregates over the join result WITHOUT materializing it.
 
     Returns {count, sum_add, sum_prod} == aggregates over the (virtual) join
-    of ``build ⋈ probe``: pair count, Σ(b+p), Σ(b·p).
+    of ``build ⋈ probe``: pair count, Σ(b+p), Σ(b·p).  Both value columns are
+    contracted at one explicit dtype (:data:`_AGG_DTYPE`).
     """
     with Timer() as t:
         pairs, s_add, s_prod = _join_aggregate(
             jnp.asarray(build[key], jnp.int32),
-            jnp.asarray(build[build_val], jnp.float64)
-            if build[build_val].dtype.kind == "f"
-            else jnp.asarray(build[build_val], jnp.float32),
+            jnp.asarray(build[build_val], _AGG_DTYPE),
             jnp.asarray(probe[key], jnp.int32),
-            jnp.asarray(probe[probe_val], jnp.float32),
+            jnp.asarray(probe[probe_val], _AGG_DTYPE),
             key_domain,
+            use_kernel=use_pallas(key_domain),
         )
-        jax.block_until_ready((pairs, s_add, s_prod))
+        pairs, s_add, s_prod = jax.device_get((pairs, s_add, s_prod))
         out = {
             "count": float(pairs),
             "sum_add": float(s_add),
@@ -221,6 +403,7 @@ def tensor_join_aggregate(
         wall_s=t.elapsed,
         spill=SpillAccount(),
         peak_working_set_bytes=key_domain * 4 * 4 + build.nbytes() + probe.nbytes(),
+        host_syncs=1,
     )
     return out, metrics
 
@@ -229,26 +412,65 @@ def tensor_join_aggregate(
 # Sort: step-wise multi-key (stable LSD passes over key axes)
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("num_keys",))
-def _multikey_perm(key_cols: Tuple[jnp.ndarray, ...], num_keys: int) -> jnp.ndarray:
+@partial(jax.jit, static_argnames=("num_keys", "has_valid"))
+def _multikey_perm(key_cols: Tuple[jnp.ndarray, ...], valid, num_keys: int,
+                   has_valid: bool = False) -> jnp.ndarray:
     n = key_cols[0].shape[0]
     perm = jnp.arange(n)
     # least-significant key first; stability makes the composition lexicographic
     for i in range(num_keys - 1, -1, -1):
         idx = jnp.argsort(key_cols[i][perm], stable=True)
         perm = perm[idx]
+    if has_valid:
+        # one extra stable LSD pass on validity: masked rows sink to the tail
+        # without disturbing key order among live rows
+        idx = jnp.argsort(jnp.logical_not(valid)[perm], stable=True)
+        perm = perm[idx]
     return perm
+
+
+def _keys_fit_int32(key_cols) -> bool:
+    """Key columns the Pallas tile sorter can take without value loss: the
+    kernel casts to int32, so unsigned 32-bit (which would wrap negative)
+    needs headroom — only dtypes whose full range embeds in int32 qualify."""
+    def ok(dt):
+        if not jnp.issubdtype(dt, jnp.integer):
+            return False
+        info = jnp.iinfo(dt)
+        return info.min >= -(2**31) and info.max < 2**31
+    return all(ok(c.dtype) for c in key_cols)
+
+
+def sort_perm_device(key_cols: Tuple[jnp.ndarray, ...],
+                     valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Sort permutation over key axes, Pallas-tiled when keys fit int32.
+
+    The Pallas path (bitonic VMEM tile runs + XLA merge) engages under
+    :func:`use_pallas` for int32-representable keys; otherwise the pure-jnp
+    stable LSD passes run.  Masked rows always sink to the tail.
+    """
+    if valid is None and use_pallas() and _keys_fit_int32(key_cols):
+        from ..kernels.multikey_sort.ops import multikey_sort_lsd_padded
+        return multikey_sort_lsd_padded(tuple(key_cols))
+    return _multikey_perm(tuple(key_cols), valid, len(key_cols),
+                          has_valid=valid is not None)
 
 
 def tensor_sort(
     rel: Relation, keys: Sequence[str]
 ) -> Tuple[Relation, OpMetrics]:
-    """Tensor-path multi-key sort: per-axis stable passes, no key packing."""
+    """Tensor-path multi-key sort: per-axis stable passes, no key packing.
+
+    Host-Relation API: permutation *and* payload gathers run on device; one
+    batched fetch brings the result back (the seed fetched the permutation
+    and re-gathered every column on the host)."""
     key_cols = tuple(jnp.asarray(rel[k]) for k in keys)
     with Timer() as t:
-        perm = _multikey_perm(key_cols, len(keys))
-        perm = np.asarray(jax.block_until_ready(perm))
-        out = rel.take(perm)
+        perm = sort_perm_device(key_cols)
+        out_dev = {k: jnp.take(jnp.asarray(v), perm)
+                   for k, v in rel.columns.items()}
+        fetched = jax.device_get(out_dev)
+        out = Relation({k: np.asarray(v) for k, v in fetched.items()})
     peak = rel.nbytes() + len(rel) * 8 * 2
     metrics = OpMetrics(
         op="sort",
@@ -258,5 +480,31 @@ def tensor_sort(
         wall_s=t.elapsed,
         spill=SpillAccount(),
         peak_working_set_bytes=peak,
+        host_syncs=1,
+    )
+    return out, metrics
+
+
+def tensor_sort_device(
+    rel: DeviceRelation, keys: Sequence[str]
+) -> Tuple[DeviceRelation, OpMetrics]:
+    """Device-resident multi-key sort: zero host syncs.
+
+    Computes the permutation on device and composes it into the relation's
+    pending gather indices — payload columns are not touched."""
+    key_cols = tuple(rel.col(k) for k in keys)
+    with Timer() as t:
+        perm = sort_perm_device(key_cols, valid=rel.valid)
+        out = rel.take_lazy(perm)
+    peak = sum(c.dtype.itemsize for c in key_cols) * len(rel) + len(rel) * 8 * 2
+    metrics = OpMetrics(
+        op="sort",
+        path="tensor",
+        rows_in=len(rel),
+        rows_out=len(rel),
+        wall_s=t.elapsed,
+        spill=SpillAccount(),
+        peak_working_set_bytes=peak,
+        host_syncs=0,
     )
     return out, metrics

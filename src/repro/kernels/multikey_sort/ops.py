@@ -8,13 +8,22 @@ import jax.numpy as jnp
 
 from .kernel import bitonic_tile_sort_pallas
 
-__all__ = ["tile_sort", "multikey_sort_lsd"]
+__all__ = ["tile_sort", "multikey_sort_lsd", "multikey_sort_lsd_padded"]
+
+_I32_MAX = 2**31 - 1
 
 
 def _auto_interpret(interpret):
     if interpret is not None:
         return interpret
     return jax.default_backend() != "tpu"
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
 
 
 @partial(jax.jit, static_argnames=("tile", "interpret"))
@@ -28,7 +37,8 @@ def tile_sort(keys, vals, tile: int = 1024, interpret=None):
 def multikey_sort_lsd(key_cols, tile: int = 1024, interpret=None):
     """Stable LSD multi-key sort (paper §IV.B) with the Pallas tile sorter as
     the inner stage.  key_cols: tuple of [N] int32 arrays, most-significant
-    first.  Returns the permutation.
+    first.  Returns the permutation.  Requires N % tile == 0; the core engine
+    calls :func:`multikey_sort_lsd_padded` for arbitrary N.
 
     Each LSD pass: bitonic tile runs (VMEM) + one jnp merge of the sorted
     runs (argsort over run-local ranks is XLA's efficient merge path)."""
@@ -44,5 +54,36 @@ def multikey_sort_lsd(key_cols, tile: int = 1024, interpret=None):
         # merge of pre-sorted runs for XLA's sort
         merge = jnp.argsort(k_sorted, stable=True)
         take = v_sorted[merge]
+        perm = perm[take]
+    return perm
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def multikey_sort_lsd_padded(key_cols, tile: int = 1024, interpret=None):
+    """Arbitrary-N entry point for the kernel-path multi-key sort.
+
+    Pads each LSD pass to a tile multiple with INT32_MAX sentinel keys.  The
+    composite (key, position) tie-break makes every stage stable in the
+    original position, so padded entries — whose positions exceed every real
+    position — always land *after* real rows of equal key; dropping the tail
+    of the merged order recovers the exact permutation of the real rows.
+
+    Contract: key values must fit int32 and be < INT32_MAX (the sentinel);
+    the caller (core tensor engine) gates on dtype before dispatching here.
+    """
+    n = key_cols[0].shape[0]
+    if n == 0:
+        return jnp.arange(0, dtype=jnp.int32)
+    tile = min(tile, _next_pow2(n))
+    n_pad = -(-n // tile) * tile
+    perm = jnp.arange(n, dtype=jnp.int32)
+    pad = jnp.full((n_pad - n,), _I32_MAX, jnp.int32)
+    for col in key_cols[::-1]:
+        keyed = jnp.concatenate([col.astype(jnp.int32)[perm], pad])
+        pos = jnp.arange(n_pad, dtype=jnp.int32)
+        k_sorted, v_sorted = tile_sort(keyed, pos, tile=tile,
+                                       interpret=interpret)
+        merge = jnp.argsort(k_sorted, stable=True)
+        take = v_sorted[merge][:n]  # padded entries occupy the tail
         perm = perm[take]
     return perm

@@ -1,4 +1,11 @@
-"""Jit'd wrappers: segment sum + fused aggregate join on the kernel path."""
+"""Jit'd wrappers: segment sum + fused aggregate join on the kernel path.
+
+The raw Pallas kernel (:func:`segment_sum_pallas`) requires the row count to
+be a multiple of its tile size; these wrappers pad arbitrary relation sizes
+(segment id 0 with value 0 is sum-neutral) so the core engine can hand them
+real workloads.  Value dtype is preserved (float64 works in interpret mode,
+which is the CPU fallback); TPU hardware runs float32.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -20,10 +27,24 @@ def _auto_interpret(interpret):
 @partial(jax.jit, static_argnames=("num_segments", "tblk", "interpret"))
 def segment_sum(seg_ids, values, num_segments: int, tblk: int = 2048,
                 interpret=None):
-    return segment_sum_pallas(seg_ids.astype(jnp.int32),
-                              values.astype(jnp.float32), num_segments,
-                              tblk=min(tblk, seg_ids.shape[0]),
-                              interpret=_auto_interpret(interpret))
+    interpret = _auto_interpret(interpret)
+    n = seg_ids.shape[0]
+    if n == 0:
+        dt = values.dtype if values.dtype.kind == "f" else jnp.float32
+        return jnp.zeros((num_segments,), dt)
+    tblk = min(tblk, n)
+    vals = values
+    if vals.dtype == jnp.float64 and not interpret:
+        vals = vals.astype(jnp.float32)  # TPU hardware path has no f64
+    elif vals.dtype.kind not in "f":
+        vals = vals.astype(jnp.float32)
+    pad = (-n) % max(1, tblk)
+    seg = seg_ids.astype(jnp.int32)
+    if pad:
+        seg = jnp.concatenate([seg, jnp.zeros((pad,), jnp.int32)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad,), vals.dtype)])
+    return segment_sum_pallas(seg, vals, num_segments,
+                              tblk=tblk, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("num_segments", "interpret"))

@@ -6,6 +6,7 @@ sets on identical inputs, under any work_mem.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis; pip install -r requirements.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,6 +1,7 @@
 """Sort correctness: linear (in-memory + external) vs tensor multi-key path."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis; pip install -r requirements.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Relation, sort_linear, tensor_sort
