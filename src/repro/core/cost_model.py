@@ -25,18 +25,36 @@ import numpy as np
 
 from .linear_engine import MAX_FANOUT, MERGE_BUFFER_BYTES, table_bytes_estimate
 
-__all__ = ["CostConstants", "CostModel"]
+__all__ = ["CostConstants", "CostModel", "FragmentEstimate"]
 
 
 @dataclasses.dataclass
 class CostConstants:
+    """Host-dependent constants; defaults retuned (PR 2) from micro-runs of
+    the *actual* engines on the development host, not the seed's estimates.
+    The seed constants described a hypothetical fast linear path (20 ns/row,
+    1.2 ns/B of temp I/O) that underestimated the real spilling engine ~30x —
+    the direct cause of the N=50k selector regret.  ``calibrate()`` refits
+    everything here; the runtime feedback profile corrects residual drift."""
+
     # CPU work per row (seconds/row)
-    linear_row_cost: float = 2.0e-8
-    tensor_row_cost: float = 6.0e-8  # tensor path pays sort overhead at small N
-    # temp-file I/O cost (seconds/byte, counts write+read)
-    io_byte_cost: float = 1.2e-9
-    # fixed dispatch overhead of launching the tensor path (jit call, transfers)
-    tensor_fixed_cost: float = 3.0e-3
+    linear_row_cost: float = 1.8e-7
+    tensor_row_cost: float = 2.5e-7  # per-operator device-resident path
+    # temp-file I/O cost (seconds/byte, counts write+read).  Dominated by the
+    # partition/merge bookkeeping around the I/O, not raw disk bandwidth.
+    io_byte_cost: float = 2.0e-8
+    # fixed dispatch overhead of launching one tensor-path operator
+    tensor_fixed_cost: float = 1.5e-3
+    # -- v2: fused device-resident fragment terms ---------------------------
+    # ONE dispatch for a whole Join→[Filter]→[Sort]→[Aggregate] fragment:
+    # fusion amortizes the fixed cost across its operators
+    fused_fixed_cost: float = 8.0e-4
+    fused_row_cost: float = 2.0e-7   # per row through the fused program
+    # each device→host synchronization (blocking scalar read / result fetch)
+    host_sync_cost: float = 5.0e-5
+    # host→device transfer (seconds/byte); multiplied by the *pending* upload
+    # bytes — zero for base tables already resident in the device cache
+    h2d_byte_cost: float = 1.0e-10
 
 
 @dataclasses.dataclass
@@ -55,6 +73,18 @@ class SortEstimate:
     passes: int
     t_linear: float
     t_tensor: float
+
+
+@dataclasses.dataclass
+class FragmentEstimate:
+    """Plan-level estimate for a Join→[Filter]→[Sort]→[Aggregate] fragment."""
+
+    path_fits_mem: bool   # whole linear fragment (join AND sort) avoids spill
+    spill_bytes: int      # total predicted temp bytes across the fragment
+    passes: int
+    t_linear: float
+    t_tensor: float       # the FUSED device-resident pipeline
+    h2d_bytes: int        # pending host→device bytes charged to the tensor path
 
 
 class CostModel:
@@ -110,6 +140,53 @@ class CostModel:
                     + self.c.tensor_row_cost * n_rows * logn / 16 * num_keys)
         return SortEstimate(spill == 0, spill, passes, t_linear, t_tensor)
 
+    def estimate_fragment(self, n_build: int, n_probe: int, row_bytes_b: int,
+                          row_bytes_p: int, est_out: int, work_mem: int,
+                          num_sort_keys: int = 0, has_filter: bool = False,
+                          has_agg: bool = False,
+                          h2d_bytes: int = 0) -> FragmentEstimate:
+        """Cost a whole fusable fragment instead of its operators in isolation.
+
+        The linear side is the sum of its per-operator costs (join + sort over
+        the join output + filter/aggregate scans), each with its own spill
+        term.  The tensor side is the FUSED pipeline: ``fused_fixed_cost`` is
+        paid once for the entire fragment (fusion amortizes dispatch overhead
+        across operators), exactly one host sync is charged, and H2D transfer
+        is an explicit term over the *pending* upload bytes — zero when the
+        base tables are already device-resident.
+        """
+        join_spill, passes = self.join_spill_bytes(
+            n_build, n_probe, row_bytes_b, row_bytes_p, work_mem)
+        t_lin = (self.c.linear_row_cost * (n_build + n_probe + est_out)
+                 + self.alpha(join_spill))
+        spill = join_spill
+        logo = max(1.0, math.log2(max(2, est_out)))
+        if has_filter:
+            t_lin += self.c.linear_row_cost * est_out
+        if num_sort_keys:
+            out_row_bytes = row_bytes_b + row_bytes_p
+            s_spill, s_passes = self.sort_spill_bytes(
+                est_out, out_row_bytes, work_mem)
+            t_lin += (self.c.linear_row_cost * est_out * logo / 4
+                      + self.alpha(s_spill))
+            spill += s_spill
+            passes += s_passes
+        if has_agg:
+            t_lin += self.c.linear_row_cost * est_out
+
+        logb = max(1.0, math.log2(max(2, n_build)))
+        rows = n_build * logb / 20 + n_probe + est_out
+        if has_filter:
+            rows += est_out
+        if num_sort_keys:
+            rows += est_out * logo / 16 * num_sort_keys
+        rows += est_out  # aggregate reduction / root materialization gather
+        t_ten = (self.c.fused_fixed_cost + self.c.host_sync_cost
+                 + self.c.h2d_byte_cost * h2d_bytes
+                 + self.c.fused_row_cost * rows)
+        return FragmentEstimate(spill == 0, int(spill), passes, t_lin, t_ten,
+                                int(h2d_bytes))
+
     # -- calibration -----------------------------------------------------------
     def calibrate(self, n: int = 200_000, seed: int = 0) -> CostConstants:
         """Fit constants from micro-runs of both engines (paper: selector inputs
@@ -143,4 +220,66 @@ class CostModel:
         if io_bytes:
             self.c.io_byte_cost = max(
                 1e-11, (m_spill.wall_s - m_mem.wall_s) / io_bytes)
+        self._calibrate_fused(n, rng)
         return self.c
+
+    def _calibrate_fused(self, n: int, rng) -> None:
+        """Fit the v2 terms by micro-running the FUSED executor (PR 2): one
+        blocking scalar fetch for ``host_sync_cost``, a fresh column upload
+        for ``h2d_byte_cost``, and warm fused-fragment runs at two scales to
+        separate ``fused_fixed_cost`` from ``fused_row_cost``."""
+        import time
+
+        import jax
+        import jax.numpy as jnp
+
+        from .fused import FusedSpec, run_fused
+        from .relation import Relation
+
+        dev = jnp.asarray(1.0) + 0  # a 0-d value resident on device
+        jax.device_get(dev)
+        t0 = time.perf_counter()
+        reps = 64
+        for _ in range(reps):
+            jax.device_get(dev)
+        self.c.host_sync_cost = max(1e-7, (time.perf_counter() - t0) / reps)
+
+        col = rng.integers(0, 1 << 40, max(n, 1 << 16)).astype(np.int64)
+        best = math.inf
+        for _ in range(3):
+            fresh = col.copy()  # a new buffer cannot be device-cached
+            t0 = time.perf_counter()
+            jax.block_until_ready(jnp.asarray(fresh))
+            best = min(best, time.perf_counter() - t0)
+        self.c.h2d_byte_cost = max(1e-13, best / col.nbytes)
+
+        # warm fused Join→Sort→Aggregate fragments at two scales.  With the
+        # fragment's row-work model r(m), two walls give two unknowns:
+        #   wall(m) = fixed + sync + row_cost * r(m)
+        spec = FusedSpec(join_key="k", filter_fn=None, sort_keys=("k",),
+                         agg=("b_v", "sum"))
+
+        def rows_model(m: int) -> float:
+            logm = max(1.0, math.log2(max(2, m)))
+            return m * logm / 20 + m + m + m * logm / 16 + m
+
+        n_small = 4096
+        walls = {}
+        for m in (n_small, n):
+            build = Relation({"k": rng.permutation(m).astype(np.int64),
+                              "v": rng.integers(0, 1 << 30, m).astype(np.int64)})
+            probe = Relation({"k": rng.integers(0, m, m).astype(np.int64),
+                              "w": rng.integers(0, 1 << 30, m).astype(np.int64)})
+            run_fused(spec, build, probe)  # cold: compile + upload
+            best = math.inf
+            for _ in range(3):
+                _, metrics = run_fused(spec, build, probe)
+                best = min(best, metrics.wall_s)
+            walls[m] = best
+        d_rows = rows_model(n) - rows_model(n_small)
+        if n > n_small and d_rows > 0:
+            self.c.fused_row_cost = max(
+                1e-10, (walls[n] - walls[n_small]) / d_rows)
+        self.c.fused_fixed_cost = max(
+            1e-5, walls[n_small] - self.c.fused_row_cost * rows_model(n_small)
+            - self.c.host_sync_cost)

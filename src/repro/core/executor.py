@@ -114,6 +114,12 @@ class QueryResult:
     def total_host_syncs(self) -> int:
         return sum(m.host_syncs for m in self.metrics)
 
+    @property
+    def total_h2d_bytes(self) -> int:
+        """Host→device bytes this query transferred (0 when every base table
+        was already resident in the device column cache)."""
+        return sum(m.h2d_bytes for m in self.metrics)
+
 
 class Executor:
     """Walks a plan; resolves deferred join/sort decision points at run time."""
@@ -145,22 +151,70 @@ class Executor:
         with SpillManager(self.spill_root) as mgr:
             out = self._exec(plan, metrics, decisions, mgr)
             out = self._materialize_root(out, metrics)
-        if isinstance(out, Relation):
-            return QueryResult(out, None, metrics, decisions)
-        return QueryResult(None, float(out), metrics, decisions)
+        result = (QueryResult(out, None, metrics, decisions)
+                  if isinstance(out, Relation)
+                  else QueryResult(None, float(out), metrics, decisions))
+        self._record_profile(metrics)
+        self._record_fragment(plan, decisions, sum(m.wall_s for m in metrics))
+        return result
+
+    # -- runtime feedback ---------------------------------------------------
+    def _record_profile(self, metrics, verified_warm: bool = False) -> None:
+        """Feed observed (op, path, size-bucket) → wall_s back into the
+        selector's runtime profile — the loop that self-corrects the
+        crossover point without recalibration.
+
+        Tensor-path samples carry a warmup discard unless the caller proved
+        the run hit warm compiled code (``verified_warm``): the per-operator
+        tensor path cannot cheaply detect a first-call jit compile, and one
+        compile-included wall entering a cold cell would flip the selector
+        to linear and keep it there.  Linear ops never compile and always
+        record."""
+        prof = getattr(self.selector, "profile", None)
+        if prof is None:
+            return
+        for m in metrics:
+            prof.record(m.op, m.path, m.rows_in, m.wall_s,
+                        warmup_discard=(m.path == "tensor"
+                                        and not verified_warm))
+
+    def _record_fragment(self, plan, decisions, wall_s: float) -> None:
+        """When the plan WAS a fusable fragment but ran on the generic walk,
+        record its end-to-end wall so choose_fragment's blend sees
+        linear-fragment observations too.  Only all-LINEAR walks qualify:
+        a mixed walk is an observation of neither fragment path, and a pure
+        per-operator tensor walk is NOT the fused program choose_fragment
+        prices (it is 2-3.5x slower; recording it as ('fragment','tensor')
+        would bias the blend against fusion).  The fused dispatcher records
+        its own tensor-fragment observations."""
+        if not self.fuse or not decisions:
+            return
+        if {d.path for d in decisions} != {"linear"}:
+            return
+        prof = getattr(self.selector, "profile", None)
+        if prof is None:
+            return
+        from .fused import match_fragment
+
+        frag = match_fragment(plan)
+        if frag is None:
+            return
+        _, build, probe = frag
+        prof.record("fragment", "linear", len(build) + len(probe), wall_s)
 
     # -- fused fragment dispatch -------------------------------------------
     def _try_fused(self, plan, metrics, decisions) -> Optional[QueryResult]:
-        from .fused import match_fragment, run_fused
+        from .fused import match_fragment, pipeline_cache_info, run_fused
 
         frag = match_fragment(plan)
         if frag is None:
             return None
         spec, build, probe = frag
-        decision = self.selector.choose_join(build, probe, spec.join_key)
+        decision = self.selector.choose_fragment(spec, build, probe)
         if decision.path != "tensor":
             return None
         decisions.append(decision)
+        misses_before = pipeline_cache_info()["misses"]
         try:
             result, m = run_fused(spec, build, probe,
                                   decision_reason=decision.reason)
@@ -171,6 +225,16 @@ class Executor:
             return None
         m.decision_reason = decision.reason
         metrics.append(m)
+        # Feedback hygiene: a run that compiled a new program is not a
+        # steady-state observation — recording its wall would poison the
+        # profile and flip the very next decision back to linear.  Only
+        # warm (cache-hitting) runs feed the loop.
+        if pipeline_cache_info()["misses"] == misses_before:
+            self._record_profile(metrics, verified_warm=True)
+            prof = getattr(self.selector, "profile", None)
+            if prof is not None:
+                prof.record("fragment", "tensor", len(build) + len(probe),
+                            m.wall_s)
         if isinstance(result, Relation):
             return QueryResult(result, None, metrics, decisions)
         return QueryResult(None, float(result), metrics, decisions)
@@ -218,10 +282,18 @@ class Executor:
         return (*out, syncs)
 
     @staticmethod
-    def _to_device(rel) -> DeviceRelation:
+    def _to_device(rel):
+        """Device residency for a tensor-path operator input.  Host base
+        tables go through the device column cache (exact shapes), so
+        repeated queries pay zero re-upload; returns the relation plus the
+        H2D bytes this call actually transferred, which the caller charges
+        to the operator that demanded the transfer."""
         if isinstance(rel, DeviceRelation):
-            return rel
-        return DeviceRelation.from_host(rel)
+            return rel, 0
+        from .table_cache import get_device_columns
+
+        cols, uploaded = get_device_columns(rel, bucket=None)
+        return DeviceRelation.from_arrays(cols), uploaded
 
     # -- node dispatch -----------------------------------------------------
     def _exec(self, node, metrics, decisions, mgr):
@@ -252,8 +324,10 @@ class Executor:
             decision = self.selector.choose_join(build, probe, node.key)
             decisions.append(decision)
             if decision.path == "tensor":
-                out, m = tensor_join_device(self._to_device(build),
-                                            self._to_device(probe), node.key)
+                dev_b, up_b = self._to_device(build)
+                dev_p, up_p = self._to_device(probe)
+                out, m = tensor_join_device(dev_b, dev_p, node.key)
+                m.h2d_bytes += up_b + up_p
             else:
                 build, probe, syncs = self._lower_for_linear(build, probe)
                 out, m = hash_join_linear(build, probe, node.key,
@@ -267,7 +341,9 @@ class Executor:
             decision = self.selector.choose_sort(child, node.keys)
             decisions.append(decision)
             if decision.path == "tensor":
-                out, m = tensor_sort_device(self._to_device(child), node.keys)
+                dev_c, up_c = self._to_device(child)
+                out, m = tensor_sort_device(dev_c, node.keys)
+                m.h2d_bytes += up_c
             else:
                 child, syncs = self._lower_for_linear(child)
                 out, m = sort_linear(child, node.keys, self.work_mem, mgr)
@@ -283,8 +359,9 @@ class Executor:
             decision = self.selector.choose_sort(child, [node.key])
             decisions.append(decision)
             if decision.path == "tensor":
-                out, m = group_aggregate_device(self._to_device(child),
-                                                node.key, node.values)
+                dev_c, up_c = self._to_device(child)
+                out, m = group_aggregate_device(dev_c, node.key, node.values)
+                m.h2d_bytes += up_c
             else:
                 child, syncs = self._lower_for_linear(child)
                 out, m = group_aggregate_linear(child, node.key, node.values,

@@ -35,6 +35,7 @@ import numpy as np
 
 from .metrics import OpMetrics, SpillAccount, Timer
 from .relation import Relation
+from .table_cache import get_device_columns, key_stats
 from .tensor_engine import capacity_bucket
 
 __all__ = ["FusedSpec", "match_fragment", "run_fused", "pipeline_cache_info",
@@ -395,47 +396,24 @@ def _host_plan(build: Relation, probe: Relation, key: str):
     """Host-side planning from the numpy inputs — free of device traffic.
 
     Returns ``(capacity, dense_domain, kmin)``: an optimistic capacity bucket
-    from a key sample, and — when the build key domain is dense enough to
-    materialize as a coordinate axis and the sample predicts unique keys —
-    the power-of-two domain bucket for the sort-free dense join core.  Both
-    predictions are *verified on device* (overflow / has_dup piggyback on the
-    result fetch), so a wrong guess costs one retry, never a wrong answer.
+    from the cached key-cardinality sketch (:func:`repro.core.table_cache.
+    key_stats` — repeated queries do not re-sample), and — when the build key
+    domain is dense enough to materialize as a coordinate axis and the sample
+    predicts unique keys — the power-of-two domain bucket for the sort-free
+    dense join core.  Both predictions are *verified on device* (overflow /
+    has_dup piggyback on the result fetch), so a wrong guess costs one retry,
+    never a wrong answer.
     """
-    bk = np.asarray(build[key])
-    sample = bk[: min(len(bk), 65536)]
-    card = max(1, len(np.unique(sample)))
-    dup = max(1.0, len(sample) / card)
-    capacity = capacity_bucket(int(len(probe) * dup))
+    stats = key_stats(build, key)
+    capacity = capacity_bucket(int(len(probe) * stats.dup))
     dense_domain = None
     kmin = 0
-    if dup == 1.0:
-        kmin = int(bk.min())
-        width = int(bk.max()) - kmin + 1
-        if width <= 4 * capacity_bucket(len(bk)):
+    if stats.dup == 1.0 and stats.n:
+        kmin = int(stats.kmin)
+        width = int(stats.kmax) - kmin + 1
+        if width <= 4 * capacity_bucket(stats.n):
             dense_domain = capacity_bucket(width)
     return capacity, dense_domain, kmin
-
-
-def _pad_pow2(col: np.ndarray, bucket: int) -> jnp.ndarray:
-    pad = bucket - len(col)
-    if pad:
-        col = np.concatenate([col, np.zeros(pad, col.dtype)])
-    return jnp.asarray(col)
-
-
-def _device_columns(rel: Relation, bucket: int) -> Dict[str, jnp.ndarray]:
-    """Bucket-padded device uploads of a relation's columns (original
-    dtypes), cached on the Relation instance — base tables are effectively
-    pinned device-resident, so repeated queries over the same Scan pay zero
-    re-upload (Relations are immutable by convention)."""
-    cache = rel.__dict__.setdefault("_device_cols", {})
-    out = {}
-    for name, col in rel.columns.items():
-        ck = (name, bucket)
-        if ck not in cache:
-            cache[ck] = _pad_pow2(col, bucket)
-        out[name] = cache[ck]
-    return out
 
 
 def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
@@ -454,8 +432,8 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         # host planning is part of the query's wall time (the per-op
         # baseline pays for its planning inside its timers too)
         capacity, dense_domain, kmin = _host_plan(build, probe, spec.join_key)
-        bcols = _device_columns(build, b_bucket)
-        pcols = _device_columns(probe, p_bucket)
+        bcols, up_b = get_device_columns(build, b_bucket)
+        pcols, up_p = get_device_columns(probe, p_bucket)
         dtypes = tuple(sorted((k, str(v.dtype)) for k, v in bcols.items()))
         dtypes += tuple(sorted((k, str(v.dtype)) for k, v in pcols.items()))
         while True:
@@ -497,5 +475,6 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         + capacity * 8 * (3 + len(spec.sort_keys)),
         decision_reason=decision_reason,
         host_syncs=syncs,
+        h2d_bytes=up_b + up_p,
     )
     return result, metrics

@@ -70,6 +70,10 @@ class OpMetrics:
     # path is host-native and reports 0; the per-operator tensor path pays
     # 1-2 per operator; the fused device-resident path pays 1 per *query*.
     host_syncs: int = 0
+    # Host→device bytes actually transferred for this operator's inputs.
+    # Warm queries over device-cached base tables report 0 — the serving-path
+    # contract the fig9 benchmark measures.
+    h2d_bytes: int = 0
 
     def as_row(self) -> Dict[str, object]:
         return {
@@ -83,6 +87,7 @@ class OpMetrics:
             "passes": self.spill.partition_passes,
             "peak_ws_mb": round(self.peak_working_set_bytes / 1e6, 3),
             "host_syncs": self.host_syncs,
+            "h2d_mb": round(self.h2d_bytes / 1e6, 3),
             "reason": self.decision_reason,
         }
 

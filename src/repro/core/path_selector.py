@@ -1,4 +1,4 @@
-"""Execution-time path selection (paper §III.C).
+"""Execution-time path selection (paper §III.C), plan-level and feedback-driven.
 
 The selector is *deliberately simple*: it looks only at indicators observable
 cheaply at execution time — input scale, join-key cardinality, expected
@@ -9,6 +9,25 @@ hash join is faster).  If it would spill, the regime-shift model predicts the
 amplification cost α(N, M) and the tensor path is chosen when it avoids a
 worse expected (and far worse tail) latency.
 
+PR 2 adds two layers on top of the seed's per-operator, prediction-only
+design:
+
+  * **plan-level costing** — :meth:`choose_fragment` prices a whole
+    ``Join→[Filter]→[Sort]→[Aggregate]`` fragment at once, so the fused
+    pipeline's amortized fixed cost, single host sync, and (cache-aware) H2D
+    transfer term compete against the *sum* of the linear operators, not
+    against one join in isolation.  This is what removes the N=50k regret:
+    per-operator costing charged the tensor path its fixed overhead three
+    times and its H2D upload every query.
+  * **runtime feedback** — every estimate is blended with the
+    :class:`~repro.core.runtime_profile.RuntimeProfile`'s observed wall
+    times for the same ``(op, path, size-bucket)``, so the crossover point
+    self-corrects on hosts where the shipped constants are stale.
+
+Key-cardinality sampling is served by the cached sketch in
+:mod:`repro.core.table_cache` — the seed re-ran a 65536-row ``np.unique``
+on every ``choose_join`` call.
+
 The selection never changes operator semantics — both paths produce identical
 result sets (tests assert canonical equality).
 """
@@ -17,11 +36,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import numpy as np
-
 from .cost_model import CostModel
 from .device_relation import DeviceRelation
 from .relation import Relation
+from .runtime_profile import RuntimeProfile
+from .table_cache import key_stats, pending_upload_bytes
 
 __all__ = ["Decision", "PathSelector"]
 
@@ -33,48 +52,60 @@ class Decision:
     t_linear: float
     t_tensor: float
     predicted_spill_bytes: int
+    h2d_bytes: int = 0  # pending upload bytes charged to the tensor estimate
 
 
 class PathSelector:
     def __init__(self, work_mem: int, cost_model: Optional[CostModel] = None,
-                 force: Optional[str] = None):
+                 force: Optional[str] = None,
+                 profile: Optional[RuntimeProfile] = None):
         self.work_mem = int(work_mem)
         self.model = cost_model or CostModel()
         if force not in (None, "linear", "tensor"):
             raise ValueError(force)
         self.force = force
+        # A fresh profile per selector by default: observations from one
+        # query stream never leak into another's decisions.  Pass
+        # runtime_profile.DEFAULT_PROFILE to share across executors.
+        self.profile = RuntimeProfile() if profile is None else profile
+
+    # -- execution-time observables -----------------------------------------
+    @staticmethod
+    def _dup_estimate(build, key: str) -> float:
+        """Key duplication factor from the cached cardinality sketch.
+
+        A device-resident input is NOT sampled — pulling 64k keys to the
+        host for planning would be exactly the regime-crossing round trip
+        this layer exists to avoid; scale alone decides (dup ≈ 1).
+        """
+        if isinstance(build, DeviceRelation):
+            return 1.0
+        return key_stats(build, key).dup
 
     # -- join ---------------------------------------------------------------
     def choose_join(self, build: Relation, probe: Relation, key: str) -> Decision:
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
         n_b, n_p = len(build), len(probe)
-        # execution-time observables: scale + key cardinality → output estimate.
-        # A device-resident input is NOT sampled — pulling 64k keys to the
-        # host for planning would be exactly the regime-crossing round trip
-        # this layer exists to avoid; scale alone decides (dup ≈ 1).
-        if isinstance(build, DeviceRelation):
-            dup = 1.0
-        else:
-            sample = np.asarray(build[key][: min(n_b, 65536)])
-            card = max(1, len(np.unique(sample)))
-            dup = max(1.0, len(sample) / card)
+        dup = self._dup_estimate(build, key)
         est_out = int(n_p * dup)
         est = self.model.estimate_join(
             n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out, self.work_mem)
-        if est.path_fits_mem:
+        t_lin = self.profile.blend(est.t_linear, "hash_join", "linear", n_b + n_p)
+        t_ten = self.profile.blend(est.t_tensor, "hash_join", "tensor", n_b + n_p)
+        if est.path_fits_mem and t_lin <= t_ten:
             return Decision(
                 "linear",
                 f"hash table fits work_mem ({self.work_mem} B); linear path has "
                 f"no spill regime at this scale",
-                est.t_linear, est.t_tensor, 0)
-        path = "tensor" if est.t_tensor < est.t_linear else "linear"
+                t_lin, t_ten, 0)
+        path = "tensor" if t_ten < t_lin else "linear"
         return Decision(
             path,
             f"predicted spill {est.spill_bytes / 1e6:.1f} MB over {est.passes} "
-            f"partition pass(es): α(N,M) makes T_linear={est.t_linear:.3f}s vs "
-            f"T_tensor={est.t_tensor:.3f}s",
-            est.t_linear, est.t_tensor, est.spill_bytes)
+            f"partition pass(es): α(N,M) makes T_linear={t_lin:.3f}s vs "
+            f"T_tensor={t_ten:.3f}s (feedback-blended)",
+            t_lin, t_ten, est.spill_bytes)
 
     # -- sort ------------------------------------------------------------------
     def choose_sort(self, rel: Relation, keys) -> Decision:
@@ -82,14 +113,55 @@ class PathSelector:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
         est = self.model.estimate_sort(
             len(rel), rel.row_bytes(), len(keys), self.work_mem)
-        if est.path_fits_mem and est.t_linear <= est.t_tensor:
+        t_lin = self.profile.blend(est.t_linear, "sort", "linear", len(rel))
+        t_ten = self.profile.blend(est.t_tensor, "sort", "tensor", len(rel))
+        if est.path_fits_mem and t_lin <= t_ten:
             return Decision(
                 "linear",
                 "dataset fits work_mem; in-memory lexsort is cheapest",
-                est.t_linear, est.t_tensor, 0)
-        path = "tensor" if est.t_tensor < est.t_linear else "linear"
+                t_lin, t_ten, 0)
+        path = "tensor" if t_ten < t_lin else "linear"
         return Decision(
             path,
             f"predicted spill {est.spill_bytes / 1e6:.1f} MB / {est.passes} merge "
-            f"pass(es); T_linear={est.t_linear:.3f}s vs T_tensor={est.t_tensor:.3f}s",
-            est.t_linear, est.t_tensor, est.spill_bytes)
+            f"pass(es); T_linear={t_lin:.3f}s vs T_tensor={t_ten:.3f}s",
+            t_lin, t_ten, est.spill_bytes)
+
+    # -- fused fragment (plan-level, PR 2) ----------------------------------
+    def choose_fragment(self, spec, build: Relation, probe: Relation) -> Decision:
+        """Price a whole fusable fragment: ONE fixed dispatch, ONE host sync,
+        and H2D transfer only for base-table columns not already resident in
+        the device cache (warm serving queries charge 0)."""
+        if self.force:
+            return Decision(self.force, "forced", 0.0, 0.0, 0)
+        from .tensor_engine import capacity_bucket
+
+        n_b, n_p = len(build), len(probe)
+        dup = self._dup_estimate(build, spec.join_key)
+        est_out = int(n_p * dup)
+        h2d = (pending_upload_bytes(build, capacity_bucket(n_b))
+               + pending_upload_bytes(probe, capacity_bucket(n_p)))
+        est = self.model.estimate_fragment(
+            n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out,
+            self.work_mem, num_sort_keys=len(spec.sort_keys),
+            has_filter=spec.filter_fn is not None,
+            has_agg=spec.agg is not None, h2d_bytes=h2d)
+        n = n_b + n_p
+        t_lin = self.profile.blend(est.t_linear, "fragment", "linear", n)
+        t_ten = self.profile.blend(est.t_tensor, "fragment", "tensor", n)
+        num_ops = 1 + (spec.filter_fn is not None) + bool(spec.sort_keys) \
+            + (spec.agg is not None)
+        if est.path_fits_mem and t_lin <= t_ten:
+            return Decision(
+                "linear",
+                f"whole linear fragment fits work_mem ({self.work_mem} B) and "
+                f"T_linear={t_lin:.3f}s <= T_tensor={t_ten:.3f}s",
+                t_lin, t_ten, 0, h2d)
+        path = "tensor" if t_ten < t_lin else "linear"
+        return Decision(
+            path,
+            f"fragment-level: T_linear={t_lin:.3f}s vs T_tensor={t_ten:.3f}s "
+            f"(fixed cost amortized over {num_ops} fused ops, "
+            f"{h2d / 1e6:.1f} MB pending H2D, predicted spill "
+            f"{est.spill_bytes / 1e6:.1f} MB, feedback-blended)",
+            t_lin, t_ten, est.spill_bytes, h2d)

@@ -9,11 +9,36 @@ operator genuinely needs a linearized form.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, Iterable, Mapping, Sequence
 
 import numpy as np
 
-__all__ = ["Relation"]
+__all__ = ["Relation", "column_token"]
+
+
+def column_token(arr: np.ndarray) -> tuple:
+    """Cheap content fingerprint of a column: O(32) sampled elements.
+
+    Combines the buffer address, length, dtype, and a CRC over a strided
+    sample (always including the first and last element).  Device caches key
+    on this token, so an in-place mutation of a cached column is detected —
+    with sampled (not cryptographic) confidence — and forces a fresh
+    transfer.  Callers that mutate columns between queries should also call
+    :meth:`Relation.invalidate_device_cache` for a guaranteed refresh.
+    """
+    n = len(arr)
+    dt = str(arr.dtype)
+    if n == 0:
+        return (0, 0, dt, 0)
+    stride = max(1, n // 32)
+    sample = np.concatenate([arr[::stride], arr[-1:]])
+    crc = zlib.crc32(np.ascontiguousarray(sample).tobytes())
+    try:
+        ptr = arr.__array_interface__["data"][0]
+    except (AttributeError, KeyError):
+        ptr = id(arr)
+    return (ptr, n, dt, crc)
 
 
 @dataclasses.dataclass
@@ -53,6 +78,28 @@ class Relation:
 
     def nbytes(self) -> int:
         return int(sum(c.nbytes for c in self.columns.values()))
+
+    def fingerprint(self) -> tuple:
+        """Aggregate of the per-column tokens (see :func:`column_token`).
+
+        The device base-table cache and key-cardinality sketch key on the
+        individual column tokens (so mutating one column only invalidates
+        that column); this whole-relation aggregate is the convenience form
+        for callers that want to snapshot/compare table versions.
+        """
+        return tuple((name, column_token(col))
+                     for name, col in self.columns.items())
+
+    def invalidate_device_cache(self) -> None:
+        """Drop cached device uploads and key sketches for this relation.
+
+        The caches invalidate automatically via sampled content tokens; this
+        is the explicit, guaranteed path for callers that mutate columns
+        in place between queries.
+        """
+        self.__dict__.pop("_device_cache", None)
+        self.__dict__.pop("_key_stats", None)
+        self.__dict__.pop("_device_cols", None)  # pre-PR2 attr name
 
     def row_bytes(self) -> int:
         return int(sum(c.dtype.itemsize for c in self.columns.values()))

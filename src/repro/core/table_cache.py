@@ -1,0 +1,197 @@
+"""Device-resident base-table cache + key-cardinality sketches (serving path).
+
+Repeated queries over the same base tables are the serving-path common case:
+a per-query host→device upload (and pow2 re-padding) of columns that have not
+changed since the last query is pure amortizable overhead, exactly like the
+per-query planning `np.unique` sample the selector used to pay.  This module
+makes both **resident across queries**:
+
+  * :func:`get_device_columns` — bucket-padded (or exact-shape) device uploads
+    of a relation's columns, cached *on the relation instance* and keyed by a
+    sampled content token (:func:`repro.core.relation.column_token`).  A warm
+    query transfers **zero** H2D bytes.  Rebinding/resizing/re-dtyping a
+    column always changes the token; in-place element writes are caught with
+    sampled confidence only — mutating callers must use
+    :meth:`Relation.invalidate_device_cache` for a guaranteed refresh
+    (Relations are immutable by convention).
+  * :func:`key_stats` — a cached key-cardinality sketch (sample cardinality,
+    duplication factor, min/max) shared by `PathSelector.choose_join` and the
+    fused pipeline's host planner, so neither pays a 64k-row `np.unique` per
+    query.
+
+Storing the cache on the `Relation` instance ties entry lifetime to the table
+itself (dropped with the relation, no global growth) and sidesteps `id()`
+reuse.  `REPRO_TABLE_CACHE=0` disables caching (every query re-uploads and
+re-samples); global hit/miss/H2D counters are exposed via
+:func:`table_cache_info` for tests and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from .relation import Relation, column_token
+
+__all__ = [
+    "KeyStats",
+    "cache_enabled",
+    "get_device_columns",
+    "pending_upload_bytes",
+    "key_stats",
+    "table_cache_info",
+    "table_cache_clear",
+]
+
+_CACHE_ATTR = "_device_cache"
+_STATS_ATTR = "_key_stats"
+SAMPLE_ROWS = 65536  # key-cardinality sample size (matches the seed selector)
+
+
+@dataclasses.dataclass
+class _Counters:
+    hits: int = 0
+    misses: int = 0
+    invalidations: int = 0
+    h2d_bytes: int = 0
+    sketch_hits: int = 0
+    sketch_misses: int = 0
+
+
+_COUNTERS = _Counters()
+
+
+def cache_enabled() -> bool:
+    """Base-table cache toggle: ``REPRO_TABLE_CACHE=0`` disables residency."""
+    return os.environ.get("REPRO_TABLE_CACHE", "1") != "0"
+
+
+def table_cache_info() -> Dict[str, int]:
+    return dataclasses.asdict(_COUNTERS)
+
+
+def table_cache_clear() -> None:
+    """Reset the global counters.  Per-relation storage lives on the Relation
+    instances themselves — drop it with ``rel.invalidate_device_cache()``."""
+    global _COUNTERS
+    _COUNTERS = _Counters()
+
+
+def _upload(col: np.ndarray, bucket: Optional[int]):
+    """Host→device transfer of one column, optionally zero-padded to a
+    power-of-two bucket (original dtype preserved)."""
+    import jax.numpy as jnp
+
+    if bucket is not None:
+        pad = bucket - len(col)
+        if pad:
+            col = np.concatenate([col, np.zeros(pad, col.dtype)])
+    return jnp.asarray(col)
+
+
+def _padded_nbytes(col: np.ndarray, bucket: Optional[int]) -> int:
+    n = len(col) if bucket is None else bucket
+    return int(n * col.dtype.itemsize)
+
+
+def get_device_columns(rel: Relation, bucket: Optional[int] = None
+                       ) -> Tuple[Dict[str, object], int]:
+    """Device arrays for all columns of ``rel`` plus the H2D bytes this call
+    actually transferred (0 on a fully warm cache).
+
+    ``bucket`` pads every column to that power-of-two length (the fused
+    pipeline's shape-bucketed contract); ``None`` keeps exact shapes (the
+    per-operator device path).  Entries are keyed ``(name, bucket, token)``
+    so the two shapes coexist and a stale token is replaced in place.
+    """
+    uploaded = 0
+    out: Dict[str, object] = {}
+    if not cache_enabled():
+        for name, col in rel.columns.items():
+            out[name] = _upload(col, bucket)
+            _COUNTERS.misses += 1
+            uploaded += _padded_nbytes(col, bucket)
+        _COUNTERS.h2d_bytes += uploaded
+        return out, uploaded
+    cache = rel.__dict__.setdefault(_CACHE_ATTR, {})
+    for name, col in rel.columns.items():
+        token = column_token(col)
+        ck = (name, bucket)
+        entry = cache.get(ck)
+        if entry is not None and entry[0] == token:
+            _COUNTERS.hits += 1
+            out[name] = entry[1]
+            continue
+        if entry is not None:
+            _COUNTERS.invalidations += 1  # mutated column → fresh transfer
+        _COUNTERS.misses += 1
+        dev = _upload(col, bucket)
+        cache[ck] = (token, dev)
+        out[name] = dev
+        uploaded += _padded_nbytes(col, bucket)
+    _COUNTERS.h2d_bytes += uploaded
+    return out, uploaded
+
+
+def pending_upload_bytes(rel, bucket: Optional[int] = None) -> int:
+    """H2D bytes a query over ``rel`` would pay *right now* — the explicit
+    transfer term the plan-level cost model charges the tensor path.  Zero
+    when every column is already device-resident at this bucket."""
+    if not isinstance(rel, Relation):
+        return 0  # already device-resident
+    cache = rel.__dict__.get(_CACHE_ATTR) if cache_enabled() else None
+    total = 0
+    for name, col in rel.columns.items():
+        if cache is not None:
+            entry = cache.get((name, bucket))
+            if entry is not None and entry[0] == column_token(col):
+                continue
+        total += _padded_nbytes(col, bucket)
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyStats:
+    """Cached execution-time observables of one key column (§III.C)."""
+
+    n: int            # column length
+    sample_n: int     # rows sampled for cardinality
+    card: int         # distinct keys in the sample
+    dup: float        # average duplication factor (sample)
+    kmin: object      # column minimum (exact Python scalar)
+    kmax: object      # column maximum
+
+
+def key_stats(rel: Relation, key: str) -> KeyStats:
+    """Key-cardinality sketch, cached per (relation, key, content token).
+
+    The seed selector re-ran ``np.unique`` over a 65536-row sample on every
+    ``choose_join`` call — per-query planning overhead this cache amortizes
+    away for repeated queries over the same base tables.
+    """
+    col = np.asarray(rel[key])
+    token = column_token(col)
+    cache = (rel.__dict__.setdefault(_STATS_ATTR, {})
+             if cache_enabled() else None)
+    if cache is not None:
+        entry = cache.get(key)
+        if entry is not None and entry[0] == token:
+            _COUNTERS.sketch_hits += 1
+            return entry[1]
+    _COUNTERS.sketch_misses += 1
+    n = len(col)
+    if n == 0:
+        stats = KeyStats(0, 0, 0, 1.0, 0, 0)
+    else:
+        sample = col[: min(n, SAMPLE_ROWS)]
+        card = max(1, len(np.unique(sample)))
+        dup = max(1.0, len(sample) / card)
+        # min/max over the full column: one O(N) scan each, amortized by the
+        # cache (the fused planner needs the exact key range, not a sample's)
+        stats = KeyStats(n, len(sample), card, dup,
+                         col.min().item(), col.max().item())
+    if cache is not None:
+        cache[key] = (token, stats)
+    return stats

@@ -263,6 +263,9 @@ def tensor_join(
         spill=SpillAccount(),  # structurally zero: no spill regime exists
         peak_working_set_bytes=peak,
         host_syncs=2,
+        # materializing host API: every input column crosses to the device
+        # per call (the cached executor paths report 0 when warm)
+        h2d_bytes=build.nbytes() + probe.nbytes(),
     )
     return result, metrics
 
@@ -404,6 +407,8 @@ def tensor_join_aggregate(
         spill=SpillAccount(),
         peak_working_set_bytes=key_domain * 4 * 4 + build.nbytes() + probe.nbytes(),
         host_syncs=1,
+        h2d_bytes=(build[key].nbytes + build[build_val].nbytes
+                   + probe[key].nbytes + probe[probe_val].nbytes),
     )
     return out, metrics
 
@@ -481,6 +486,7 @@ def tensor_sort(
         spill=SpillAccount(),
         peak_working_set_bytes=peak,
         host_syncs=1,
+        h2d_bytes=rel.nbytes(),
     )
     return out, metrics
 

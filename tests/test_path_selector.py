@@ -3,13 +3,16 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    Aggregate,
     CostModel,
     Executor,
     Join,
     PathSelector,
     Relation,
+    RuntimeProfile,
     Scan,
     Sort,
+    match_fragment,
     table_bytes_estimate,
 )
 
@@ -56,6 +59,81 @@ def test_executor_policies_agree_semantically():
         results[policy] = ex.execute(plan()).relation.sort_canonical()
     assert results["linear"].equals(results["tensor"])
     assert results["linear"].equals(results["auto"])
+
+
+def test_auto_picks_fused_path_at_50k_regret_case():
+    """PR 2 regression for the ROADMAP open item: at N=50k / work_mem=1MB the
+    fused device-resident path beats the spilling linear path, but the seed's
+    per-operator costing still picked linear.  A COLD (no feedback) selector
+    with the retuned plan-level model must choose tensor, and the auto
+    executor must actually dispatch the fused program."""
+    build, probe = _tables(50_000)
+    plan = Sort(Join(Scan(build), Scan(probe), "k"), ["k", "w"])
+    spec, b, p = match_fragment(plan)
+    sel = PathSelector(work_mem=1 << 20, profile=RuntimeProfile())
+    d = sel.choose_fragment(spec, b, p)
+    assert d.path == "tensor", d.reason
+    assert d.t_tensor < d.t_linear
+    ex = Executor(work_mem=1 << 20, policy="auto",
+                  selector=PathSelector(1 << 20, profile=RuntimeProfile()))
+    q = ex.execute(plan)
+    assert any(m.op == "fused_pipeline" for m in q.metrics), \
+        [m.op for m in q.metrics]
+
+
+def test_auto_still_picks_linear_at_small_n():
+    """The crossover's other side: small inputs that comfortably fit
+    work_mem stay on the linear path (paper §V.B)."""
+    build, probe = _tables(1000, seed=2)
+    plan = Sort(Join(Scan(build), Scan(probe), "k"), ["k"])
+    spec, b, p = match_fragment(plan)
+    sel = PathSelector(work_mem=1 << 30, profile=RuntimeProfile())
+    assert sel.choose_fragment(spec, b, p).path == "linear"
+    ex = Executor(work_mem=1 << 30, policy="auto",
+                  selector=PathSelector(1 << 30, profile=RuntimeProfile()))
+    q = ex.execute(plan)
+    assert all(m.path == "linear" for m in q.metrics), \
+        [(m.op, m.path) for m in q.metrics]
+
+
+def test_fragment_costing_amortizes_fixed_cost_and_charges_h2d():
+    """Plan-level costing (PR 2): ONE fused dispatch for the fragment must
+    be cheaper than per-operator tensor dispatches summed, and pending H2D
+    bytes must appear as an explicit, monotonic term."""
+    model = CostModel()
+    n = 50_000
+    frag = model.estimate_fragment(n, n, 16, 16, n, 1 << 20,
+                                   num_sort_keys=2, has_agg=True)
+    ej = model.estimate_join(n, n, 16, 16, n, 1 << 20)
+    es = model.estimate_sort(n, 32, 2, 1 << 20)
+    assert frag.t_tensor < ej.t_tensor + es.t_tensor
+    cold = model.estimate_fragment(n, n, 16, 16, n, 1 << 20,
+                                   num_sort_keys=2, has_agg=True,
+                                   h2d_bytes=1 << 30)
+    assert cold.t_tensor > frag.t_tensor
+    assert cold.t_tensor - frag.t_tensor == \
+        pytest.approx(model.c.h2d_byte_cost * (1 << 30))
+    # the linear side of the fragment includes the downstream sort's spill
+    join_only = model.estimate_join(n, n, 16, 16, n, 1 << 20)
+    assert frag.t_linear > join_only.t_linear
+
+
+def test_calibrate_fits_fused_and_transfer_constants():
+    model = CostModel()
+    c = model.calibrate(n=30_000)
+    assert c.fused_row_cost > 0
+    assert c.fused_fixed_cost > 0
+    assert c.host_sync_cost > 0
+    assert c.h2d_byte_cost > 0
+    assert c.linear_row_cost > 0
+    # the fitted model must still resolve the documented regret case
+    build, probe = _tables(50_000, seed=3)
+    spec, b, p = match_fragment(
+        Aggregate(Sort(Join(Scan(build), Scan(probe), "k"), ["k"]),
+                  "b_v", "sum"))
+    sel = PathSelector(work_mem=1 << 20, cost_model=model,
+                       profile=RuntimeProfile())
+    assert sel.choose_fragment(spec, b, p).path == "tensor"
 
 
 def test_regime_model_alpha_superlinear_in_deficit():

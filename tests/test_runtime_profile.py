@@ -1,0 +1,125 @@
+"""Runtime feedback profile (PR 2): observed wall times blended into the
+selector's predictions so the crossover point self-corrects on any host."""
+import numpy as np
+
+from repro.core import (
+    Aggregate,
+    Executor,
+    Join,
+    PathSelector,
+    Relation,
+    RuntimeProfile,
+    Scan,
+    Sort,
+    match_fragment,
+    size_bucket,
+)
+
+
+def _tables(n, seed=0):
+    rng = np.random.default_rng(seed)
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 99, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 99, n).astype(np.int64)})
+    return build, probe
+
+
+def test_blend_cold_returns_prediction_exactly():
+    prof = RuntimeProfile()
+    assert prof.blend(0.25, "hash_join", "linear", 1000) == 0.25
+
+
+def test_blend_converges_to_observation():
+    prof = RuntimeProfile(confidence=2)
+    for _ in range(20):
+        prof.record("hash_join", "linear", 1000, 2.0)
+    blended = prof.blend(0.01, "hash_join", "linear", 1000)
+    assert abs(blended - 2.0) < 0.2  # w = 20/22 pulls ~91% of the way
+    one = RuntimeProfile(confidence=2)
+    one.record("hash_join", "linear", 1000, 2.0)
+    partial = one.blend(0.01, "hash_join", "linear", 1000)
+    assert 0.01 < partial < blended  # confidence weighting is gradual
+
+
+def test_ewma_recovers_from_outlier():
+    prof = RuntimeProfile(alpha=0.35)
+    prof.record("sort", "tensor", 5000, 10.0)  # a one-off stall
+    for _ in range(12):
+        prof.record("sort", "tensor", 5000, 0.1)
+    cell = prof.observed("sort", "tensor", 5000)
+    assert cell.wall_s < 0.2  # the stall washed out
+
+
+def test_size_buckets_isolate_scales():
+    prof = RuntimeProfile()
+    prof.record("hash_join", "linear", 1000, 1.0)
+    assert prof.observed("hash_join", "linear", 1_000_000) is None
+    assert size_bucket(1000) != size_bucket(1_000_000)
+    # rows inside one octave share a cell
+    assert size_bucket(1025) == size_bucket(2047)
+
+
+def test_feedback_flips_fragment_decision():
+    """The regret-correction mechanism: a path observed to be much slower
+    than predicted loses the blended comparison, without recalibration.
+    Constants are pinned so the cold prediction unambiguously favors linear
+    — the flip must come from the observations alone."""
+    from repro.core import CostConstants, CostModel
+
+    build, probe = _tables(20_000)
+    plan = Sort(Join(Scan(build), Scan(probe), "k"), ["k", "w"])
+    spec, b, p = match_fragment(plan)
+    prof = RuntimeProfile()
+    model = CostModel(CostConstants(linear_row_cost=1e-9))  # "linear is free"
+    sel = PathSelector(work_mem=1 << 30, cost_model=model, profile=prof)
+    assert sel.choose_fragment(spec, b, p).path == "linear"
+    for _ in range(6):  # observe the linear fragment stalling badly
+        prof.record("fragment", "linear", len(b) + len(p), 30.0)
+    assert sel.choose_fragment(spec, b, p).path == "tensor"
+
+
+def test_warmup_discard_drops_only_first_sample():
+    """Per-op tensor path: the first sample may hide a jit compile the
+    caller cannot detect; it must not enter the blend."""
+    prof = RuntimeProfile()
+    prof.record("hash_join", "tensor", 1000, 5.0, warmup_discard=True)
+    cell = prof.observed("hash_join", "tensor", 1000)
+    assert cell is not None and cell.count == 0 and cell.warmups_seen == 1
+    assert prof.blend(0.01, "hash_join", "tensor", 1000) == 0.01
+    prof.record("hash_join", "tensor", 1000, 0.2, warmup_discard=True)
+    cell = prof.observed("hash_join", "tensor", 1000)
+    assert cell.count == 1 and cell.wall_s == 0.2  # second sample sticks
+
+
+def test_executor_records_observations():
+    build, probe = _tables(3000, seed=3)
+    prof = RuntimeProfile()
+    sel = PathSelector(work_mem=1 << 30, force="linear", profile=prof)
+    ex = Executor(work_mem=1 << 30, policy="linear", selector=sel)
+    ex.execute(Aggregate(Sort(Join(Scan(build), Scan(probe), "k"), ["k"]),
+                         "b_v", "sum"))
+    n = len(build) + len(probe)
+    assert prof.observed("hash_join", "linear", n) is not None
+    assert prof.observed("fragment", "linear", n) is not None
+
+
+def test_fused_compile_run_not_recorded_as_steady_state():
+    """The first fused execution compiles; its wall must NOT enter the
+    profile (it would flip the very next decision back to linear)."""
+    from repro.core import pipeline_cache_clear
+
+    pipeline_cache_clear()
+    build, probe = _tables(4096, seed=5)
+    prof = RuntimeProfile()
+    sel = PathSelector(work_mem=1 << 10, profile=prof)  # tiny mem → tensor
+    ex = Executor(work_mem=1 << 10, policy="auto", selector=sel)
+    plan = lambda: Aggregate(Sort(Join(Scan(build), Scan(probe), "k"), ["k"]),
+                             "b_v", "sum")
+    q1 = ex.execute(plan())
+    assert q1.metrics[0].op == "fused_pipeline"
+    assert prof.observed("fragment", "tensor", len(build) + len(probe)) is None
+    q2 = ex.execute(plan())  # warm: this one is a real observation
+    assert q2.metrics[0].op == "fused_pipeline"
+    cell = prof.observed("fragment", "tensor", len(build) + len(probe))
+    assert cell is not None and cell.count == 1

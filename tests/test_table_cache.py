@@ -1,0 +1,156 @@
+"""Device-resident base-table cache + key-cardinality sketch (PR 2).
+
+Serving-path contract: repeated queries over unchanged base tables transfer
+zero H2D bytes; a mutated relation invalidates its cached device columns and
+sketches (fresh transfer, fresh stats); planning does not re-run the 64k-row
+``np.unique`` sample per query.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate,
+    Executor,
+    Join,
+    PathSelector,
+    Relation,
+    RuntimeProfile,
+    Scan,
+    Sort,
+    capacity_bucket,
+    get_device_columns,
+    key_stats,
+    pending_upload_bytes,
+    table_cache_clear,
+    table_cache_info,
+)
+
+
+def _tables(n=20_000, seed=0):
+    rng = np.random.default_rng(seed)
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    return build, probe
+
+
+def _plan(build, probe):
+    return Aggregate(Sort(Join(Scan(build), Scan(probe), "k"), ["k"]),
+                     "b_v", "sum")
+
+
+def test_warm_query_transfers_zero_h2d_bytes():
+    build, probe = _tables()
+    ex = Executor(work_mem=1 << 20, policy="tensor")
+    q1 = ex.execute(_plan(build, probe))
+    assert q1.total_h2d_bytes > 0  # cold: both relations cross to the device
+    q2 = ex.execute(_plan(build, probe))
+    assert q2.total_h2d_bytes == 0  # warm: base tables are device-resident
+    assert q2.scalar == q1.scalar
+
+
+def test_mutated_relation_forces_fresh_transfer():
+    """In-place mutation of a cached column → fresh transfer AND the fresh
+    data's answer (a stale cache would silently serve the old bytes)."""
+    build, probe = _tables(4096, seed=1)
+    probe.columns["k"][0] = build.columns["k"][0]  # row 0's match is certain
+    ex = Executor(work_mem=1 << 30, policy="tensor")
+    q1 = ex.execute(_plan(build, probe))
+    assert ex.execute(_plan(build, probe)).total_h2d_bytes == 0
+    build.columns["v"][0] += 1_000_000  # element 0 is always token-sampled
+    q3 = ex.execute(_plan(build, probe))
+    assert q3.total_h2d_bytes > 0
+    want = Executor(work_mem=1 << 30, policy="linear").execute(
+        _plan(build, probe)).scalar
+    assert q3.scalar == want
+    assert q3.scalar != q1.scalar
+
+
+def test_invalidate_device_cache_explicit():
+    build, _ = _tables(2048, seed=2)
+    bucket = capacity_bucket(len(build))
+    full = pending_upload_bytes(build, bucket)
+    assert full == bucket * 8 * 2  # two int64 columns, bucket-padded
+    get_device_columns(build, bucket)
+    assert pending_upload_bytes(build, bucket) == 0
+    build.invalidate_device_cache()
+    assert pending_upload_bytes(build, bucket) == full
+
+
+def test_exact_and_bucketed_entries_coexist():
+    build, _ = _tables(1000, seed=3)
+    _, up_exact = get_device_columns(build, None)
+    assert up_exact == build.nbytes()
+    _, up_padded = get_device_columns(build, 1024)
+    assert up_padded == 1024 * 8 * 2
+    # both shapes now warm
+    assert get_device_columns(build, None)[1] == 0
+    assert get_device_columns(build, 1024)[1] == 0
+
+
+def test_cache_toggle_disables_residency(monkeypatch):
+    monkeypatch.setenv("REPRO_TABLE_CACHE", "0")
+    build, probe = _tables(2048, seed=4)
+    ex = Executor(work_mem=1 << 30, policy="tensor")
+    q1 = ex.execute(_plan(build, probe))
+    q2 = ex.execute(_plan(build, probe))
+    assert q1.total_h2d_bytes > 0
+    assert q2.total_h2d_bytes > 0  # every query re-uploads
+    assert q1.scalar == q2.scalar
+
+
+def test_fingerprint_tracks_column_content():
+    build, _ = _tables(512, seed=9)
+    f1 = build.fingerprint()
+    assert f1 == build.fingerprint()  # stable while untouched
+    build.columns["v"][0] += 1  # sampled position
+    f2 = build.fingerprint()
+    assert f2 != f1
+    # only the mutated column's token changed
+    changed = [name for (name, t1), (_, t2) in zip(f1, f2) if t1 != t2]
+    assert changed == ["v"]
+
+
+def test_key_stats_cached_and_invalidated():
+    build, _ = _tables(4096, seed=5)
+    s1 = key_stats(build, "k")
+    assert s1.dup == 1.0 and s1.n == 4096  # permutation keys are unique
+    assert key_stats(build, "k") is s1  # served from the sketch cache
+    build.columns["k"][:] = 7  # constant keys: dup flips to the sample size
+    s2 = key_stats(build, "k")
+    assert s2 is not s1
+    assert s2.card == 1 and s2.kmin == 7 and s2.kmax == 7
+
+
+def test_choose_join_does_not_resample_per_query(monkeypatch):
+    """Satellite regression: the selector used to pay a 65536-row np.unique
+    on EVERY choose_join call; now the sketch is computed once per
+    (relation, key, content)."""
+    calls = []
+    orig = np.unique
+
+    def counting_unique(*args, **kwargs):
+        calls.append(1)
+        return orig(*args, **kwargs)
+
+    monkeypatch.setattr(np, "unique", counting_unique)
+    build, probe = _tables(4096, seed=6)
+    sel = PathSelector(work_mem=1 << 20, profile=RuntimeProfile())
+    for _ in range(5):
+        sel.choose_join(build, probe, "k")
+    assert len(calls) == 1, f"np.unique ran {len(calls)} times for 5 queries"
+
+
+def test_counters_track_hits_misses_invalidations():
+    table_cache_clear()
+    build, _ = _tables(1024, seed=7)
+    get_device_columns(build, 1024)
+    get_device_columns(build, 1024)
+    build.columns["v"][0] ^= 1
+    get_device_columns(build, 1024)
+    info = table_cache_info()
+    assert info["misses"] == 3  # 2 cold + 1 re-upload of the mutated column
+    assert info["hits"] == 3    # 2 warm + the unmutated column's third hit
+    assert info["invalidations"] == 1
+    assert info["h2d_bytes"] == 1024 * 8 * 2 + 1024 * 8  # cold pair + re-upload
