@@ -1,0 +1,100 @@
+"""Fluent Session/Query quickstart: the declarative front-end.
+
+Builds a 3-table star schema, runs the same query through the fluent API
+(logical IR → rewrite planner → chained fused fragments) and through the
+legacy physical dataclass tree, and prints what the planner did: filter
+pushdown, projection pruning (H2D bytes), fragment chaining, and the
+warm-cache steady state.
+
+    PYTHONPATH=src python examples/session_quickstart.py
+"""
+import numpy as np
+
+from repro.core import (Aggregate, Executor, Filter, Join, Relation, Scan,
+                        Session, Sort, col)
+
+
+def make_tables(n_orders=200_000, n_users=5_000, n_parts=1_000, seed=0):
+    rng = np.random.default_rng(seed)
+    orders = Relation({
+        "uid": rng.integers(0, n_users, n_orders).astype(np.int64),
+        "pid": rng.integers(0, n_parts, n_orders).astype(np.int64),
+        "w": rng.integers(-50, 50, n_orders).astype(np.int64),
+        # a column no query below ever touches: pruning keeps it on host
+        "payload": rng.integers(0, 1 << 40, n_orders).astype(np.int64),
+    })
+    users = Relation({
+        "uid": np.arange(n_users, dtype=np.int64),
+        "region": rng.integers(0, 4, n_users).astype(np.int64),
+    })
+    parts = Relation({
+        "pid": np.arange(n_parts, dtype=np.int64),
+        "price": rng.integers(1, 9, n_parts).astype(np.int64),
+    })
+    return orders, users, parts
+
+
+def main():
+    orders, users, parts = make_tables()
+    sess = Session(work_mem=1 << 20, policy="auto")
+    sess.register("orders", orders)
+    sess.register("users", users)
+    sess.register("parts", parts)
+
+    q = (sess.table("orders")
+         .join(sess.table("users"), on="uid")
+         .join(sess.table("parts"), on="pid")
+         .filter((col("w") > 0) & (col("b_region") <= 2))
+         .sort("uid")
+         .aggregate("w", "sum"))
+
+    print("== plan (after pushdown / pruning / fragment chaining) ==")
+    print(q.explain())
+
+    res = q.collect()
+    print("\n== cold query ==")
+    print(f"result        : {res.scalar}")
+    print(f"operators     : {[m.op for m in res.metrics]}")
+    print(f"host syncs    : {res.total_host_syncs}")
+    print(f"H2D bytes     : {res.total_h2d_bytes:,} "
+          f"(orders.payload never moves)")
+
+    warm = q.collect()
+    print("\n== warm repeat (base tables device-resident) ==")
+    print(f"result        : {warm.scalar}")
+    print(f"H2D bytes     : {warm.total_h2d_bytes:,} "
+          f"(only the stage-1 intermediate)")
+    print(f"wall          : {warm.total_wall_s * 1e3:.1f} ms "
+          f"vs cold {res.total_wall_s * 1e3:.1f} ms")
+
+    # the same query as a seed-style physical tree, via the lowering shim
+    legacy = Aggregate(
+        Sort(Filter(Join(Scan(parts),
+                         Join(Scan(users), Scan(orders), "uid"), "pid"),
+                    lambda r: (r["w"] > 0) & (r["b_region"] <= 2)),
+             ["uid"]), "w", "sum")
+    shim = sess.execute(legacy)
+    direct = Executor(work_mem=1 << 20, policy="linear").execute(legacy)
+    print("\n== legacy dataclass tree ==")
+    print(f"via lowering shim : {shim.scalar}")
+    print(f"direct executor   : {direct.scalar}")
+    assert shim.scalar == direct.scalar == res.scalar
+    print("all three paths agree bit-for-bit")
+
+    # multi-key joins: logical-only concept, lowered by key packing
+    sess.register("events", Relation({
+        "uid": orders["uid"][:50_000],
+        "pid": orders["pid"][:50_000],
+        "cost": np.abs(orders["w"][:50_000]),
+    }))
+    two = (sess.table("orders")
+           .join(sess.table("events"), on=["uid", "pid"])
+           .group_by("uid", {"b_cost": "sum"}))
+    r2 = two.collect()
+    print("\n== multi-key join (packed) ==")
+    print(two.explain())
+    print(f"groups: {len(r2.relation)}")
+
+
+if __name__ == "__main__":
+    main()

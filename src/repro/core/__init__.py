@@ -1,19 +1,46 @@
 """Core of the reproduction: tensor-based execution paths for high-dimensional
 relational operations, with execution-time path selection (the paper's
 contribution), plus the faithful linear (spilling) baseline it is measured
-against."""
+against.
+
+Layered, front to back:
+
+  * **Front-end** — :class:`Session` / :class:`Query` (fluent builder),
+    the typed expression language (:func:`col`, :func:`lit`,
+    :class:`Expr`), and the logical IR (``LScan``/``LFilter``/``LProject``/
+    ``LJoin``/``LSort``/``LAggregate``/``LGroupBy``) with
+    :func:`from_physical` as the legacy lowering shim.
+  * **Planner** — :func:`plan_program` rewrites (filter pushdown, projection
+    pruning, multi-key packing) and splits multi-join plans into chained
+    ``Join→[Filter]→[Sort]→[Aggregate]`` fragments.
+  * **Execution** — :class:`Executor` over physical nodes
+    (:class:`Scan`…\\ :class:`Project`), the fused device-resident pipeline
+    (:mod:`~repro.core.fused`), per-operator tensor/linear engines, and the
+    single-materialization :class:`DeviceRelation` layer.
+  * **Decision layer** — :class:`CostModel` (fragment-level regime-shift
+    costing), :class:`PathSelector` (execution-time path choice), and the
+    :class:`RuntimeProfile` feedback loop.
+  * **Residency** — :mod:`~repro.core.table_cache`: device base-table column
+    cache and key-cardinality sketches, both content-token keyed.
+"""
 from .cost_model import CostConstants, CostModel, FragmentEstimate
 from .aggregate import (group_aggregate_device, group_aggregate_linear,
                         group_aggregate_tensor)
 from .device_relation import DeviceColumn, DeviceRelation
-from .executor import Aggregate, Executor, Filter, GroupBy, Join, QueryResult, Scan, Sort
+from .executor import (PHYSICAL_NODES, Aggregate, Executor, Filter, GroupBy,
+                       Join, Project, QueryResult, Scan, Sort)
+from .expr import Expr, col, lit
 from .fused import (FusedSpec, match_fragment, pipeline_cache_clear,
                     pipeline_cache_info, run_fused)
 from .linear_engine import HashTable, hash_join_linear, sort_linear, table_bytes_estimate
+from .logical import (LAggregate, LFilter, LGroupBy, LJoin, LProject, LScan,
+                      LSort, from_physical, schema)
 from .metrics import BLOCK_BYTES, LatencyStats, OpMetrics, SpillAccount, latency_stats
 from .path_selector import Decision, PathSelector
+from .planner import Program, plan_program, prune_columns, push_filters
 from .relation import Relation, column_token
 from .runtime_profile import DEFAULT_PROFILE, RuntimeProfile, size_bucket
+from .session import Query, Session
 from .spill import SpillManager
 from .table_cache import (KeyStats, get_device_columns, key_stats,
                           pending_upload_bytes, table_cache_clear,
@@ -32,15 +59,19 @@ from .tensor_engine import (
 __all__ = [
     "Aggregate", "BLOCK_BYTES", "CostConstants", "CostModel",
     "DEFAULT_PROFILE", "Decision", "DeviceColumn", "DeviceRelation",
-    "Executor", "Filter", "FragmentEstimate", "FusedSpec", "GroupBy",
-    "HashTable", "Join", "KeyStats", "LatencyStats", "OpMetrics",
-    "PathSelector", "QueryResult", "Relation", "RuntimeProfile", "Scan",
-    "Sort", "SpillAccount", "SpillManager", "aligned_join_indices",
-    "capacity_bucket", "column_token", "get_device_columns",
+    "Executor", "Expr", "Filter", "FragmentEstimate", "FusedSpec", "GroupBy",
+    "HashTable", "Join", "KeyStats", "LAggregate", "LFilter", "LGroupBy",
+    "LJoin", "LProject", "LScan", "LSort", "LatencyStats", "OpMetrics",
+    "PHYSICAL_NODES", "PathSelector", "Program", "Project", "Query",
+    "QueryResult", "Relation",
+    "RuntimeProfile", "Scan", "Session", "Sort", "SpillAccount",
+    "SpillManager", "aligned_join_indices", "capacity_bucket", "col",
+    "column_token", "from_physical", "get_device_columns",
     "hash_join_linear", "join_capacity", "key_stats",
     "group_aggregate_device", "group_aggregate_linear", "group_aggregate_tensor",
-    "latency_stats", "match_fragment", "pending_upload_bytes",
-    "pipeline_cache_clear", "pipeline_cache_info", "run_fused", "size_bucket",
+    "latency_stats", "lit", "match_fragment", "pending_upload_bytes",
+    "pipeline_cache_clear", "pipeline_cache_info", "plan_program",
+    "prune_columns", "push_filters", "run_fused", "schema", "size_bucket",
     "sort_linear", "table_bytes_estimate", "table_cache_clear",
     "table_cache_info", "tensor_join", "tensor_join_aggregate",
     "tensor_join_device", "tensor_sort", "tensor_sort_device",

@@ -143,8 +143,8 @@ class CostModel:
     def estimate_fragment(self, n_build: int, n_probe: int, row_bytes_b: int,
                           row_bytes_p: int, est_out: int, work_mem: int,
                           num_sort_keys: int = 0, has_filter: bool = False,
-                          has_agg: bool = False,
-                          h2d_bytes: int = 0) -> FragmentEstimate:
+                          has_agg: bool = False, h2d_bytes: int = 0,
+                          filter_selectivity: float = 1.0) -> FragmentEstimate:
         """Cost a whole fusable fragment instead of its operators in isolation.
 
         The linear side is the sum of its per-operator costs (join + sort over
@@ -154,32 +154,43 @@ class CostModel:
         across operators), exactly one host sync is charged, and H2D transfer
         is an explicit term over the *pending* upload bytes — zero when the
         base tables are already device-resident.
+
+        ``filter_selectivity`` (an IR-only observable: the selector samples
+        introspectable ``Expr`` predicates, something opaque lambdas never
+        allowed) shrinks the rows the LINEAR side sorts/aggregates *after*
+        its filter.  The fused tensor side is unaffected by design — its
+        shapes are static capacity buckets, filtered rows are masked, not
+        removed — which is exactly why a selective filter tilts the
+        comparison toward the linear path at small scale.
         """
         join_spill, passes = self.join_spill_bytes(
             n_build, n_probe, row_bytes_b, row_bytes_p, work_mem)
         t_lin = (self.c.linear_row_cost * (n_build + n_probe + est_out)
                  + self.alpha(join_spill))
         spill = join_spill
-        logo = max(1.0, math.log2(max(2, est_out)))
+        post_filter = est_out
         if has_filter:
             t_lin += self.c.linear_row_cost * est_out
+            post_filter = int(est_out * min(1.0, max(0.0, filter_selectivity)))
+        logo = max(1.0, math.log2(max(2, post_filter)))
         if num_sort_keys:
             out_row_bytes = row_bytes_b + row_bytes_p
             s_spill, s_passes = self.sort_spill_bytes(
-                est_out, out_row_bytes, work_mem)
-            t_lin += (self.c.linear_row_cost * est_out * logo / 4
+                post_filter, out_row_bytes, work_mem)
+            t_lin += (self.c.linear_row_cost * post_filter * logo / 4
                       + self.alpha(s_spill))
             spill += s_spill
             passes += s_passes
         if has_agg:
-            t_lin += self.c.linear_row_cost * est_out
+            t_lin += self.c.linear_row_cost * post_filter
 
         logb = max(1.0, math.log2(max(2, n_build)))
+        logo_cap = max(1.0, math.log2(max(2, est_out)))  # static capacity
         rows = n_build * logb / 20 + n_probe + est_out
         if has_filter:
             rows += est_out
         if num_sort_keys:
-            rows += est_out * logo / 16 * num_sort_keys
+            rows += est_out * logo_cap / 16 * num_sort_keys
         rows += est_out  # aggregate reduction / root materialization gather
         t_ten = (self.c.fused_fixed_cost + self.c.host_sync_cost
                  + self.c.h2d_byte_cost * h2d_bytes

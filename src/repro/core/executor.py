@@ -37,7 +37,7 @@ from .spill import SpillManager
 from .tensor_engine import (tensor_join_device, tensor_sort_device)
 
 __all__ = ["Scan", "Filter", "Join", "Sort", "Aggregate", "GroupBy",
-           "Executor", "QueryResult"]
+           "Project", "PHYSICAL_NODES", "Executor", "QueryResult"]
 
 
 # -- logical plan nodes ------------------------------------------------------
@@ -96,6 +96,22 @@ class GroupBy:
 
 
 @dataclasses.dataclass
+class Project:
+    """Column subset.  Structural (dict-slice / lazy-column-slice) on both
+    regimes — never a data movement; the planner uses it to serve pruned
+    output schemas (e.g. dropping a packed join coordinate)."""
+
+    child: object
+    columns: Sequence[str]
+    name: str = "project"
+
+
+# the closed set of physical plan nodes; Executor.execute and the planner's
+# legacy detection both key off this one tuple (add new nodes HERE)
+PHYSICAL_NODES = (Scan, Filter, Join, Sort, Aggregate, GroupBy, Project)
+
+
+@dataclasses.dataclass
 class QueryResult:
     relation: Optional[Relation]
     scalar: Optional[float]
@@ -139,6 +155,14 @@ class Executor:
         self.fuse = fuse
 
     def execute(self, plan) -> QueryResult:
+        if not isinstance(plan, PHYSICAL_NODES):
+            # logical IR (or a fluent Query): route through the rewrite
+            # planner, which chains physical fragments back through this
+            # executor — same selector, same profile, merged metrics
+            from .planner import plan_program
+
+            node = plan.logical() if hasattr(plan, "logical") else plan
+            return plan_program(node).run(self)
         metrics: List[OpMetrics] = []
         decisions: List[Decision] = []
 
@@ -299,6 +323,15 @@ class Executor:
     def _exec(self, node, metrics, decisions, mgr):
         if isinstance(node, Scan):
             return node.relation
+        if isinstance(node, Project):
+            child = self._exec(node.child, metrics, decisions, mgr)
+            if not isinstance(child, (Relation, DeviceRelation)):
+                raise TypeError(
+                    "Project over a scalar-producing child (Aggregate) is "
+                    "not a valid plan shape")
+            # structural on both regimes: Relation.select slices the column
+            # dict, DeviceRelation.select keeps lazy gathers pending
+            return child.select(list(node.columns))
         if isinstance(node, Filter):
             child = self._exec(node.child, metrics, decisions, mgr)
             if isinstance(child, DeviceRelation):

@@ -64,21 +64,47 @@ def _value_safe(v) -> bool:
     return isinstance(v, _VALUE_TYPES)
 
 
+def _freeze(v):
+    """Type-tagged value for a cache key.  Python equates ``1 == 1.0 ==
+    True`` while the traced program bakes the concrete dtype in, so a
+    captured value rebound across those types must be a different cache
+    entry, not a dict-key collision resurrecting the stale program."""
+    if isinstance(v, tuple):
+        return ("tuple",) + tuple(_freeze(x) for x in v)
+    return (type(v).__name__, v)
+
+
 def _predicate_key(fn: Optional[Callable]):
     """Cache identity for a filter predicate.
 
-    Plans typically rebuild their predicate lambda per query; keying on
-    ``id(fn)`` would miss the cache every time and pin each dead lambda
-    alive inside a compiled program.  Identical code at the same source
-    location with equal closure/default/global captures is the same
-    predicate — but only when every captured value is value-comparable
-    (:func:`_value_safe`).  Anything else (mutable objects, arrays, nested
+    IR-built predicates (:class:`repro.core.expr.Expr`) carry their own
+    canonical :meth:`~repro.core.expr.Expr.cache_token` — structural value
+    identity with no bytecode inspection at all; this is the primary path
+    for queries built through :mod:`repro.core.session`.
+
+    Legacy lambdas fall back to bytecode keying: plans typically rebuild
+    their predicate lambda per query; keying on ``id(fn)`` would miss the
+    cache every time and pin each dead lambda alive inside a compiled
+    program.  Identical code at the same source location with equal
+    closure/default/global captures is the same predicate — but only when
+    every captured value is value-comparable (:func:`_value_safe`), and
+    captured values are *type-tagged* (:func:`_freeze`) so rebinding a
+    cell across equal-comparing types (``1`` → ``1.0`` → ``True``) is a
+    different entry.  Anything else (mutable objects, arrays, nested
     functions) falls back to object identity: fresh lambdas then re-trace
     (correct, just slower), and a *reused* lambda over mutated state keeps
     jax.jit's own closed-over-state semantics.
     """
     if fn is None:
         return None
+    from .expr import CombinedPredicate, Expr
+
+    if isinstance(fn, Expr):
+        return ("expr", fn.cache_token())
+    if isinstance(fn, CombinedPredicate):
+        # planner-merged mixed conjunction: compose the per-part keys so a
+        # replanned query (fresh wrapper, same parts) stays one cache entry
+        return ("and",) + tuple(_predicate_key(p) for p in fn.parts)
     try:
         code = fn.__code__
         cells = tuple(c.cell_contents for c in (fn.__closure__ or ()))
@@ -90,7 +116,8 @@ def _predicate_key(fn: Optional[Callable]):
                 and all(_value_safe(v) for _, v in globs)):
             return ("id", id(fn))
         key = ("code", code.co_filename, code.co_firstlineno, code.co_code,
-               code.co_consts, cells, globs, defaults)
+               code.co_consts, _freeze(cells),
+               tuple((nm, _freeze(v)) for nm, v in globs), _freeze(defaults))
         hash(key)
         return key
     except Exception:
@@ -99,32 +126,44 @@ def _predicate_key(fn: Optional[Callable]):
 
 @dataclasses.dataclass(frozen=True)
 class FusedSpec:
-    """A fusable plan fragment rooted at Aggregate or Sort over a Scan join."""
+    """A fusable plan fragment over a Scan join: ``[Project](Aggregate?(
+    Sort?(Filter?(Join))))``.  ``project`` narrows a relation root's output
+    schema — projected-away columns are never gathered and never cross the
+    device→host boundary."""
 
     join_key: str
     filter_fn: Optional[Callable]  # predicate over a column view, or None
     sort_keys: Tuple[str, ...]     # () = no sort stage
     agg: Optional[Tuple[str, str]]  # (column, fn) for a scalar root, or None
+    project: Optional[Tuple[str, ...]] = None  # relation-root column subset
 
     def cache_signature(self) -> Tuple:
         return (self.join_key, _predicate_key(self.filter_fn),
-                self.sort_keys, self.agg)
+                self.sort_keys, self.agg, self.project)
 
 
 def match_fragment(plan):
     """Recognize Aggregate?(Sort?(Filter?(Join(Scan, Scan)))) fragments.
 
     Returns ``(spec, build_relation, probe_relation)`` or None.  At least one
-    of the Sort/Aggregate stages must be present (a bare join gains nothing
-    from fusion over the device-resident per-op path).
+    of the Filter/Sort/Aggregate stages must be present (a bare join gains
+    nothing from fusion over the device-resident per-op path; a filtered
+    join does — the predicate folds into the validity mask, and the
+    planner's pushed-down filters keep multi-join stages on this path).
     """
-    from .executor import Aggregate, Filter, Join, Scan, Sort
+    from .executor import Aggregate, Filter, Join, Project, Scan, Sort
 
     node = plan
     agg = None
     sort_keys: Tuple[str, ...] = ()
     filter_fn = None
+    project = None
+    if isinstance(node, Project):
+        project = tuple(node.columns)
+        node = node.child
     if isinstance(node, Aggregate):
+        if project is not None:
+            return None  # Project(Aggregate) is not a planner shape
         agg = (node.column, node.fn)
         node = node.child
     if isinstance(node, Sort):
@@ -137,12 +176,13 @@ def match_fragment(plan):
         return None
     if not (isinstance(node.build, Scan) and isinstance(node.probe, Scan)):
         return None
-    if agg is None and not sort_keys:
+    if agg is None and not sort_keys and filter_fn is None and project is None:
         return None
     build, probe = node.build.relation, node.probe.relation
     if len(build) == 0 or len(probe) == 0:
         return None  # degenerate inputs keep the generic path's exact semantics
-    return (FusedSpec(node.key, filter_fn, sort_keys, agg), build, probe)
+    return (FusedSpec(node.key, filter_fn, sort_keys, agg, project),
+            build, probe)
 
 
 # ---------------------------------------------------------------------------
@@ -167,15 +207,21 @@ class _JoinView:
 
     def names(self):
         out = list(self._pcols)
-        out += [f"b_{n}" for n in self._bcols if n != self._key]
+        out += [f"b_{n}" for n in self._bcols
+                if n != self._key and f"b_{n}" not in out]
         return out
 
     def __getitem__(self, name: str) -> jnp.ndarray:
         if name not in self._cache:
-            if name in self._pcols:
-                self._cache[name] = jnp.take(self._pcols[name], self._pidx)
-            elif name.startswith("b_") and name[2:] in self._bcols:
+            # build side resolves first: when a probe column is literally
+            # named b_<x> and the build side has x, the engine's join
+            # (a dict merge that assigns build columns last) serves the
+            # BUILD column under that name — the view must agree
+            if (name.startswith("b_") and name[2:] in self._bcols
+                    and name[2:] != self._key):
                 self._cache[name] = jnp.take(self._bcols[name[2:]], self._bidx)
+            elif name in self._pcols:
+                self._cache[name] = jnp.take(self._pcols[name], self._pidx)
             else:
                 raise KeyError(name)
         return self._cache[name]
@@ -375,12 +421,14 @@ def _build_program(spec: FusedSpec, key: str, capacity: int,
             return {"total": total, "has_dup": has_dup, "scalar": scalar,
                     "agg_n": v.sum()}
 
-        # relation root (sort is the last stage): gather the full joined
-        # schema through the sorted indices — the only payload gathers in
-        # the whole pipeline, and they happen once, on device
+        # relation root (sort is the last stage): gather the output schema
+        # through the sorted indices — the only payload gathers in the
+        # whole pipeline, and they happen once, on device.  A projected
+        # root gathers (and later fetches) only its declared subset.
+        out_names = view.names() if spec.project is None else spec.project
         out_cols = {name: (view[name] if perm is None
                            else jnp.take(view[name], perm))
-                    for name in view.names()}
+                    for name in out_names}
         out_valid = valid if perm is None else jnp.take(valid, perm)
         return {"total": total, "has_dup": has_dup, "cols": out_cols,
                 "valid": out_valid}

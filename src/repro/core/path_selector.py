@@ -36,6 +36,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 from .cost_model import CostModel
 from .device_relation import DeviceRelation
 from .relation import Relation
@@ -128,10 +130,63 @@ class PathSelector:
             t_lin, t_ten, est.spill_bytes)
 
     # -- fused fragment (plan-level, PR 2) ----------------------------------
+    @staticmethod
+    def _filter_selectivity(filter_fn, probe: Relation,
+                            build=None) -> float:
+        """Sampled selectivity of an introspectable (Expr) predicate.
+
+        This is the observability the logical IR buys over opaque lambdas:
+        when the predicate reads only probe-side columns, evaluating it over
+        a small prefix sample predicts how many joined rows survive the
+        fragment's filter — the linear path's sort/aggregate work shrinks
+        accordingly.  Opaque callables (or build-side references, which
+        would need the join) stay at selectivity 1.0."""
+        from .expr import Expr
+        from .relation import column_token
+
+        if not isinstance(filter_fn, Expr) or not isinstance(probe, Relation):
+            return 1.0  # opaque predicate, or device-resident input (no
+            #             host sample without a regime-crossing fetch)
+        cols = sorted(filter_fn.columns())
+        if len(probe) == 0 or not (set(cols) <= set(probe.names)):
+            return 1.0
+        if build is not None and any(
+                c.startswith("b_") and c[2:] in build.names for c in cols):
+            # the join naming contract resolves this name to the BUILD side
+            # (build wins collisions); the probe's same-named column is a
+            # different column and would feed a wrong selectivity
+            return 1.0
+        # memoized like key_stats: warm serving queries must not pay a
+        # per-query sample evaluation (entries shared with select() subs)
+        cache = probe.__dict__.setdefault("_sel_cache", {})
+        tokens = tuple(column_token(probe[c]) for c in cols)
+        tok = filter_fn.cache_token()
+        hit = cache.get(tok)
+        if hit is not None and hit[0] == tokens:
+            return hit[1]
+        # strided sample, not a prefix: tables sorted/clustered by the
+        # filtered column (e.g. time-ordered facts filtered on recency)
+        # would make a prefix systematically unrepresentative and pin the
+        # selector on a mispriced path
+        stride = max(1, len(probe) // 4096)
+        sample = {c: probe[c][::stride] for c in cols}
+        try:
+            mask = np.asarray(filter_fn(sample), bool)
+        except Exception:
+            return 1.0
+        sel = float(mask.mean()) if mask.ndim else 1.0
+        if len(cache) >= 64:
+            cache.clear()  # tiny float entries; crude bound is enough
+        cache[tok] = (tokens, sel)
+        return sel
+
     def choose_fragment(self, spec, build: Relation, probe: Relation) -> Decision:
         """Price a whole fusable fragment: ONE fixed dispatch, ONE host sync,
         and H2D transfer only for base-table columns not already resident in
-        the device cache (warm serving queries charge 0)."""
+        the device cache (warm serving queries charge 0).  Fragments arrive
+        from the rewrite planner, so this prices the REWRITTEN plan — pruned
+        scans carry smaller row_bytes, pushed-down filters carry sampled
+        selectivity."""
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
         from .tensor_engine import capacity_bucket
@@ -145,7 +200,9 @@ class PathSelector:
             n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out,
             self.work_mem, num_sort_keys=len(spec.sort_keys),
             has_filter=spec.filter_fn is not None,
-            has_agg=spec.agg is not None, h2d_bytes=h2d)
+            has_agg=spec.agg is not None, h2d_bytes=h2d,
+            filter_selectivity=self._filter_selectivity(spec.filter_fn,
+                                                        probe, build))
         n = n_b + n_p
         t_lin = self.profile.blend(est.t_linear, "fragment", "linear", n)
         t_ten = self.profile.blend(est.t_tensor, "fragment", "tensor", n)

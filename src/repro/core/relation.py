@@ -95,10 +95,16 @@ class Relation:
 
         The caches invalidate automatically via sampled content tokens; this
         is the explicit, guaranteed path for callers that mutate columns
-        in place between queries.
+        in place between queries.  The cache dicts are cleared *in place*
+        and kept (not popped): sub-relations made with :meth:`select` share
+        them by reference, so clearing invalidates every selection while
+        preserving the shared-object contract for later warm-sharing.
         """
-        self.__dict__.pop("_device_cache", None)
-        self.__dict__.pop("_key_stats", None)
+        for attr in ("_device_cache", "_key_stats", "_packed_cols",
+                     "_sel_cache"):
+            store = self.__dict__.get(attr)
+            if store is not None:
+                store.clear()
         self.__dict__.pop("_device_cols", None)  # pre-PR2 attr name
 
     def row_bytes(self) -> int:
@@ -109,7 +115,24 @@ class Relation:
         return Relation({k: v[idx] for k, v in self.columns.items()})
 
     def select(self, names: Iterable[str]) -> "Relation":
-        return Relation({k: self.columns[k] for k in names})
+        """Column subset that SHARES this relation's device-cache state.
+
+        A selected sub-relation holds the same numpy column objects, so its
+        device uploads and key-cardinality sketches are interchangeable with
+        the parent's: both point at the parent's cache dicts (same object,
+        not a copy).  Projection-pruned scans therefore reuse columns the
+        parent already uploaded — and uploads made through a pruned scan
+        warm the parent and every sibling selection, across queries, even
+        though the planner builds a fresh sub-relation per query.
+        (Entries are token-checked per column, so staleness detection is
+        unchanged; ``invalidate_device_cache`` on the *parent* drops the
+        shared state for all of them.)
+        """
+        sub = Relation({k: self.columns[k] for k in names})
+        for attr in ("_device_cache", "_key_stats", "_packed_cols",
+                     "_sel_cache"):
+            sub.__dict__[attr] = self.__dict__.setdefault(attr, {})
+        return sub
 
     def rename(self, mapping: Mapping[str, str]) -> "Relation":
         return Relation({mapping.get(k, k): v for k, v in self.columns.items()})

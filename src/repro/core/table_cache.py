@@ -21,8 +21,13 @@ makes both **resident across queries**:
 
 Storing the cache on the `Relation` instance ties entry lifetime to the table
 itself (dropped with the relation, no global growth) and sidesteps `id()`
-reuse.  `REPRO_TABLE_CACHE=0` disables caching (every query re-uploads and
-re-samples); global hit/miss/H2D counters are exposed via
+reuse.  Sub-relations made with :meth:`Relation.select` share the parent's
+cache dicts *by reference*: the planner's projection-pruned scans (fresh
+instances every query) re-use — and warm — the base table's uploads and
+sketches, entries stay token-checked per column, and
+:meth:`Relation.invalidate_device_cache` on the parent reaches every
+selection.  `REPRO_TABLE_CACHE=0` disables caching (every query re-uploads
+and re-samples); global hit/miss/H2D counters are exposed via
 :func:`table_cache_info` for tests and benchmarks.
 """
 from __future__ import annotations

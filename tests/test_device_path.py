@@ -473,6 +473,121 @@ def test_predicate_cache_identity_fallback_for_mutable_captures():
     assert loose > 0 and tight == 0.0, (loose, tight)
 
 
+def test_predicate_cache_rebound_cell_is_new_entry():
+    """Rebinding a closure cell between queries (same lambda OBJECT) must
+    produce a different pipeline-cache entry — the captured value is traced
+    into the compiled program, so reusing the old entry would silently
+    filter with the stale constant (regression)."""
+    pipeline_cache_clear()
+    rng = np.random.default_rng(73)
+    build, probe = _tables(rng, 256, 256, bkeys=rng.permutation(256))
+
+    cut = 2.0
+    pred = lambda r: r["w"] > cut  # ONE lambda, cell rebound between runs
+
+    def run():
+        plan = Aggregate(Sort(Filter(Join(Scan(build), Scan(probe), "k"),
+                                     pred), ["k"]), "b_v", "count")
+        return Executor(work_mem=1 << 30, policy="tensor").execute(plan).scalar
+
+    loose = run()
+    assert pipeline_cache_info()["misses"] == 1
+    cut = 80.0
+    tight = run()
+    assert pipeline_cache_info()["misses"] == 2  # rebound float → new entry
+    assert loose > tight, (loose, tight)
+    cut = 2.0
+    again = run()  # rebinding BACK hits the first entry with the right value
+    assert pipeline_cache_info()["misses"] == 2
+    assert again == loose
+
+
+def test_predicate_cache_type_tags_captured_values():
+    """``1 == 1.0 == True`` as dict keys: a captured value rebound across
+    equal-comparing types must be a distinct cache entry, not a collision
+    resurrecting the program traced with the other dtype (regression)."""
+    pipeline_cache_clear()
+    rng = np.random.default_rng(79)
+    build, probe = _tables(rng, 256, 256, bkeys=rng.permutation(256))
+
+    cut = 1
+    pred = lambda r: r["w"] > cut
+
+    def run():
+        plan = Aggregate(Sort(Filter(Join(Scan(build), Scan(probe), "k"),
+                                     pred), ["k"]), "b_v", "count")
+        return Executor(work_mem=1 << 30, policy="tensor").execute(plan).scalar
+
+    r_int = run()
+    cut = 1.0
+    r_float = run()
+    cut = True
+    r_bool = run()
+    assert pipeline_cache_info()["misses"] == 3  # int / float / bool distinct
+    assert r_int == r_float == r_bool  # same comparison semantics, though
+
+
+def test_ir_predicates_skip_bytecode_keying():
+    """Expr-built filters cache by their canonical token: two structurally
+    equal expressions built at different source locations share ONE compiled
+    program (bytecode keying could never see through source location)."""
+    from repro.core import col
+
+    pipeline_cache_clear()
+    rng = np.random.default_rng(83)
+    build, probe = _tables(rng, 256, 256, bkeys=rng.permutation(256))
+
+    def make_a():
+        return (col("w") > 0) & col("k").isin([1, 2, 3])
+
+    def make_b():  # different lines, same meaning
+        lhs = col("w") > 0
+        rhs = col("k").isin([1, 2, 3])
+        return lhs & rhs
+
+    results = []
+    for mk in (make_a, make_b):
+        plan = Aggregate(Sort(Filter(Join(Scan(build), Scan(probe), "k"),
+                                     mk()), ["k"]), "b_v", "count")
+        results.append(
+            Executor(work_mem=1 << 30, policy="tensor").execute(plan).scalar)
+    info = pipeline_cache_info()
+    assert info["misses"] == 1 and info["hits"] == 1, info
+    assert results[0] == results[1]
+
+
+def test_filter_only_join_fragment_fuses():
+    """Filter(Join(Scan, Scan)) — the shape pushed-down filters produce in
+    multi-join chains — runs as ONE fused program with a single sync."""
+    rng = np.random.default_rng(89)
+    build, probe = _tables(rng, 512, 512, bkeys=rng.permutation(512))
+    plan = lambda: Filter(Join(Scan(build), Scan(probe), "k"),
+                          lambda r: r["w"] > 0)
+    q = Executor(work_mem=1 << 30, policy="tensor").execute(plan())
+    assert [m.op for m in q.metrics] == ["fused_pipeline"]
+    assert q.total_host_syncs == 1
+    ref = Executor(work_mem=1 << 30, policy="linear").execute(plan())
+    assert q.relation.sort_canonical().equals(ref.relation.sort_canonical())
+
+
+def test_projected_fragment_gathers_subset():
+    """Project(Sort(Join)) fuses with the projection folded into the spec:
+    only the projected columns cross the device→host boundary."""
+    from repro.core import Project, match_fragment
+
+    rng = np.random.default_rng(97)
+    build, probe = _tables(rng, 512, 512, domain=32)
+    plan = lambda: Project(Sort(Join(Scan(build), Scan(probe), "k"),
+                                ["k", "w"]), ["k", "w"])
+    frag = match_fragment(plan())
+    assert frag is not None and frag[0].project == ("k", "w")
+    q = Executor(work_mem=1 << 30, policy="tensor").execute(plan())
+    assert [m.op for m in q.metrics] == ["fused_pipeline"]
+    assert set(q.relation.names) == {"k", "w"}
+    ref = Executor(work_mem=1 << 30, policy="linear").execute(plan())
+    assert q.relation.sort_canonical().equals(ref.relation.sort_canonical())
+
+
 def test_pallas_sort_empty_relation(monkeypatch):
     """REPRO_PALLAS=1 sort of a 0-row relation must return empty, not crash
     in the tile-size arithmetic (regression)."""

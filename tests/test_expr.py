@@ -1,0 +1,184 @@
+"""Expression language: numpy/jnp lowering parity, canonical cache tokens.
+
+Property-style but hypothesis-free (the optional dependency must not gate
+this coverage): a grid of expression builders × data profiles, each asserted
+equal between the host numpy evaluation and the jitted jnp evaluation —
+including NaN propagation and int/float promotion edges — plus token
+stability across rebuilt-but-equal trees.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.expr import BinOp, Col, Expr, IsIn, Lit, col, lit
+
+# ---------------------------------------------------------------------------
+# Data profiles: the dtype/value edges lowering must agree on
+# ---------------------------------------------------------------------------
+
+
+def _profiles():
+    rng = np.random.default_rng(7)
+    n = 257
+    return {
+        "ints": {
+            "x": rng.integers(-50, 50, n).astype(np.int64),
+            "y": rng.integers(1, 20, n).astype(np.int64),
+        },
+        "mixed_int_float": {
+            "x": rng.integers(-50, 50, n).astype(np.int64),
+            "y": rng.normal(0, 10, n),
+        },
+        "floats_with_nan": {
+            "x": np.where(rng.random(n) < 0.2, np.nan, rng.normal(0, 5, n)),
+            "y": np.where(rng.random(n) < 0.2, np.nan, rng.normal(0, 5, n)),
+        },
+        "int32_narrow": {
+            "x": rng.integers(-5, 5, n).astype(np.int32),
+            "y": rng.integers(1, 4, n).astype(np.int32),
+        },
+    }
+
+
+# builders: name -> expression over columns x, y
+EXPRS = {
+    "cmp_gt": lambda: col("x") > 0,
+    "cmp_le_float": lambda: col("x") <= 1.5,
+    "arith_chain": lambda: (col("x") * 2 + col("y")) - 3,
+    "division_promotes": lambda: col("x") / col("y") > 0.5,
+    "floordiv_mod": lambda: (col("x") // 2) % 3 == 1,
+    "bool_algebra": lambda: ((col("x") > 0) & (col("y") > 0))
+    | ~(col("x") <= col("y")),
+    "reflected": lambda: (0 < col("x")) & (10 - col("x") > col("y")),
+    "isin": lambda: col("x").isin([1, 2, 3, -4]),
+    "isin_negated": lambda: ~col("x").isin([0]) & (col("y") >= 1),
+    "nan_cmp": lambda: col("x") == col("x"),  # NaN != NaN on both paths
+    "mixed_promote": lambda: (col("x") + 0.5) * col("y") >= 2,
+}
+
+
+@pytest.mark.parametrize("profile", sorted(_profiles()))
+@pytest.mark.parametrize("name", sorted(EXPRS))
+def test_numpy_jnp_lowering_parity(profile, name):
+    cols = _profiles()[profile]
+    expr = EXPRS[name]()
+    host = np.asarray(expr(cols))
+
+    jitted = jax.jit(lambda c: expr(c))
+    dev = np.asarray(jitted({k: jnp.asarray(v) for k, v in cols.items()}))
+
+    assert host.shape == dev.shape
+    if host.dtype == bool:
+        np.testing.assert_array_equal(host, np.asarray(dev, bool))
+    else:
+        np.testing.assert_allclose(host, dev, rtol=1e-12, atol=0,
+                                   equal_nan=True)
+
+
+def test_expr_evaluates_on_relation_and_devicerelation():
+    """One Expr serves every engine view type: host Relation, DeviceRelation
+    (device arrays), and a plain dict."""
+    from repro.core import DeviceRelation, Relation
+
+    rel = Relation({"x": np.array([-2, -1, 0, 1, 2], np.int64),
+                    "y": np.array([1, 1, 2, 2, 3], np.int64)})
+    expr = (col("x") > 0) & col("y").isin([2, 3])
+    want = np.array([False, False, False, True, True])
+    np.testing.assert_array_equal(np.asarray(expr(rel)), want)
+    np.testing.assert_array_equal(
+        np.asarray(expr(DeviceRelation.from_host(rel))), want)
+    np.testing.assert_array_equal(np.asarray(expr(dict(rel.columns))), want)
+
+
+# ---------------------------------------------------------------------------
+# Cache tokens: stable across rebuilds, distinct across meaning
+# ---------------------------------------------------------------------------
+
+
+def test_cache_token_stable_across_rebuilt_equal_exprs():
+    for name, mk in EXPRS.items():
+        assert mk().cache_token() == mk().cache_token(), name
+        hash(mk().cache_token())  # must be usable as a dict key
+
+
+def test_cache_token_distinguishes_structure_and_values():
+    tokens = {
+        "gt0": (col("x") > 0).cache_token(),
+        "gt1": (col("x") > 1).cache_token(),
+        "ge0": (col("x") >= 0).cache_token(),
+        "other_col": (col("y") > 0).cache_token(),
+        "flipped": (lit(0) < col("x")).cache_token(),
+        "isin": col("x").isin([0, 1]).cache_token(),
+        "isin_other": col("x").isin([0, 2]).cache_token(),
+    }
+    assert len(set(tokens.values())) == len(tokens)
+
+
+def test_cache_token_type_tags_equal_comparing_literals():
+    """1 == 1.0 == True in Python, but each traces to a different program:
+    the token must keep them distinct (the dict-key collision hazard)."""
+    toks = {(col("x") > v).cache_token() for v in (1, 1.0, True)}
+    assert len(toks) == 3
+    toks_isin = {col("x").isin([v]).cache_token() for v in (0, 0.0, False)}
+    assert len(toks_isin) == 3
+
+
+def test_reflected_ops_token_matches_explicit_form():
+    """``0 < col`` builds through the reflected operator as ``col > 0``."""
+    assert (0 < col("x")).cache_token() == (col("x") > 0).cache_token()
+
+
+# ---------------------------------------------------------------------------
+# Planner-facing introspection
+# ---------------------------------------------------------------------------
+
+
+def test_columns_and_rename():
+    e = ((col("w") > 0) & (col("b_region") <= 2)) | col("w").isin([5])
+    assert e.columns() == {"w", "b_region"}
+    r = e.rename_columns({"b_region": "region"})
+    assert r.columns() == {"w", "region"}
+    # rename does not mutate the original
+    assert e.columns() == {"w", "b_region"}
+
+
+def test_conjuncts_split():
+    a, b, c = col("x") > 0, col("y") > 1, col("x").isin([2])
+    e = a & b & c
+    parts = e.conjuncts()
+    assert len(parts) == 3
+    assert {p.cache_token() for p in parts} == {
+        a.cache_token(), b.cache_token(), c.cache_token()}
+    # OR does not split
+    assert len((a | b).conjuncts()) == 1
+
+
+def test_invalid_operands_rejected():
+    with pytest.raises(TypeError):
+        col("x") > "a string"
+    with pytest.raises(TypeError):
+        col("x").isin(["a"])
+
+
+def test_truth_testing_raises_instead_of_dropping_operands():
+    """`0 < col < 10` desugars to `(0 < col) and (col < 10)`, and `and`
+    truth-tests its left operand — which would silently drop it from the
+    predicate.  Expr must refuse boolean coercion (regression)."""
+    with pytest.raises(TypeError, match="ambiguous"):
+        bool(col("x") > 0)
+    with pytest.raises(TypeError, match="ambiguous"):
+        0 < col("x") < 10  # noqa: B015 — the chained form IS the test
+    with pytest.raises(TypeError, match="ambiguous"):
+        (col("x") > 0) and (col("x") < 10)  # noqa: B015
+
+
+def test_predicate_key_routes_expr_through_cache_token():
+    from repro.core.fused import _predicate_key
+
+    e1 = (col("w") > 0) & col("k").isin([1, 2])
+    e2 = (col("w") > 0) & col("k").isin([1, 2])
+    assert _predicate_key(e1) == _predicate_key(e2) == (
+        "expr", e1.cache_token())
+    assert _predicate_key(col("w") > 1) != _predicate_key(e1)
