@@ -13,8 +13,8 @@ import numpy as np
 from repro.core import (BLOCK_BYTES, Aggregate, CostModel, Executor, Filter,
                         Join, OpMetrics, PathSelector, Relation,
                         RuntimeProfile, Scan, Sort, SpillAccount,
-                        hash_join_linear, sort_linear, tensor_join,
-                        tensor_sort)
+                        hash_join_linear, latency_stats, sort_linear,
+                        tensor_join, tensor_sort)
 from repro.core.metrics import Timer
 
 from .common import emit, join_tables, measure, sort_table
@@ -532,6 +532,134 @@ def fig10_star_join(reps: int = 7) -> Dict:
     return out
 
 
+# -- Fig 11: concurrent serving under a global memory budget -------------------
+
+def fig11_concurrent_tail(reps: int = 6) -> Dict:
+    """Closed-loop concurrent serving: the paper's P99 phase transition.
+
+    N worker threads run a MIXED query stream (3 small star joins : 1 large,
+    the satellite workload shape) back-to-back against ONE shared Session,
+    with every linear operator drawing its work_mem from a shared
+    :class:`MemoryGovernor` budget.  Sweeps concurrency × total-memory-budget
+    for each policy:
+
+      * **generous budget** — every request is served in full; the linear
+        path never spills and all three policies are stable;
+      * **constrained budget** — the small queries' grants always fit (the
+        fast tier that anchors P50), but the large query's hash table
+        (~32 MB) exceeds the ENTIRE budget: on the linear path it is always
+        degraded to the admission floor and collapses into the deep spill
+        regime — the multi-second tail, produced by contention for one
+        pool, exactly as in the paper's work_mem=1MB prototype.  The
+        tensor path holds no grants and stays stable; ``auto`` — whose
+        fragment costing sees the would-be grant (pressure) — prices the
+        large fragment with its spill term at ANY budget state and keeps
+        serving from the fused path (deterministically: no feedback drift
+        can flip a fragment whose linearized intermediate cannot fit).
+
+    Latency stats exclude each worker's first query (startup ramp: all
+    workers arrive simultaneously, which no open system does); wall times
+    include admission wait and device-queue wait — end-to-end, as a client
+    would see.  Hard gates (the PR acceptance criterion) on the constrained
+    high-concurrency cell: linear P99/P50 >= 3x, tensor and auto <= 1.5x,
+    and the governor invariant (zero over-budget grants, peak <= budget).
+    """
+    from repro.core import QueryServer
+
+    n_small, n_large = 200_000, 600_000
+    work_mem = 32 * MB
+    budgets = {"generous": 512 * MB, "constrained": 24 * MB}
+    cells = [(2, "generous"), (8, "constrained")]
+    if reps >= 6:  # full sweep off CI: the remaining grid corners
+        cells = [(2, "generous"), (8, "generous"),
+                 (2, "constrained"), (8, "constrained")]
+    qpw = max(4, int(reps))
+    sb, sp = join_tables(n_small, seed=1)
+    lb, lp = join_tables(n_large, seed=2)
+    out: Dict = {}
+    scalars: Dict[int, set] = {0: set(), 1: set()}
+    for conc, budget_name in cells:
+        budget = budgets[budget_name]
+        cell: Dict = {}
+        for policy in ("linear", "tensor", "auto"):
+            server = QueryServer(
+                {"small_build": sb, "small_probe": sp,
+                 "large_build": lb, "large_probe": lp},
+                total_mem=budget, work_mem=work_mem, policy=policy,
+                min_grant=2 * MB)
+            small = (server.session.table("small_probe")
+                     .join("small_build", on="k")
+                     .sort("k", "w").aggregate("b_v", "sum"))
+            large = (server.session.table("large_probe")
+                     .join("large_build", on="k")
+                     .sort("k", "w").aggregate("b_v", "sum"))
+            rep = server.serve([small, small, small, large],
+                               concurrency=conc, queries_per_worker=qpw,
+                               warmup=2)
+            for r in rep.queries:
+                scalars[1 if r.workload_idx == 3 else 0].add(r.scalar)
+            steady = [r for r in rep.queries if r.seq > 0]
+            s = latency_stats([r.wall_s for r in steady])
+            # per-class stats separate workload heterogeneity (small vs
+            # large queries are different sizes by design) from
+            # INSTABILITY (the same query class going multi-second only
+            # when its grant is squeezed — the paper's phenomenon)
+            sm = latency_stats([r.wall_s for r in steady
+                                if r.workload_idx != 3])
+            lg = latency_stats([r.wall_s for r in steady
+                                if r.workload_idx == 3])
+            gov = rep.governor
+            ratio = s.p99 / max(s.p50, 1e-9)
+            emit(f"fig11/{budget_name}_c{conc}_{policy}", s.p50 * 1e6,
+                 {"p99_s": round(s.p99, 4),
+                  "p99_over_p50": round(ratio, 2),
+                  "small_p50_s": round(sm.p50, 4),
+                  "large_p50_s": round(lg.p50, 4),
+                  "large_p99_s": round(lg.p99, 4),
+                  "spill_mb": round(rep.total_temp_mb, 1),
+                  "degraded_grants": gov.degraded,
+                  "admission_waits": gov.waits,
+                  "peak_grant_mb": round(gov.peak_in_use / 1e6, 1),
+                  "over_budget": gov.over_budget_events,
+                  "qps": round(rep.qps, 2)})
+            cell[policy] = {"p50": s.p50, "p99": s.p99, "ratio": ratio,
+                            "small_p50": sm.p50, "large_p50": lg.p50,
+                            "large_p99": lg.p99,
+                            "spill_mb": rep.total_temp_mb,
+                            "degraded": gov.degraded,
+                            "peak_mb": gov.peak_in_use / 1e6,
+                            "over_budget": gov.over_budget_events}
+            if gov.over_budget_events:
+                raise RuntimeError(
+                    f"governor over-granted its budget in "
+                    f"{budget_name}/c{conc}/{policy}: {gov}")
+            if gov.peak_in_use > budget:
+                raise RuntimeError(
+                    f"governor peak {gov.peak_in_use} B exceeds budget "
+                    f"{budget} B in {budget_name}/c{conc}/{policy}")
+        out[f"{budget_name}_c{conc}"] = cell
+    if any(len(v) != 1 for v in scalars.values()):
+        raise RuntimeError(
+            f"concurrent results diverged across policies/cells: {scalars}")
+    # THE acceptance gate: under the constrained budget at concurrency >= 8
+    # the linear path's tail collapses (>= 3x amplification) while the
+    # tensor path and the pressure-aware auto policy stay predictable.
+    gate = out["constrained_c8"]
+    if gate["linear"]["ratio"] < 3.0:
+        raise RuntimeError(
+            f"linear p99/p50 {gate['linear']['ratio']:.2f} < 3x under "
+            f"memory pressure: the spill-regime tail did not reproduce")
+    for policy in ("tensor", "auto"):
+        if gate[policy]["ratio"] > 1.5:
+            raise RuntimeError(
+                f"{policy} p99/p50 {gate[policy]['ratio']:.2f} > 1.5x: the "
+                f"stable path is not stable under concurrency")
+    if gate["linear"]["spill_mb"] <= 0:
+        raise RuntimeError("constrained linear cell never spilled; the "
+                           "governor is not creating memory pressure")
+    return out
+
+
 ALL = {
     "fig1": fig1_scalability,
     "fig3": fig3_hashtable_growth,
@@ -542,6 +670,7 @@ ALL = {
     "fig8": fig8_pipeline,
     "fig9": fig9_serving,
     "fig10": fig10_star_join,
+    "fig11": fig11_concurrent_tail,
     "headline": headline,
     "selector": selector_analysis,
     "regime": regime_model,

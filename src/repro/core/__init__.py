@@ -18,10 +18,22 @@ Layered, front to back:
     (:mod:`~repro.core.fused`), per-operator tensor/linear engines, and the
     single-materialization :class:`DeviceRelation` layer.
   * **Decision layer** — :class:`CostModel` (fragment-level regime-shift
-    costing), :class:`PathSelector` (execution-time path choice), and the
-    :class:`RuntimeProfile` feedback loop.
+    costing), :class:`PathSelector` (execution-time path choice, with a
+    per-decision ``work_mem`` override carrying the governor's pressure
+    signal), and the :class:`RuntimeProfile` feedback loop.
   * **Residency** — :mod:`~repro.core.table_cache`: device base-table column
-    cache and key-cardinality sketches, both content-token keyed.
+    cache and key-cardinality sketches, both content-token keyed and safe
+    to share across concurrent sessions.
+  * **Serving layer** — :class:`MemoryGovernor` (ONE memory budget for all
+    concurrent linear operators: full grants, floor degradation, admission
+    control, a never-over-budget invariant) and :class:`QueryServer`
+    (closed-loop concurrent driver over one shared Session, reporting
+    P50/P99, spill volume, and grant statistics per run — the fig11
+    reproduction of the paper's tail-latency claim).
+
+See ``docs/ARCHITECTURE.md`` for the full layer map, ``docs/query-api.md``
+for the front-end (including the ``explain()`` stage-chain notation), and
+``docs/costing.md`` for the decision layer.
 """
 from .cost_model import CostConstants, CostModel, FragmentEstimate
 from .aggregate import (group_aggregate_device, group_aggregate_linear,
@@ -35,11 +47,13 @@ from .fused import (FusedSpec, match_fragment, pipeline_cache_clear,
 from .linear_engine import HashTable, hash_join_linear, sort_linear, table_bytes_estimate
 from .logical import (LAggregate, LFilter, LGroupBy, LJoin, LProject, LScan,
                       LSort, from_physical, schema)
+from .memory_governor import GovernorStats, MemoryGovernor, MemoryGrant
 from .metrics import BLOCK_BYTES, LatencyStats, OpMetrics, SpillAccount, latency_stats
 from .path_selector import Decision, PathSelector
 from .planner import Program, plan_program, prune_columns, push_filters
 from .relation import Relation, column_token
 from .runtime_profile import DEFAULT_PROFILE, RuntimeProfile, size_bucket
+from .server import QueryServer, ServeReport, ServedQuery
 from .session import Query, Session
 from .spill import SpillManager
 from .table_cache import (KeyStats, get_device_columns, key_stats,
@@ -59,12 +73,15 @@ from .tensor_engine import (
 __all__ = [
     "Aggregate", "BLOCK_BYTES", "CostConstants", "CostModel",
     "DEFAULT_PROFILE", "Decision", "DeviceColumn", "DeviceRelation",
-    "Executor", "Expr", "Filter", "FragmentEstimate", "FusedSpec", "GroupBy",
+    "Executor", "Expr", "Filter", "FragmentEstimate", "FusedSpec",
+    "GovernorStats", "GroupBy",
     "HashTable", "Join", "KeyStats", "LAggregate", "LFilter", "LGroupBy",
-    "LJoin", "LProject", "LScan", "LSort", "LatencyStats", "OpMetrics",
+    "LJoin", "LProject", "LScan", "LSort", "LatencyStats",
+    "MemoryGovernor", "MemoryGrant", "OpMetrics",
     "PHYSICAL_NODES", "PathSelector", "Program", "Project", "Query",
-    "QueryResult", "Relation",
-    "RuntimeProfile", "Scan", "Session", "Sort", "SpillAccount",
+    "QueryResult", "QueryServer", "Relation",
+    "RuntimeProfile", "Scan", "ServeReport", "ServedQuery", "Session",
+    "Sort", "SpillAccount",
     "SpillManager", "aligned_join_indices", "capacity_bucket", "col",
     "column_token", "from_physical", "get_device_columns",
     "hash_join_linear", "join_capacity", "key_stats",

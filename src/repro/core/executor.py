@@ -23,13 +23,15 @@ latency, Temp_MB, working-set peaks and host-sync counts per path.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
 from .device_relation import DeviceRelation
-from .linear_engine import hash_join_linear, sort_linear
+from .linear_engine import hash_join_linear, sort_linear, table_bytes_estimate
+from .memory_governor import MemoryGovernor
 from .metrics import OpMetrics, SpillAccount, Timer
 from .path_selector import Decision, PathSelector
 from .relation import Relation
@@ -143,7 +145,8 @@ class Executor:
     def __init__(self, work_mem: int, policy: str = "auto",
                  selector: Optional[PathSelector] = None,
                  spill_root: Optional[str] = None,
-                 fuse: bool = True):
+                 fuse: bool = True,
+                 governor: Optional[MemoryGovernor] = None):
         if policy not in ("auto", "linear", "tensor"):
             raise ValueError(policy)
         force = None if policy == "auto" else policy
@@ -153,6 +156,55 @@ class Executor:
         self.work_mem = work_mem
         self.spill_root = spill_root
         self.fuse = fuse
+        # Shared memory governor (concurrent serving): linear operators
+        # acquire a grant before building their linearized intermediate and
+        # the GRANT size — not the static work_mem — bounds their memory.
+        # None keeps the single-query semantics: a private work_mem.
+        self.governor = governor
+
+    # -- memory grants -------------------------------------------------------
+    def _effective_work_mem(self, need_bytes: Optional[int] = None) -> int:
+        """The work_mem a linear operator would receive *right now* — the
+        pressure signal fed to the selector so path decisions track current
+        memory contention, not the configured ceiling.
+
+        ``need_bytes`` (the operator's estimated linearized-intermediate
+        footprint) makes the probe EXACTLY the request :meth:`_granted`
+        would make, so full-or-floor pricing matches the grant the operator
+        would actually receive.  Without it the probe is capped at the
+        governor's whole budget — a work_mem larger than the pool itself
+        would otherwise read as permanent pressure even when idle."""
+        if self.governor is None:
+            return self.work_mem
+        if need_bytes is None:
+            req = min(self.work_mem, self.governor.total_bytes)
+        else:
+            req = min(self.work_mem, max(1, int(need_bytes)))
+        return self.governor.would_grant(req)
+
+    @contextlib.contextmanager
+    def _granted(self, need_bytes: int):
+        """Grant scope for one linear operator: yields ``(work_mem, grant)``
+        where ``work_mem`` is what the operator must live within and
+        ``grant`` is None for ungoverned executors.  Requests the smaller
+        of the configured work_mem and the operator's estimated
+        linearized-intermediate footprint, so small operators under a
+        shared budget don't hoard memory they cannot use."""
+        if self.governor is None:
+            yield self.work_mem, None
+            return
+        grant = self.governor.acquire(
+            min(self.work_mem, max(1, int(need_bytes))))
+        try:
+            yield grant.size, grant
+        finally:
+            grant.release()
+
+    @staticmethod
+    def _stamp_grant(m: OpMetrics, grant) -> None:
+        if grant is not None:
+            m.grant_bytes = grant.size
+            m.grant_degraded = grant.degraded
 
     def execute(self, plan) -> QueryResult:
         if not isinstance(plan, PHYSICAL_NODES):
@@ -179,7 +231,7 @@ class Executor:
                   if isinstance(out, Relation)
                   else QueryResult(None, float(out), metrics, decisions))
         self._record_profile(metrics)
-        self._record_fragment(plan, decisions, sum(m.wall_s for m in metrics))
+        self._record_fragment(plan, decisions, metrics)
         return result
 
     # -- runtime feedback ---------------------------------------------------
@@ -198,11 +250,20 @@ class Executor:
         if prof is None:
             return
         for m in metrics:
-            prof.record(m.op, m.path, m.rows_in, m.wall_s,
+            # contention is load, not execution cost (admission owns load;
+            # the model owns cost), so two classes of wall never enter the
+            # blend: device-queue wait, and linear walls from DEGRADED
+            # grants — a spill forced by a squeezed grant says nothing
+            # about the operator's full-memory cost, and one multi-second
+            # burst sample would latch the cell against linear long after
+            # the pressure drains
+            if m.grant_degraded:
+                continue
+            prof.record(m.op, m.path, m.rows_in, m.wall_s - m.queue_wait_s,
                         warmup_discard=(m.path == "tensor"
                                         and not verified_warm))
 
-    def _record_fragment(self, plan, decisions, wall_s: float) -> None:
+    def _record_fragment(self, plan, decisions, metrics) -> None:
         """When the plan WAS a fusable fragment but ran on the generic walk,
         record its end-to-end wall so choose_fragment's blend sees
         linear-fragment observations too.  Only all-LINEAR walks qualify:
@@ -215,6 +276,8 @@ class Executor:
             return
         if {d.path for d in decisions} != {"linear"}:
             return
+        if any(m.grant_degraded for m in metrics):
+            return  # squeezed-grant spill wall: load, not fragment cost
         prof = getattr(self.selector, "profile", None)
         if prof is None:
             return
@@ -224,21 +287,26 @@ class Executor:
         if frag is None:
             return
         _, build, probe = frag
-        prof.record("fragment", "linear", len(build) + len(probe), wall_s)
+        prof.record("fragment", "linear", len(build) + len(probe),
+                    sum(m.wall_s for m in metrics))
 
     # -- fused fragment dispatch -------------------------------------------
     def _try_fused(self, plan, metrics, decisions) -> Optional[QueryResult]:
-        from .fused import match_fragment, pipeline_cache_info, run_fused
+        from .fused import match_fragment, run_fused
 
         frag = match_fragment(plan)
         if frag is None:
             return None
         spec, build, probe = frag
-        decision = self.selector.choose_fragment(spec, build, probe)
+        # the fragment's dominant linear intermediate is the join hash
+        # table; probing with it makes the pressure signal the same
+        # full-or-floor answer the join's _acquire would get
+        decision = self.selector.choose_fragment(
+            spec, build, probe, work_mem=self._effective_work_mem(
+                table_bytes_estimate(len(build))))
         if decision.path != "tensor":
             return None
         decisions.append(decision)
-        misses_before = pipeline_cache_info()["misses"]
         try:
             result, m = run_fused(spec, build, probe,
                                   decision_reason=decision.reason)
@@ -252,13 +320,15 @@ class Executor:
         # Feedback hygiene: a run that compiled a new program is not a
         # steady-state observation — recording its wall would poison the
         # profile and flip the very next decision back to linear.  Only
-        # warm (cache-hitting) runs feed the loop.
-        if pipeline_cache_info()["misses"] == misses_before:
+        # warm (cache-hitting) runs feed the loop.  The per-run `compiled`
+        # flag, not a global counter delta: another thread's concurrent
+        # compile must not make THIS warm run look cold.
+        if not m.compiled:
             self._record_profile(metrics, verified_warm=True)
             prof = getattr(self.selector, "profile", None)
             if prof is not None:
                 prof.record("fragment", "tensor", len(build) + len(probe),
-                            m.wall_s)
+                            m.wall_s - m.queue_wait_s)
         if isinstance(result, Relation):
             return QueryResult(result, None, metrics, decisions)
         return QueryResult(None, float(result), metrics, decisions)
@@ -354,7 +424,9 @@ class Executor:
         if isinstance(node, Join):
             build = self._exec(node.build, metrics, decisions, mgr)
             probe = self._exec(node.probe, metrics, decisions, mgr)
-            decision = self.selector.choose_join(build, probe, node.key)
+            decision = self.selector.choose_join(
+                build, probe, node.key, work_mem=self._effective_work_mem(
+                    table_bytes_estimate(len(build))))
             decisions.append(decision)
             if decision.path == "tensor":
                 dev_b, up_b = self._to_device(build)
@@ -363,15 +435,19 @@ class Executor:
                 m.h2d_bytes += up_b + up_p
             else:
                 build, probe, syncs = self._lower_for_linear(build, probe)
-                out, m = hash_join_linear(build, probe, node.key,
-                                          self.work_mem, mgr)
+                with self._granted(table_bytes_estimate(len(build))) as (
+                        wm, grant):
+                    out, m = hash_join_linear(build, probe, node.key, wm, mgr)
                 m.host_syncs += syncs
+                self._stamp_grant(m, grant)
             m.decision_reason = decision.reason
             metrics.append(m)
             return out
         if isinstance(node, Sort):
             child = self._exec(node.child, metrics, decisions, mgr)
-            decision = self.selector.choose_sort(child, node.keys)
+            decision = self.selector.choose_sort(
+                child, node.keys, work_mem=self._effective_work_mem(
+                    2 * len(child) * child.row_bytes()))
             decisions.append(decision)
             if decision.path == "tensor":
                 dev_c, up_c = self._to_device(child)
@@ -379,8 +455,10 @@ class Executor:
                 m.h2d_bytes += up_c
             else:
                 child, syncs = self._lower_for_linear(child)
-                out, m = sort_linear(child, node.keys, self.work_mem, mgr)
+                with self._granted(2 * child.nbytes()) as (wm, grant):
+                    out, m = sort_linear(child, node.keys, wm, mgr)
                 m.host_syncs += syncs
+                self._stamp_grant(m, grant)
             m.decision_reason = decision.reason
             metrics.append(m)
             return out
@@ -389,7 +467,13 @@ class Executor:
             from .aggregate import group_aggregate_device, group_aggregate_linear
             # GROUP BY is the third linearizing operator: the group hash
             # table is the linearized intermediate; selection mirrors sort
-            decision = self.selector.choose_sort(child, [node.key])
+            # the probe uses the same unit estimate_sort's fits-check
+            # compares (data bytes), not the group-table estimate the
+            # grant below requests — mixing units would price a spill an
+            # ungoverned session with the same work_mem would never see
+            decision = self.selector.choose_sort(
+                child, [node.key], work_mem=self._effective_work_mem(
+                    2 * len(child) * child.row_bytes()))
             decisions.append(decision)
             if decision.path == "tensor":
                 dev_c, up_c = self._to_device(child)
@@ -397,9 +481,21 @@ class Executor:
                 m.h2d_bytes += up_c
             else:
                 child, syncs = self._lower_for_linear(child)
-                out, m = group_aggregate_linear(child, node.key, node.values,
-                                                self.work_mem, mgr)
+                # grant sized by estimated DISTINCT groups (the group hash
+                # table's real footprint), via the cached key sketch — a
+                # low-cardinality aggregate over many rows must not hold a
+                # work_mem-sized slice of the shared budget it cannot use
+                from .table_cache import key_stats
+
+                st = key_stats(child, node.key)
+                scale = max(1, len(child) // max(1, st.sample_n))
+                n_groups = min(len(child), max(1, st.card * scale))
+                with self._granted(table_bytes_estimate(n_groups)) as (
+                        wm, grant):
+                    out, m = group_aggregate_linear(child, node.key,
+                                                    node.values, wm, mgr)
                 m.host_syncs += syncs
+                self._stamp_grant(m, grant)
             m.decision_reason = decision.reason
             metrics.append(m)
             return out

@@ -27,6 +27,9 @@ numpy inputs and costs no device traffic.
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
+import time
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -237,31 +240,63 @@ class _PipelineCache:
     jit would deduplicate compilations on its own, but an explicit cache (a)
     avoids re-tracing the program closure per query and (b) exposes hit/miss
     counters that tests use to prove shape bucketing prevents recompile
-    churn."""
+    churn.
+
+    Thread-safe: concurrent serving sessions share this cache, so lookups,
+    counter updates and inserts happen under one lock.  ``builder()`` runs
+    inside the lock — it only constructs the jit *wrapper* (cheap; the
+    actual XLA compilation happens lazily at first call, which JAX already
+    serializes internally), and holding the lock guarantees two racing
+    queries of the same shape get the SAME program object, so cache-miss
+    accounting stays exact (the warm/cold feedback gate keys off it)."""
 
     def __init__(self):
-        self._programs: Dict[Tuple, Callable] = {}
+        # key -> [program, ready]; ready flips once a call has completed,
+        # i.e. XLA compilation is definitely done
+        self._programs: Dict[Tuple, list] = {}
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
-    def get(self, key: Tuple, builder: Callable[[], Callable]) -> Callable:
-        prog = self._programs.get(key)
-        if prog is None:
-            self.misses += 1
-            prog = builder()
-            self._programs[key] = prog
-        else:
+    def get(self, key: Tuple, builder: Callable[[], Callable]
+            ) -> Tuple[Callable, bool]:
+        """Returns ``(program, fresh)``.  ``fresh`` means the next call may
+        pay XLA compilation — either this is the first request for the
+        shape, or another thread inserted the wrapper and is still inside
+        its compiling first call.  Fresh runs execute OUTSIDE the device
+        dispatch queue (a racer blocking on JAX's internal compile lock
+        while holding the FIFO would stall the whole fleet) and count as
+        cache misses, so the executor's warm-feedback gate keeps their
+        compile-inclusive walls out of the runtime profile."""
+        with self._lock:
+            entry = self._programs.get(key)
+            if entry is None:
+                self.misses += 1
+                entry = self._programs[key] = [builder(), False]
+                return entry[0], True
+            if not entry[1]:
+                self.misses += 1  # still compiling somewhere: cold
+                return entry[0], True
             self.hits += 1
-        return prog
+            return entry[0], False
+
+    def mark_ready(self, key: Tuple) -> None:
+        """A call of this program completed: compilation is over."""
+        with self._lock:
+            entry = self._programs.get(key)
+            if entry is not None:
+                entry[1] = True
 
     def info(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "programs": len(self._programs)}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "programs": len(self._programs)}
 
     def clear(self) -> None:
-        self._programs.clear()
-        self.hits = 0
-        self.misses = 0
+        with self._lock:
+            self._programs.clear()
+            self.hits = 0
+            self.misses = 0
 
 
 _CACHE = _PipelineCache()
@@ -440,6 +475,48 @@ def _build_program(spec: FusedSpec, key: str, capacity: int,
 # Driver
 # ---------------------------------------------------------------------------
 
+# The device is a serially-shared resource: concurrent serving sessions
+# funnel fused-program launches through this dispatch queue, so a query's
+# device phase runs at full speed instead of time-slicing against seven
+# neighbors (the scheduler roulette that turns a homogeneous workload into
+# a 3x p99/p50 spread).  Latency becomes queue wait + execution — the wait
+# is accounted in OpMetrics.queue_wait_s and excluded from the runtime
+# profile's execution-cost observations.  ``REPRO_DEVICE_SERIALIZE=0``
+# restores free-for-all dispatch (e.g. multi-device hosts where XLA can
+# genuinely overlap programs).
+class _FifoLock:
+    """Strict-FIFO mutex (ticket lock).  A plain ``threading.Lock`` lets the
+    releasing thread barge back in before older waiters are scheduled; in a
+    closed serving loop that starves individual queries for many service
+    times and manufactures exactly the p99 tail this queue exists to
+    remove.  Tickets make the wait bound deterministic: queue-depth ×
+    service time."""
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._next_ticket = 0
+        self._now_serving = 0
+
+    def acquire(self) -> None:
+        with self._cond:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            while ticket != self._now_serving:
+                self._cond.wait()
+
+    def release(self) -> None:
+        with self._cond:
+            self._now_serving += 1
+            self._cond.notify_all()
+
+
+_DISPATCH_LOCK = _FifoLock()
+
+
+def _serialize_dispatch() -> bool:
+    return os.environ.get("REPRO_DEVICE_SERIALIZE", "1") != "0"
+
+
 def _host_plan(build: Relation, probe: Relation, key: str):
     """Host-side planning from the numpy inputs — free of device traffic.
 
@@ -476,6 +553,8 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
     b_bucket = capacity_bucket(n_build)
     p_bucket = capacity_bucket(n_probe)
     syncs = 0
+    queue_wait = 0.0
+    any_fresh = False
     with Timer() as t:
         # host planning is part of the query's wall time (the per-op
         # baseline pays for its planning inside its timers too)
@@ -484,15 +563,33 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         pcols, up_p = get_device_columns(probe, p_bucket)
         dtypes = tuple(sorted((k, str(v.dtype)) for k, v in bcols.items()))
         dtypes += tuple(sorted((k, str(v.dtype)) for k, v in pcols.items()))
+        dispatch = _DISPATCH_LOCK if _serialize_dispatch() else None
         while True:
-            cache_key = (spec.cache_signature(), capacity, b_bucket, p_bucket,
-                         dense_domain, dtypes)
-            prog = _CACHE.get(
+            cache_key = (spec.cache_signature(), capacity, b_bucket,
+                         p_bucket, dense_domain, dtypes)
+            prog, fresh = _CACHE.get(
                 cache_key,
                 lambda: _build_program(spec, spec.join_key, capacity,
                                        dense_domain))
-            out = prog(bcols, pcols, n_build, n_probe, kmin)
-            fetched = jax.device_get(out)  # THE host sync of the query
+            # a FRESH program's first call pays multi-second XLA
+            # compilation; running it outside the queue keeps one novel
+            # shape from stalling every other query's device phase (its
+            # own unserialized execution is a one-off, and compiling runs
+            # never feed the runtime profile anyway)
+            any_fresh = any_fresh or fresh
+            hold = dispatch if not fresh else None
+            if hold is not None:
+                t_q = time.perf_counter()
+                hold.acquire()
+                queue_wait += time.perf_counter() - t_q
+            try:
+                out = prog(bcols, pcols, n_build, n_probe, kmin)
+                fetched = jax.device_get(out)  # THE host sync of the query
+            finally:
+                if hold is not None:
+                    hold.release()
+            if fresh:
+                _CACHE.mark_ready(cache_key)
             syncs += 1
             total = int(fetched["total"])
             if dense_domain is not None and bool(fetched["has_dup"]):
@@ -500,7 +597,7 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
                 continue
             if total <= capacity:
                 break
-            capacity = capacity_bucket(total)  # rare: optimistic bucket overflowed
+            capacity = capacity_bucket(total)  # rare: bucket overflowed
         if spec.agg is not None:
             if spec.agg[1] in ("min", "max") and int(fetched["agg_n"]) == 0:
                 raise ValueError(
@@ -524,5 +621,7 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         decision_reason=decision_reason,
         host_syncs=syncs,
         h2d_bytes=up_b + up_p,
+        queue_wait_s=queue_wait,
+        compiled=any_fresh,
     )
     return result, metrics

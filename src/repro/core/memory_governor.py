@@ -1,0 +1,218 @@
+"""Global memory governor: one budget, many concurrent queries.
+
+The paper's tail-latency claim is about memory *under contention*: a single
+query with a private ``work_mem`` never reproduces the phase transition,
+because nothing ever takes its memory away.  Real servers (PostgreSQL with
+hundreds of backends, REMOP's memory-aware operator scheduling) hand every
+concurrent operator a slice of one finite pool — and the slice an operator
+actually receives, not the configured ``work_mem``, decides whether it stays
+in the fast in-memory regime or collapses into the spill regime.
+
+:class:`MemoryGovernor` owns that pool.  Linear-path operators acquire a
+:class:`MemoryGrant` before building their linearized intermediate (hash
+table / sort runs) and release it when the operator completes:
+
+  * a request is served **in full** when the budget allows — the operator
+    runs exactly as it would have with a private ``work_mem``;
+  * under pressure the grant is **degraded** down to ``min_grant`` — the
+    operator still runs, but with less memory than it wanted, which is what
+    pushes it over the spill boundary (the contention-induced tail fig11
+    measures);
+  * when not even ``min_grant`` is available the request **blocks**
+    (admission control) until a running query releases memory — queueing
+    delay instead of an out-of-memory failure.
+
+The governor's hard invariant — asserted continuously and exposed for tests
+via :attr:`GovernorStats.over_budget_events` / :attr:`GovernorStats.
+peak_in_use` — is that the sum of outstanding grants never exceeds the
+budget.  Tensor-path operators never acquire grants: device-resident
+execution is precisely the path that does not build a host linearized
+intermediate, which is why it sidesteps the contention this module models.
+
+:meth:`would_grant` is the *pressure signal* for the decision layer: the
+:class:`~repro.core.path_selector.PathSelector` prices the linear path at
+the work_mem a request would receive *right now*, so ``auto`` shifts toward
+the fused path exactly as memory tightens.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+__all__ = ["MemoryGovernor", "MemoryGrant", "GovernorStats"]
+
+MB = 1 << 20
+
+
+@dataclasses.dataclass
+class GovernorStats:
+    """Cumulative counters; snapshot via :meth:`MemoryGovernor.stats`."""
+
+    grants: int = 0            # grants issued
+    degraded: int = 0          # grants smaller than their request
+    waits: int = 0             # requests that blocked in admission control
+    wait_s_total: float = 0.0  # total seconds spent blocked
+    peak_in_use: int = 0       # high-water mark of outstanding granted bytes
+    over_budget_events: int = 0  # invariant violations (must stay 0)
+
+
+@dataclasses.dataclass
+class MemoryGrant:
+    """An outstanding slice of the governor's budget.
+
+    ``size`` is the work_mem the holding operator must live within; ``size <
+    requested`` marks a degraded grant.  Use as a context manager (releases
+    on exit) or call :meth:`release` exactly once.
+    """
+
+    governor: "MemoryGovernor"
+    size: int
+    requested: int
+    wait_s: float = 0.0
+    _released: bool = False
+
+    @property
+    def degraded(self) -> bool:
+        return self.size < self.requested
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self.governor._release(self.size)
+
+    def __enter__(self) -> "MemoryGrant":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class MemoryGovernor:
+    """Thread-safe admission controller over one total memory budget."""
+
+    def __init__(self, total_bytes: int, min_grant: int = 1 * MB,
+                 full_grant_wait_s: float = 0.0):
+        if total_bytes <= 0:
+            raise ValueError(f"total_bytes must be positive, got {total_bytes}")
+        min_grant = max(1, int(min_grant))
+        if min_grant > total_bytes:
+            raise ValueError(
+                f"min_grant ({min_grant} B) exceeds the total budget "
+                f"({total_bytes} B); no request could ever be admitted")
+        self.total_bytes = int(total_bytes)
+        self.min_grant = min_grant
+        # how long a request is willing to wait for its FULL size before
+        # accepting a degraded grant (0 = degrade immediately; degrading
+        # early trades per-query latency for throughput, like PG choosing a
+        # smaller hash table over queueing the whole backend)
+        self.full_grant_wait_s = float(full_grant_wait_s)
+        self._in_use = 0
+        self._cond = threading.Condition()
+        self._stats = GovernorStats()
+
+    # -- observability -------------------------------------------------------
+    @property
+    def in_use(self) -> int:
+        return self._in_use
+
+    @property
+    def available(self) -> int:
+        return self.total_bytes - self._in_use
+
+    @property
+    def pressure(self) -> float:
+        """Fraction of the budget currently granted (0.0 = idle, 1.0 = full)."""
+        return self._in_use / self.total_bytes
+
+    def stats(self) -> GovernorStats:
+        with self._cond:
+            return dataclasses.replace(self._stats)
+
+    def would_grant(self, requested: int) -> int:
+        """Non-binding peek: the grant size a request of ``requested`` bytes
+        would receive right now.  This is the decision layer's pressure
+        signal — cheap, lock-held only for the read, and never blocks.
+        Mirrors :meth:`acquire`'s full-or-floor SIZING exactly (a signal
+        reporting the in-between leftover would price the linear path
+        against memory the grant will never contain); it does NOT model
+        admission blocking — when not even the floor is free it still
+        returns the floor the waiter will eventually get, and the wait
+        itself is unpriced (see ROADMAP: queue-aware admission)."""
+        requested = max(1, int(requested))
+        with self._cond:
+            avail = self.total_bytes - self._in_use
+        floor = min(requested, self.min_grant)
+        return requested if avail >= requested else floor
+
+    # -- grant lifecycle -----------------------------------------------------
+    def acquire(self, requested: int, timeout: Optional[float] = None
+                ) -> MemoryGrant:
+        """Block until at least ``min(requested, min_grant)`` bytes are free,
+        then grant ``min(requested, available)``.
+
+        With ``full_grant_wait_s > 0`` the request first waits up to that
+        long for its *full* size before settling for a degraded grant.
+        ``timeout`` bounds the total admission wait; expiry raises
+        :class:`TimeoutError` (the caller's query fails rather than wedging
+        a worker forever — surfaced, never silent).
+        """
+        requested = max(1, int(requested))
+        floor = min(requested, self.min_grant)
+        t0 = time.perf_counter()
+        deadline = None if timeout is None else t0 + timeout
+        with self._cond:
+            waited = False
+            # phase 1: opportunistic wait for the full request
+            if self.full_grant_wait_s > 0:
+                full_deadline = t0 + self.full_grant_wait_s
+                if deadline is not None:
+                    full_deadline = min(full_deadline, deadline)
+                while (self.total_bytes - self._in_use < requested
+                       and time.perf_counter() < full_deadline):
+                    waited = True
+                    self._cond.wait(full_deadline - time.perf_counter())
+            # phase 2: admission control — never grant below the floor
+            while self.total_bytes - self._in_use < floor:
+                waited = True
+                remaining = (None if deadline is None
+                             else deadline - time.perf_counter())
+                if remaining is not None and remaining <= 0:
+                    self._stats.waits += 1
+                    self._stats.wait_s_total += time.perf_counter() - t0
+                    raise TimeoutError(
+                        f"admission control: {requested} B requested, "
+                        f"{self.total_bytes - self._in_use} B available "
+                        f"after {timeout:.3f}s")
+                self._cond.wait(remaining)
+            # full grant if it fits, else the floor — NOT "whatever is
+            # left".  A partially-filled grant spills anyway (its deficit
+            # is what it is) while stranding the remaining pool, so the
+            # queries that COULD have fit (the fast tier) start degrading
+            # too and the whole distribution collapses.  Floor-degrading
+            # keeps the pool liquid: operators that fit stay fast,
+            # operators that don't pay their own spill and nobody else's.
+            avail = self.total_bytes - self._in_use
+            size = requested if avail >= requested else floor
+            self._in_use += size
+            if self._in_use > self.total_bytes:  # pragma: no cover
+                self._stats.over_budget_events += 1
+            self._stats.grants += 1
+            if size < requested:
+                self._stats.degraded += 1
+            if waited:
+                self._stats.waits += 1
+                self._stats.wait_s_total += time.perf_counter() - t0
+            self._stats.peak_in_use = max(self._stats.peak_in_use,
+                                          self._in_use)
+            wait_s = time.perf_counter() - t0 if waited else 0.0
+        return MemoryGrant(self, size, requested, wait_s)
+
+    def _release(self, size: int) -> None:
+        with self._cond:
+            self._in_use -= size
+            if self._in_use < 0:  # pragma: no cover - double release guard
+                self._stats.over_budget_events += 1
+                self._in_use = 0
+            self._cond.notify_all()

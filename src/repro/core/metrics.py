@@ -74,6 +74,28 @@ class OpMetrics:
     # Warm queries over device-cached base tables report 0 — the serving-path
     # contract the fig9 benchmark measures.
     h2d_bytes: int = 0
+    # Memory grant this linear operator ran under (0 when ungoverned or on
+    # the tensor path).  Under a shared MemoryGovernor this is the budget
+    # slice actually received — smaller than the configured work_mem when
+    # concurrent queries contend, which is what pushes the operator into
+    # the spill regime fig11 measures.  ``grant_degraded`` marks a grant
+    # smaller than its request: the operator's wall then reflects
+    # contention-induced spilling, not the operator's full-memory cost,
+    # and is excluded from runtime-profile feedback (load is admission's
+    # problem; the profile models cost).
+    grant_bytes: int = 0
+    grant_degraded: bool = False
+    # Seconds this operator spent queued for the device dispatch lock
+    # (concurrent serving: fused programs execute serially per device).
+    # Included in wall_s — it IS end-to-end latency — but excluded from the
+    # runtime-profile feedback, which models execution cost, not load.
+    queue_wait_s: float = 0.0
+    # True when this operator's run may have paid jit compilation (a fused
+    # program cache miss, including a hit on a not-yet-ready entry).  The
+    # executor's warm-feedback gate keys off THIS, not a global counter
+    # delta — another thread's concurrent compile must not make a warm run
+    # look cold.
+    compiled: bool = False
 
     def as_row(self) -> Dict[str, object]:
         return {
@@ -88,6 +110,7 @@ class OpMetrics:
             "peak_ws_mb": round(self.peak_working_set_bytes / 1e6, 3),
             "host_syncs": self.host_syncs,
             "h2d_mb": round(self.h2d_bytes / 1e6, 3),
+            "grant_mb": round(self.grant_bytes / 1e6, 3),
             "reason": self.decision_reason,
         }
 

@@ -34,6 +34,7 @@ result sets (tests assert canonical equality).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Optional
 
 import numpy as np
@@ -45,6 +46,10 @@ from .runtime_profile import RuntimeProfile
 from .table_cache import key_stats, pending_upload_bytes
 
 __all__ = ["Decision", "PathSelector"]
+
+# Guards the per-relation filter-selectivity memo (concurrent sessions
+# share probe relations); the sampled evaluation itself runs unlocked.
+_SEL_LOCK = threading.Lock()
 
 
 @dataclasses.dataclass
@@ -85,20 +90,28 @@ class PathSelector:
         return key_stats(build, key).dup
 
     # -- join ---------------------------------------------------------------
-    def choose_join(self, build: Relation, probe: Relation, key: str) -> Decision:
+    def choose_join(self, build: Relation, probe: Relation, key: str,
+                    work_mem: Optional[int] = None) -> Decision:
+        """``work_mem`` overrides the selector's configured budget for THIS
+        decision: under a shared :class:`~repro.core.memory_governor.
+        MemoryGovernor` the executor passes the grant a request would
+        receive *right now*, so contention shifts ``auto`` toward the
+        tensor path exactly when the linear path would be squeezed into
+        the spill regime."""
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
+        wm = self.work_mem if work_mem is None else int(work_mem)
         n_b, n_p = len(build), len(probe)
         dup = self._dup_estimate(build, key)
         est_out = int(n_p * dup)
         est = self.model.estimate_join(
-            n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out, self.work_mem)
+            n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out, wm)
         t_lin = self.profile.blend(est.t_linear, "hash_join", "linear", n_b + n_p)
         t_ten = self.profile.blend(est.t_tensor, "hash_join", "tensor", n_b + n_p)
         if est.path_fits_mem and t_lin <= t_ten:
             return Decision(
                 "linear",
-                f"hash table fits work_mem ({self.work_mem} B); linear path has "
+                f"hash table fits work_mem ({wm} B); linear path has "
                 f"no spill regime at this scale",
                 t_lin, t_ten, 0)
         path = "tensor" if t_ten < t_lin else "linear"
@@ -110,11 +123,13 @@ class PathSelector:
             t_lin, t_ten, est.spill_bytes)
 
     # -- sort ------------------------------------------------------------------
-    def choose_sort(self, rel: Relation, keys) -> Decision:
+    def choose_sort(self, rel: Relation, keys,
+                    work_mem: Optional[int] = None) -> Decision:
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
+        wm = self.work_mem if work_mem is None else int(work_mem)
         est = self.model.estimate_sort(
-            len(rel), rel.row_bytes(), len(keys), self.work_mem)
+            len(rel), rel.row_bytes(), len(keys), wm)
         t_lin = self.profile.blend(est.t_linear, "sort", "linear", len(rel))
         t_ten = self.profile.blend(est.t_tensor, "sort", "tensor", len(rel))
         if est.path_fits_mem and t_lin <= t_ten:
@@ -157,13 +172,16 @@ class PathSelector:
             # different column and would feed a wrong selectivity
             return 1.0
         # memoized like key_stats: warm serving queries must not pay a
-        # per-query sample evaluation (entries shared with select() subs)
-        cache = probe.__dict__.setdefault("_sel_cache", {})
+        # per-query sample evaluation (entries shared with select() subs).
+        # Same locking discipline as the other shared caches: the lock
+        # guards the dict, the sample evaluation runs outside it
         tokens = tuple(column_token(probe[c]) for c in cols)
         tok = filter_fn.cache_token()
-        hit = cache.get(tok)
-        if hit is not None and hit[0] == tokens:
-            return hit[1]
+        with _SEL_LOCK:
+            cache = probe.__dict__.setdefault("_sel_cache", {})
+            hit = cache.get(tok)
+            if hit is not None and hit[0] == tokens:
+                return hit[1]
         # strided sample, not a prefix: tables sorted/clustered by the
         # filtered column (e.g. time-ordered facts filtered on recency)
         # would make a prefix systematically unrepresentative and pin the
@@ -175,22 +193,26 @@ class PathSelector:
         except Exception:
             return 1.0
         sel = float(mask.mean()) if mask.ndim else 1.0
-        if len(cache) >= 64:
-            cache.clear()  # tiny float entries; crude bound is enough
-        cache[tok] = (tokens, sel)
+        with _SEL_LOCK:
+            if len(cache) >= 64:
+                cache.clear()  # tiny float entries; crude bound is enough
+            cache[tok] = (tokens, sel)
         return sel
 
-    def choose_fragment(self, spec, build: Relation, probe: Relation) -> Decision:
+    def choose_fragment(self, spec, build: Relation, probe: Relation,
+                        work_mem: Optional[int] = None) -> Decision:
         """Price a whole fusable fragment: ONE fixed dispatch, ONE host sync,
         and H2D transfer only for base-table columns not already resident in
         the device cache (warm serving queries charge 0).  Fragments arrive
         from the rewrite planner, so this prices the REWRITTEN plan — pruned
         scans carry smaller row_bytes, pushed-down filters carry sampled
-        selectivity."""
+        selectivity.  ``work_mem`` overrides the configured budget with the
+        governor's current-grant estimate (memory-pressure awareness)."""
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
         from .tensor_engine import capacity_bucket
 
+        wm = self.work_mem if work_mem is None else int(work_mem)
         n_b, n_p = len(build), len(probe)
         dup = self._dup_estimate(build, spec.join_key)
         est_out = int(n_p * dup)
@@ -198,7 +220,7 @@ class PathSelector:
                + pending_upload_bytes(probe, capacity_bucket(n_p)))
         est = self.model.estimate_fragment(
             n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out,
-            self.work_mem, num_sort_keys=len(spec.sort_keys),
+            wm, num_sort_keys=len(spec.sort_keys),
             has_filter=spec.filter_fn is not None,
             has_agg=spec.agg is not None, h2d_bytes=h2d,
             filter_selectivity=self._filter_selectivity(spec.filter_fn,
@@ -211,7 +233,7 @@ class PathSelector:
         if est.path_fits_mem and t_lin <= t_ten:
             return Decision(
                 "linear",
-                f"whole linear fragment fits work_mem ({self.work_mem} B) and "
+                f"whole linear fragment fits work_mem ({wm} B) and "
                 f"T_linear={t_lin:.3f}s <= T_tensor={t_ten:.3f}s",
                 t_lin, t_ten, 0, h2d)
         path = "tensor" if t_ten < t_lin else "linear"

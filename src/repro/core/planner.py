@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import operator
+import threading
 from functools import reduce
 from typing import Dict, FrozenSet, List, Optional, Tuple
 
@@ -53,6 +54,11 @@ __all__ = ["plan_program", "push_filters", "prune_columns", "pack_pair",
            "Program", "Stage", "PACK_COL"]
 
 PACK_COL = "__pack__"
+
+# Guards the per-relation packed-column caches: concurrent sessions plan
+# multi-key joins over shared base tables, and the eviction sweeps below
+# iterate the cache dict (unsafe against a concurrent insert).
+_PACK_LOCK = threading.Lock()
 
 
 # ---------------------------------------------------------------------------
@@ -225,20 +231,28 @@ def _packed_column(rel: Relation, params) -> np.ndarray:
     """The packed int64 key coordinate, content-token cached on the relation
     so repeated queries reuse the same array object (and therefore its
     device upload — `column_token` keys on the buffer)."""
-    cache = rel.__dict__.setdefault("_packed_cols", {})
     tokens = tuple(column_token(rel[k]) for k, _, _ in params)
-    hit = cache.get(params)
-    if hit is not None and hit[0] == tokens:
-        return hit[1]
+    with _PACK_LOCK:
+        cache = rel.__dict__.setdefault("_packed_cols", {})
+        hit = cache.get(params)
+        if hit is not None and hit[0] == tokens:
+            return hit[1]
+    # the O(N) pack runs OUTSIDE the lock: the lock protects the cache
+    # dicts, not the compute, and a rare racing double-pack of the same
+    # relation is cheaper than serializing every session's planning
     arr = np.zeros(len(rel), np.int64)
     for k, lo, stride in params:
         arr += (rel[k].astype(np.int64) - lo) * stride
-    # drifting probe key ranges produce distinct params per query; cap the
-    # range-packed entries like the factorized path below caps its own
-    stale = [k for k in cache if k and k[0] != "factorized"]
-    for k in stale[:max(0, len(stale) - 7)]:
-        del cache[k]
-    cache[params] = (tokens, arr)
+    with _PACK_LOCK:
+        hit = cache.get(params)
+        if hit is not None and hit[0] == tokens:
+            return hit[1]  # a racer finished first; one array wins
+        # drifting probe key ranges produce distinct params per query; cap
+        # the range-packed entries like the factorized path caps its own
+        stale = [k for k in cache if k and k[0] != "factorized"]
+        for k in stale[:max(0, len(stale) - 7)]:
+            del cache[k]
+        cache[params] = (tokens, arr)
     return arr
 
 
@@ -255,29 +269,38 @@ def _factorized_pack(build: Relation, probe: Relation,
     device uploads), including workloads that alternate one build table
     against several probe tables."""
     keys = tuple(keys)
-    cache = build.__dict__.setdefault("_packed_cols", {})
     probe_tokens = tuple(column_token(probe[k]) for k in keys)
     tokens = (tuple(column_token(build[k]) for k in keys), probe_tokens)
     ck = ("factorized", keys, probe_tokens)
-    hit = cache.get(ck)
-    if hit is not None and hit[0] == tokens:
-        return hit[1]
-    # per-probe entries let one build table alternate against several probe
-    # tables without thrash, but a stream of ad-hoc probes must not grow
-    # the build's cache without bound: evict the oldest beyond a small cap
-    stale = [k for k in cache if k[0] == "factorized" and k[1] == keys]
-    for k in stale[:max(0, len(stale) - 7)]:
-        del cache[k]
+    with _PACK_LOCK:
+        cache = build.__dict__.setdefault("_packed_cols", {})
+        hit = cache.get(ck)
+        if hit is not None and hit[0] == tokens:
+            return hit[1]
+    # the np.unique factorization passes run OUTSIDE the lock (see
+    # _packed_column): a racing duplicate pack beats serialized planning
     nb = len(build)
     acc = np.zeros(nb + len(probe), np.int64)
     for k in keys:
-        comb = np.concatenate([np.asarray(build[k]), np.asarray(probe[k])])
+        comb = np.concatenate([np.asarray(build[k]),
+                               np.asarray(probe[k])])
         _, inv = np.unique(comb, return_inverse=True)
         merged = acc * (int(inv.max(initial=0)) + 1) + inv
         _, acc = np.unique(merged, return_inverse=True)
         acc = acc.astype(np.int64)
     out = (np.ascontiguousarray(acc[:nb]), np.ascontiguousarray(acc[nb:]))
-    cache[ck] = (tokens, out)
+    with _PACK_LOCK:
+        hit = cache.get(ck)
+        if hit is not None and hit[0] == tokens:
+            return hit[1]
+        # per-probe entries let one build table alternate against several
+        # probe tables without thrash, but a stream of ad-hoc probes must
+        # not grow the build's cache without bound: evict the oldest beyond
+        # a small cap
+        stale = [k for k in cache if k[0] == "factorized" and k[1] == keys]
+        for k in stale[:max(0, len(stale) - 7)]:
+            del cache[k]
+        cache[ck] = (tokens, out)
     return out
 
 

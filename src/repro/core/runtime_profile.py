@@ -80,7 +80,11 @@ class RuntimeProfile:
                 cell.wall_s += self.alpha * (float(wall_s) - cell.wall_s)
 
     def observed(self, op: str, path: str, rows: int) -> Optional[Observation]:
-        return self._cells.get((op, path, size_bucket(rows)))
+        """Snapshot (copy) of a cell — safe to read while concurrent
+        executors record into the live cell."""
+        with self._lock:
+            cell = self._cells.get((op, path, size_bucket(rows)))
+            return None if cell is None else dataclasses.replace(cell)
 
     def blend(self, predicted: float, op: str, path: str, rows: int) -> float:
         cell = self.observed(op, path, rows)

@@ -1,0 +1,235 @@
+"""Concurrent serving layer: a closed-loop query stream over one Session.
+
+This is the repo's traffic model for the paper's headline claim.  Single-query
+benchmarks (fig1–fig10) measure *throughput* per path; the phase transition
+the paper actually reports — linear-path P99 going multi-second under
+``work_mem`` pressure while the tensor path stays sub-second — only exists
+when **concurrent queries contend for one memory pool**.  A
+:class:`QueryServer` provides exactly that:
+
+  * one :class:`~repro.core.session.Session` shared by every worker (shared
+    device column cache, compiled-program cache, runtime profile — the
+    serving configuration);
+  * one :class:`~repro.core.memory_governor.MemoryGovernor` owning the total
+    memory budget; every linear operator runs under a grant, so N concurrent
+    linear queries genuinely squeeze each other into the spill regime;
+  * a **closed-loop** driver: each of N workers submits its next query the
+    moment the previous one completes (classic closed-loop load generation —
+    offered concurrency is exactly N, no coordinated-omission artifacts from
+    an open-loop arrival queue backing up).
+
+:meth:`QueryServer.serve` returns a :class:`ServeReport` with the full
+latency sample set, P50/P99, per-query spill volume and grant sizes, and the
+governor's invariant counters (``over_budget_events`` must be 0).  Results
+are collected per workload item so callers can assert bit-for-bit parity
+against a serial run of the same queries (see ``tests/test_server.py``).
+
+    >>> server = QueryServer({"orders": orders, "users": users},
+    ...                      total_mem=64 * MB, work_mem=32 * MB)
+    >>> q = server.session.table("orders").join("users", on="uid") \\
+    ...           .sort("uid").aggregate("w", "sum")
+    >>> report = server.serve([q], concurrency=8, queries_per_worker=4)
+    >>> report.latency.p99, report.governor.over_budget_events
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence
+
+from .executor import QueryResult
+from .memory_governor import GovernorStats, MemoryGovernor
+from .metrics import LatencyStats, Timer, latency_stats
+from .relation import Relation
+from .session import Query, Session
+
+__all__ = ["QueryServer", "ServeReport", "ServedQuery"]
+
+MB = 1 << 20
+
+
+@dataclasses.dataclass
+class ServedQuery:
+    """One completed query of a closed-loop run."""
+
+    worker: int
+    seq: int               # per-worker sequence number
+    workload_idx: int      # which workload item this was
+    wall_s: float          # end-to-end latency incl. admission wait
+    temp_mb: float         # temp-file bytes this query spilled
+    grant_bytes: int       # smallest grant any of its linear operators got
+    paths: str             # "tensor", "linear", or "mixed"
+    scalar: Optional[float]
+    relation: Optional[Relation]
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate of one :meth:`QueryServer.serve` run."""
+
+    queries: List[ServedQuery]
+    latency: LatencyStats
+    wall_s: float                  # whole-run wall time
+    total_temp_mb: float
+    governor: GovernorStats
+    concurrency: int
+
+    @property
+    def qps(self) -> float:
+        return len(self.queries) / max(self.wall_s, 1e-9)
+
+    @property
+    def p99_over_p50(self) -> float:
+        """The paper's stability metric: tail amplification of the latency
+        distribution.  ~1 = predictable; >>1 = the spill-regime tail."""
+        return self.latency.p99 / max(self.latency.p50, 1e-9)
+
+    def by_workload(self, idx: int) -> List[ServedQuery]:
+        return [q for q in self.queries if q.workload_idx == idx]
+
+
+def _min_grant_of(result: QueryResult) -> int:
+    grants = [m.grant_bytes for m in result.metrics if m.grant_bytes > 0]
+    return min(grants) if grants else 0
+
+
+def _paths_of(result: QueryResult) -> str:
+    paths = {d.path for d in result.decisions}
+    if len(paths) == 1:
+        return next(iter(paths))
+    return "mixed" if paths else "none"
+
+
+class QueryServer:
+    """Owns the serving-scope state: session + tables + memory governor.
+
+    ``total_mem`` is the budget EVERY concurrent linear operator shares;
+    ``work_mem`` is the per-operator ceiling a single grant may reach (the
+    classic PostgreSQL meaning).  ``total_mem=None`` runs ungoverned —
+    every query gets the full ``work_mem``, which reduces to the
+    single-query semantics of the earlier PRs.
+    """
+
+    def __init__(self, tables: Dict[str, Relation],
+                 total_mem: Optional[int], work_mem: Optional[int] = None,
+                 policy: Optional[str] = None,
+                 min_grant: Optional[int] = None,
+                 full_grant_wait_s: Optional[float] = None,
+                 session: Optional[Session] = None):
+        if session is not None:
+            # a prebuilt session owns its governor, work_mem and policy;
+            # silently dropping overrides would let a caller believe it
+            # forced a configuration it never got
+            conflicts = {"total_mem": total_mem, "work_mem": work_mem,
+                         "policy": policy, "min_grant": min_grant,
+                         "full_grant_wait_s": full_grant_wait_s}
+            given = [k for k, v in conflicts.items() if v is not None]
+            if given:
+                raise ValueError(
+                    f"pass either a prebuilt session or "
+                    f"{'/'.join(given)}; an explicit session already owns "
+                    f"its governor, work_mem and policy")
+        else:
+            governor = (MemoryGovernor(
+                total_mem,
+                min_grant=1 * MB if min_grant is None else min_grant,
+                full_grant_wait_s=full_grant_wait_s or 0.0)
+                if total_mem is not None else None)
+            session = Session(
+                work_mem=32 * MB if work_mem is None else work_mem,
+                policy=policy or "auto", governor=governor)
+        self.session = session
+        self.governor = session.governor
+        for name, rel in tables.items():
+            self.session.register(name, rel)
+
+    # -- single query --------------------------------------------------------
+    def submit(self, query) -> QueryResult:
+        """Run one query through the governed session (any :class:`Query`,
+        logical tree, or legacy physical tree)."""
+        return self.session.execute(query)
+
+    # -- closed-loop stream --------------------------------------------------
+    def serve(self, workload: Sequence, concurrency: int,
+              queries_per_worker: int, warmup: int = 1,
+              keep_relations: bool = True) -> ServeReport:
+        """Drive ``concurrency`` workers in a closed loop.
+
+        Each worker executes ``queries_per_worker`` queries back-to-back,
+        cycling through ``workload`` (Query objects or logical/physical
+        trees) at a per-worker offset so every item sees traffic from
+        several workers.  ``warmup`` serial passes over the workload run
+        first, off the clock — they converge the compile cache, the device
+        column cache and the runtime profile, so the measured window
+        reflects steady-state serving, not first-query compilation.
+
+        ``keep_relations=False`` drops each relation-rooted result after
+        recording its size — a long measurement run otherwise pins every
+        result relation in memory until the report is dropped, making the
+        harness itself the dominant memory consumer while it measures
+        memory-pressure behavior.
+
+        Worker exceptions abort the run and re-raise in the caller.
+        """
+        if concurrency < 1:
+            raise ValueError(f"concurrency must be >= 1, got {concurrency}")
+        if queries_per_worker < 1:
+            raise ValueError(f"queries_per_worker must be >= 1, got "
+                             f"{queries_per_worker}")
+        workload = list(workload)
+        if not workload:
+            raise ValueError("empty workload")
+        for _ in range(max(0, warmup)):
+            for item in workload:
+                self.submit(item)
+
+        base_stats = (self.governor.stats() if self.governor is not None
+                      else GovernorStats())
+        served: List[ServedQuery] = []
+        errors: List[BaseException] = []
+        lock = threading.Lock()
+
+        def worker(wid: int) -> None:
+            try:
+                for seq in range(queries_per_worker):
+                    idx = (wid + seq) % len(workload)
+                    with Timer() as t:
+                        res = self.submit(workload[idx])
+                    rec = ServedQuery(
+                        worker=wid, seq=seq, workload_idx=idx,
+                        wall_s=t.elapsed, temp_mb=res.total_temp_mb,
+                        grant_bytes=_min_grant_of(res),
+                        paths=_paths_of(res), scalar=res.scalar,
+                        relation=res.relation if keep_relations else None)
+                    with lock:
+                        served.append(rec)
+            except BaseException as e:  # surfaced after join, never silent
+                with lock:
+                    errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+                   for w in range(concurrency)]
+        with Timer() as run_t:
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+        if errors:
+            raise errors[0]
+
+        gov = (self.governor.stats() if self.governor is not None
+               else GovernorStats())
+        # report the governor's activity for THIS run (counters are
+        # cumulative; peak and invariant counters are monotone so the
+        # absolute values remain the right thing to assert on)
+        gov.grants -= base_stats.grants
+        gov.degraded -= base_stats.degraded
+        gov.waits -= base_stats.waits
+        gov.wait_s_total -= base_stats.wait_s_total
+        return ServeReport(
+            queries=served,
+            latency=latency_stats([q.wall_s for q in served]),
+            wall_s=run_t.elapsed,
+            total_temp_mb=sum(q.temp_mb for q in served),
+            governor=gov,
+            concurrency=concurrency)

@@ -41,6 +41,7 @@ from .executor import Executor, QueryResult
 from .expr import Expr
 from .logical import (LAggregate, LFilter, LGroupBy, LJoin, LProject, LScan,
                       LSort, LogicalNode, schema)
+from .memory_governor import MemoryGovernor
 from .path_selector import PathSelector
 from .relation import Relation
 from .runtime_profile import RuntimeProfile
@@ -51,12 +52,21 @@ MB = 1 << 20
 
 
 class Session:
-    """Query-stream scope: executor + selector + feedback + table registry."""
+    """Query-stream scope: executor + selector + feedback + table registry.
+
+    A Session is safe to share across worker threads (the serving
+    configuration — see :class:`repro.core.server.QueryServer`): the
+    compile cache, device column cache, and runtime profile it reaches are
+    all lock-guarded, and passing a :class:`~repro.core.memory_governor.
+    MemoryGovernor` makes every linear operator draw its work_mem from the
+    shared budget instead of the private ``work_mem`` ceiling.
+    """
 
     def __init__(self, work_mem: int = 64 * MB, policy: str = "auto",
                  selector: Optional[PathSelector] = None,
                  profile: Optional[RuntimeProfile] = None,
-                 fuse: bool = True, spill_root: Optional[str] = None):
+                 fuse: bool = True, spill_root: Optional[str] = None,
+                 governor: Optional["MemoryGovernor"] = None):
         if selector is None:
             force = None if policy == "auto" else policy
             selector = PathSelector(work_mem, force=force,
@@ -74,8 +84,10 @@ class Session:
                 f"belongs to the selector")
         self.selector = selector
         self.profile = selector.profile
+        self.governor = governor
         self.executor = Executor(work_mem, policy=policy, selector=selector,
-                                 spill_root=spill_root, fuse=fuse)
+                                 spill_root=spill_root, fuse=fuse,
+                                 governor=governor)
         self._tables: Dict[str, Relation] = {}
 
     # -- table registry ----------------------------------------------------
@@ -211,7 +223,27 @@ class Query:
 
     def explain(self, rewrite: bool = True) -> str:
         """The planned stage chain, post-rewrite (pushdown, pruning, packing
-        and fragment boundaries are all visible here)."""
+        and fragment boundaries are all visible here).
+
+        One line per physical fragment, in run order::
+
+            stage 0: join[uid](rel[100x2], rel[1000x3]) → filter((col('w') > 0))
+            stage 1: join[pid](rel[50x1], #0) → sort['uid'] → agg[sum(w)]
+
+        Notation: ``join[keys](build, probe)`` is the fragment's equi-join
+        core (``(packed)`` marks a multi-key join lowered through one packed
+        int64 coordinate); ``rel[NxC]`` a base-table scan of N rows × C
+        columns *after projection pruning*; ``#j`` the output of stage
+        ``j`` (fragment chaining); ``scan(...)`` a single-table stage.  The
+        arrow chain lists the fused-fragment stages in execution order —
+        ``filter(<expr>)`` (a pushed-down typed expression; opaque callables
+        print ``filter(<fn>)``), ``sort[keys]``, ``project[cols]``,
+        ``group_by[k]{col: fn}``, ``agg[fn(col)]``.  Each stage line is one
+        ``Join→[Filter]→[Sort]→[Aggregate]`` unit priced and executed as a
+        whole, so ``QueryResult.decisions`` carries (at least) one entry per
+        stage — the key for interpreting fig11 runs and benchmark CSVs.
+        See ``docs/query-api.md`` for the full table.
+        """
         from .planner import plan_program
 
         return plan_program(self._node, rewrite=rewrite).explain()

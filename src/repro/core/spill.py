@@ -44,12 +44,24 @@ class SpillManager:
 
     # -- columnar spill files --------------------------------------------------
     def write_relation(self, rel: Relation, tag: str, account: SpillAccount) -> str:
-        """Write a relation as one .npy file per column; returns the base path."""
+        """Write a relation as one .npy file per column; returns the base path.
+
+        A write failure (disk full, permission change mid-run) removes the
+        partial spill directory before re-raising: a half-written run left
+        behind would later be read back as a *truncated relation* by
+        ``read_relation``/``RunReader`` — silently wrong results instead of
+        the loud error the failure deserves — and would leak temp space for
+        the life of the manager."""
         base = self._next_path(tag)
         os.makedirs(base, exist_ok=True)
-        for name, col in rel.columns.items():
-            np.save(os.path.join(base, name + ".npy"), col, allow_pickle=False)
-            account.write(col.nbytes)
+        try:
+            for name, col in rel.columns.items():
+                np.save(os.path.join(base, name + ".npy"), col,
+                        allow_pickle=False)
+                account.write(col.nbytes)
+        except BaseException:
+            shutil.rmtree(base, ignore_errors=True)
+            raise
         account.files_created += len(rel.columns)
         return base
 
@@ -81,6 +93,14 @@ class RunReader:
                 self.cols[fname[:-4]] = np.load(
                     os.path.join(base, fname), mmap_mode="r", allow_pickle=False
                 )
+        if not self.cols:
+            # a spill dir with no column files (zero-column relation, wrong
+            # path, or a cleaned-up partial write) must fail loudly here —
+            # `next(iter(...))` would raise bare StopIteration, which a
+            # generator-based caller would swallow as silent end-of-stream
+            raise ValueError(
+                f"spill run at {base!r} contains no column files; cannot "
+                f"determine row count")
         self.n = len(next(iter(self.cols.values())))
         self.pos = 0
 

@@ -29,11 +29,16 @@ sketches, entries stay token-checked per column, and
 selection.  `REPRO_TABLE_CACHE=0` disables caching (every query re-uploads
 and re-samples); global hit/miss/H2D counters are exposed via
 :func:`table_cache_info` for tests and benchmarks.
+
+Cache/sketch bookkeeping is serialized by one module lock (the transfers
+and scans themselves run outside it), so concurrent serving sessions can
+share base tables without a cold upload stalling warm lookups.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -67,6 +72,15 @@ class _Counters:
 
 _COUNTERS = _Counters()
 
+# One lock for every per-relation cache dict and the global counters:
+# concurrent serving sessions share base tables, and cache bookkeeping must
+# not mutate a dict mid-probe.  The lock guards the DICTS, not the compute:
+# uploads and sketch scans run outside it (double-checked insert), so a
+# cold multi-MB transfer never parks other sessions' warm lookups.  A rare
+# racing pair both upload the same column — real transferred bytes, still
+# reported — and every later query is warm.
+_LOCK = threading.RLock()
+
 
 def cache_enabled() -> bool:
     """Base-table cache toggle: ``REPRO_TABLE_CACHE=0`` disables residency."""
@@ -74,14 +88,16 @@ def cache_enabled() -> bool:
 
 
 def table_cache_info() -> Dict[str, int]:
-    return dataclasses.asdict(_COUNTERS)
+    with _LOCK:
+        return dataclasses.asdict(_COUNTERS)
 
 
 def table_cache_clear() -> None:
     """Reset the global counters.  Per-relation storage lives on the Relation
     instances themselves — drop it with ``rel.invalidate_device_cache()``."""
     global _COUNTERS
-    _COUNTERS = _Counters()
+    with _LOCK:
+        _COUNTERS = _Counters()
 
 
 def _upload(col: np.ndarray, bucket: Optional[int]):
@@ -116,27 +132,39 @@ def get_device_columns(rel: Relation, bucket: Optional[int] = None
     if not cache_enabled():
         for name, col in rel.columns.items():
             out[name] = _upload(col, bucket)
-            _COUNTERS.misses += 1
             uploaded += _padded_nbytes(col, bucket)
-        _COUNTERS.h2d_bytes += uploaded
+        with _LOCK:
+            _COUNTERS.misses += len(rel.columns)
+            _COUNTERS.h2d_bytes += uploaded
         return out, uploaded
-    cache = rel.__dict__.setdefault(_CACHE_ATTR, {})
-    for name, col in rel.columns.items():
-        token = column_token(col)
-        ck = (name, bucket)
-        entry = cache.get(ck)
-        if entry is not None and entry[0] == token:
-            _COUNTERS.hits += 1
-            out[name] = entry[1]
-            continue
-        if entry is not None:
-            _COUNTERS.invalidations += 1  # mutated column → fresh transfer
-        _COUNTERS.misses += 1
-        dev = _upload(col, bucket)
-        cache[ck] = (token, dev)
-        out[name] = dev
+    tokens = {name: column_token(col) for name, col in rel.columns.items()}
+    missing = []
+    with _LOCK:
+        cache = rel.__dict__.setdefault(_CACHE_ATTR, {})
+        for name in rel.columns:
+            entry = cache.get((name, bucket))
+            if entry is not None and entry[0] == tokens[name]:
+                _COUNTERS.hits += 1
+                out[name] = entry[1]
+                continue
+            if entry is not None:
+                _COUNTERS.invalidations += 1  # mutated column → fresh transfer
+            _COUNTERS.misses += 1
+            missing.append(name)
+    # transfers run OUTSIDE the lock (cf. key_stats): a cold multi-MB
+    # upload must not park every other session's warm dict probes behind
+    # it.  Two queries racing on the same cold column both transfer (the
+    # bytes they report were really moved); the last insert wins and all
+    # later queries are warm.
+    for name in missing:
+        col = rel.columns[name]
+        out[name] = _upload(col, bucket)
         uploaded += _padded_nbytes(col, bucket)
-    _COUNTERS.h2d_bytes += uploaded
+    if missing:
+        with _LOCK:
+            for name in missing:
+                cache[(name, bucket)] = (tokens[name], out[name])
+            _COUNTERS.h2d_bytes += uploaded
     return out, uploaded
 
 
@@ -146,14 +174,18 @@ def pending_upload_bytes(rel, bucket: Optional[int] = None) -> int:
     when every column is already device-resident at this bucket."""
     if not isinstance(rel, Relation):
         return 0  # already device-resident
-    cache = rel.__dict__.get(_CACHE_ATTR) if cache_enabled() else None
+    # token hashing outside the lock (the discipline everywhere in this
+    # module): this probe runs on every fragment decision of every session
+    tokens = {name: column_token(col) for name, col in rel.columns.items()}
     total = 0
-    for name, col in rel.columns.items():
-        if cache is not None:
-            entry = cache.get((name, bucket))
-            if entry is not None and entry[0] == column_token(col):
-                continue
-        total += _padded_nbytes(col, bucket)
+    with _LOCK:
+        cache = rel.__dict__.get(_CACHE_ATTR) if cache_enabled() else None
+        for name, col in rel.columns.items():
+            if cache is not None:
+                entry = cache.get((name, bucket))
+                if entry is not None and entry[0] == tokens[name]:
+                    continue
+            total += _padded_nbytes(col, bucket)
     return total
 
 
@@ -178,14 +210,19 @@ def key_stats(rel: Relation, key: str) -> KeyStats:
     """
     col = np.asarray(rel[key])
     token = column_token(col)
-    cache = (rel.__dict__.setdefault(_STATS_ATTR, {})
-             if cache_enabled() else None)
-    if cache is not None:
-        entry = cache.get(key)
-        if entry is not None and entry[0] == token:
-            _COUNTERS.sketch_hits += 1
-            return entry[1]
-    _COUNTERS.sketch_misses += 1
+    with _LOCK:
+        cache = (rel.__dict__.setdefault(_STATS_ATTR, {})
+                 if cache_enabled() else None)
+        if cache is not None:
+            entry = cache.get(key)
+            if entry is not None and entry[0] == token:
+                _COUNTERS.sketch_hits += 1
+                return entry[1]
+        _COUNTERS.sketch_misses += 1
+    # the O(N) scans run OUTSIDE the lock (cf. planner._packed_column):
+    # holding it would park every session's warm lookups — on unrelated
+    # tables — behind one cold sketch; a rare racing double-sketch of the
+    # same column computes identical stats and is cheaper
     n = len(col)
     if n == 0:
         stats = KeyStats(0, 0, 0, 1.0, 0, 0)
@@ -193,10 +230,12 @@ def key_stats(rel: Relation, key: str) -> KeyStats:
         sample = col[: min(n, SAMPLE_ROWS)]
         card = max(1, len(np.unique(sample)))
         dup = max(1.0, len(sample) / card)
-        # min/max over the full column: one O(N) scan each, amortized by the
-        # cache (the fused planner needs the exact key range, not a sample's)
+        # min/max over the full column: one O(N) scan each, amortized by
+        # the cache (the fused planner needs the exact key range, not a
+        # sample's)
         stats = KeyStats(n, len(sample), card, dup,
                          col.min().item(), col.max().item())
     if cache is not None:
-        cache[key] = (token, stats)
+        with _LOCK:
+            cache[key] = (token, stats)
     return stats

@@ -1,0 +1,139 @@
+"""MemoryGovernor: grant semantics, admission control, and the budget
+invariant (the fig11 acceptance criterion's "zero over-budget grants")."""
+import threading
+import time
+
+import pytest
+
+from repro.core import MemoryGovernor
+
+MB = 1 << 20
+
+
+def test_full_grant_when_budget_free():
+    gov = MemoryGovernor(64 * MB, min_grant=1 * MB)
+    with gov.acquire(16 * MB) as g:
+        assert g.size == 16 * MB
+        assert not g.degraded
+        assert gov.in_use == 16 * MB
+    assert gov.in_use == 0
+    assert gov.stats().grants == 1
+    assert gov.stats().degraded == 0
+
+
+def test_degrades_to_floor_not_to_leftover():
+    gov = MemoryGovernor(24 * MB, min_grant=2 * MB)
+    hold = gov.acquire(16 * MB)
+    # 8 MB is free, but a 16 MB request that can't be met in full gets the
+    # FLOOR (it will spill regardless; the leftover stays liquid for
+    # requests that can actually fit)
+    g = gov.acquire(16 * MB)
+    assert g.size == 2 * MB
+    assert g.degraded
+    assert gov.stats().degraded == 1
+    # a request the leftover CAN serve in full still gets everything it asked
+    g2 = gov.acquire(5 * MB)
+    assert g2.size == 5 * MB and not g2.degraded
+    for grant in (g2, g, hold):
+        grant.release()
+    assert gov.in_use == 0
+
+
+def test_small_request_below_floor_granted_exactly():
+    gov = MemoryGovernor(8 * MB, min_grant=2 * MB)
+    with gov.acquire(512 * 1024) as g:
+        assert g.size == 512 * 1024
+
+
+def test_admission_blocks_until_release():
+    gov = MemoryGovernor(4 * MB, min_grant=1 * MB)
+    first = gov.acquire(4 * MB)  # pool exhausted: not even the floor is free
+    acquired = []
+
+    def blocked():
+        with gov.acquire(1 * MB) as g:
+            acquired.append(g.size)
+
+    th = threading.Thread(target=blocked)
+    th.start()
+    time.sleep(0.05)
+    assert acquired == []          # still parked in admission control
+    first.release()
+    th.join(timeout=5)
+    assert acquired == [1 * MB]
+    stats = gov.stats()
+    assert stats.waits >= 1
+    assert stats.wait_s_total > 0
+
+
+def test_admission_timeout_raises():
+    gov = MemoryGovernor(4 * MB, min_grant=1 * MB)
+    hold = gov.acquire(4 * MB)
+    with pytest.raises(TimeoutError):
+        gov.acquire(1 * MB, timeout=0.05)
+    hold.release()
+
+
+def test_would_grant_is_nonbinding_peek():
+    gov = MemoryGovernor(24 * MB, min_grant=2 * MB)
+    assert gov.would_grant(16 * MB) == 16 * MB
+    hold = gov.acquire(16 * MB)
+    # full-or-floor, exactly mirroring acquire(): 8 MB is free but a 16 MB
+    # request would be degraded to the floor, and the pressure signal must
+    # price the linear path against the grant it would actually get
+    assert gov.would_grant(16 * MB) == 2 * MB
+    assert gov.would_grant(8 * MB) == 8 * MB   # fits: served in full
+    hold2 = gov.acquire(8 * MB)
+    assert gov.would_grant(16 * MB) == 2 * MB  # exhausted: the floor
+    assert gov.in_use == 24 * MB               # peeks granted nothing
+    hold.release(), hold2.release()
+
+
+def test_double_release_is_idempotent():
+    gov = MemoryGovernor(8 * MB)
+    g = gov.acquire(4 * MB)
+    g.release()
+    g.release()
+    assert gov.in_use == 0
+    assert gov.stats().over_budget_events == 0
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        MemoryGovernor(0)
+    with pytest.raises(ValueError):
+        MemoryGovernor(1 * MB, min_grant=2 * MB)
+
+
+def test_concurrent_hammer_never_over_grants():
+    """The hard invariant: under adversarial concurrency the sum of
+    outstanding grants never exceeds the budget (peak high-water mark is
+    tracked under the same lock that grants, so it cannot miss a spike)."""
+    budget = 16 * MB
+    gov = MemoryGovernor(budget, min_grant=1 * MB)
+    stop = time.perf_counter() + 1.0
+    errors = []
+
+    def worker(seed: int):
+        sizes = [3 * MB, 7 * MB, 1 * MB, 12 * MB, 5 * MB]
+        i = seed
+        try:
+            while time.perf_counter() < stop:
+                with gov.acquire(sizes[i % len(sizes)]) as g:
+                    assert 0 < g.size <= sizes[i % len(sizes)]
+                    time.sleep(0.001)
+                i += 1
+        except BaseException as e:  # pragma: no cover - diagnostic path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    assert not errors
+    stats = gov.stats()
+    assert stats.over_budget_events == 0
+    assert 0 < stats.peak_in_use <= budget
+    assert gov.in_use == 0
+    assert stats.grants > 8  # the loop actually cycled

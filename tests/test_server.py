@@ -1,0 +1,250 @@
+"""Concurrent serving: QueryServer closed loop, bit-for-bit parity with
+serial execution, the governor invariant under real query traffic, and the
+pressure-aware path selector."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (MemoryGovernor, PathSelector, QueryServer, Relation,
+                        RuntimeProfile, Session, col)
+
+MB = 1 << 20
+
+
+def star_tables(n_orders=60_000, n_users=2_000, n_parts=500, seed=7):
+    rng = np.random.default_rng(seed)
+    orders = Relation({
+        "uid": rng.integers(0, n_users, n_orders).astype(np.int64),
+        "pid": rng.integers(0, n_parts, n_orders).astype(np.int64),
+        "w": rng.integers(-50, 50, n_orders).astype(np.int64),
+    })
+    users = Relation({
+        "uid": np.arange(n_users, dtype=np.int64),
+        "region": rng.integers(0, 4, n_users).astype(np.int64),
+    })
+    parts = Relation({
+        "pid": np.arange(n_parts, dtype=np.int64),
+        "price": rng.integers(1, 9, n_parts).astype(np.int64),
+    })
+    return {"orders": orders, "users": users, "parts": parts}
+
+
+def mixed_workload(sess: Session):
+    """Mixed star-join stream: scalar roots, a relation root, a group-by,
+    and a packed multi-key join — every fragment shape the planner chains."""
+    return [
+        (sess.table("orders").join("users", on="uid")
+         .filter((col("w") > 0) & (col("b_region") <= 2))
+         .sort("uid").aggregate("w", "sum")),
+        (sess.table("orders").join("users", on="uid")
+         .join("parts", on="pid").filter(col("w") != 0)
+         .aggregate("w", "count")),
+        (sess.table("orders").join("parts", on="pid")
+         .filter(col("b_price") >= 3).sort("pid", "w")
+         .select("pid", "w", "b_price")),
+        (sess.table("orders").join("users", on="uid")
+         .group_by("b_region", {"w": "sum"})),
+        (sess.table("orders").join("orders", on=["uid", "pid"])
+         .aggregate("w", "count")),
+    ]
+
+
+@pytest.fixture(scope="module")
+def serial_results():
+    """Ground truth: the same workload through an ungoverned, single-thread
+    session."""
+    sess = Session(work_mem=64 * MB, policy="auto")
+    for name, rel in star_tables().items():
+        sess.register(name, rel)
+    out = []
+    for q in mixed_workload(sess):
+        res = q.collect()
+        out.append((res.scalar, res.relation))
+    return out
+
+
+def _assert_matches_serial(record, serial_results):
+    expect_scalar, expect_rel = serial_results[record.workload_idx]
+    if expect_scalar is not None:
+        assert record.scalar == expect_scalar  # int64 sums: exact equality
+    else:
+        assert record.relation is not None
+        assert expect_rel.sort_canonical().equals(
+            record.relation.sort_canonical())
+
+
+@pytest.mark.parametrize("policy", ["auto", "linear", "tensor"])
+def test_concurrent_results_match_serial_bit_for_bit(policy, serial_results):
+    """N workers x one shared Session x a constrained governor: every
+    concurrently-served result equals the serial ground truth exactly.
+    Concurrency and memory pressure may change PATHS (that is the point);
+    they must never change ANSWERS."""
+    server = QueryServer(star_tables(), total_mem=8 * MB, work_mem=4 * MB,
+                         policy=policy, min_grant=1 * MB)
+    workload = mixed_workload(server.session)
+    report = server.serve(workload, concurrency=6, queries_per_worker=5,
+                          warmup=1)
+    assert len(report.queries) == 30
+    for record in report.queries:
+        _assert_matches_serial(record, serial_results)
+    gov = report.governor
+    assert gov.over_budget_events == 0
+    assert gov.peak_in_use <= server.governor.total_bytes
+    if policy == "linear":
+        # linear traffic under an 8 MB budget must actually have contended
+        assert gov.grants > 0
+        assert report.queries and any(
+            q.grant_bytes for q in report.queries)
+
+
+def test_governor_never_overgrants_under_load(serial_results):
+    """The budget invariant asserted through real query traffic plus the
+    per-operator grant accounting (SpillAccount/OpMetrics peaks): every
+    linear operator ran under a grant no larger than work_mem, spills only
+    ever happened on degraded grants, and the governor's high-water mark
+    stayed inside the budget."""
+    work_mem = 4 * MB
+    server = QueryServer(star_tables(), total_mem=6 * MB, work_mem=work_mem,
+                         policy="linear", min_grant=1 * MB)
+    workload = mixed_workload(server.session)
+    results = []
+    errors = []
+
+    def worker():
+        try:
+            for q in workload:
+                results.append(server.submit(q))
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(5)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=120)
+    assert not errors
+    stats = server.governor.stats()
+    assert stats.over_budget_events == 0
+    assert stats.peak_in_use <= 6 * MB
+    assert server.governor.in_use == 0  # every grant released
+    spilled_ungoverned = 0
+    for res in results:
+        for m in res.metrics:
+            if m.grant_bytes:
+                assert m.grant_bytes <= work_mem
+            if m.spill.bytes_written and not m.grant_bytes:
+                spilled_ungoverned += 1
+    assert spilled_ungoverned == 0  # no spill outside a governed grant
+
+
+def test_shared_session_concurrent_threads_direct():
+    """The satellite contract without the server wrapper: raw threads over
+    one Session (shared compile cache, device cache, profile) stay
+    bit-for-bit with serial."""
+    sess = Session(work_mem=32 * MB, policy="auto")
+    for name, rel in star_tables(n_orders=30_000).items():
+        sess.register(name, rel)
+    workload = mixed_workload(sess)
+    expected = [(q.collect().scalar, q.collect().relation) for q in workload]
+    failures = []
+
+    def worker(wid: int):
+        try:
+            for i in range(len(workload)):
+                q = workload[(wid + i) % len(workload)]
+                res = q.collect()
+                exp_s, exp_r = expected[(wid + i) % len(workload)]
+                if exp_s is not None:
+                    assert res.scalar == exp_s
+                else:
+                    assert exp_r.sort_canonical().equals(
+                        res.relation.sort_canonical())
+        except BaseException as e:
+            failures.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(6)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=120)
+    assert not failures
+
+
+def test_selector_pressure_shifts_auto_to_tensor():
+    """The decision-time pressure signal: the SAME fragment on the SAME
+    selector flips from linear to tensor when the would-be grant (passed as
+    the work_mem override) collapses — no recalibration, no feedback."""
+    from repro.core import FusedSpec
+
+    rng = np.random.default_rng(3)
+    n = 50_000
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    spec = FusedSpec(join_key="k", filter_fn=None, sort_keys=("k",),
+                     agg=("b_v", "sum"))
+    sel = PathSelector(64 * MB, profile=RuntimeProfile())
+    relaxed = sel.choose_fragment(spec, build, probe)
+    squeezed = sel.choose_fragment(spec, build, probe, work_mem=256 * 1024)
+    assert squeezed.path == "tensor"
+    assert squeezed.predicted_spill_bytes > 0
+    # the un-squeezed decision predicted no spill at 64 MB (whichever path
+    # won on speed): pressure is what manufactured the spill term
+    assert relaxed.predicted_spill_bytes == 0
+
+
+def test_executor_effective_work_mem_tracks_governor():
+    gov = MemoryGovernor(8 * MB, min_grant=1 * MB)
+    sess = Session(work_mem=16 * MB, policy="auto", governor=gov)
+    assert sess.executor._effective_work_mem() == 8 * MB  # budget-capped
+    hold = gov.acquire(7 * MB)
+    # full-or-floor: the 1 MB leftover cannot serve the 8 MB probe
+    assert sess.executor._effective_work_mem() == 1 * MB
+    hold.release()
+    ungoverned = Session(work_mem=16 * MB, policy="auto")
+    assert ungoverned.executor._effective_work_mem() == 16 * MB
+
+
+def test_server_rejects_conflicting_construction():
+    sess = Session(work_mem=4 * MB)
+    with pytest.raises(ValueError):
+        QueryServer({}, total_mem=8 * MB, session=sess)
+    with pytest.raises(ValueError):
+        QueryServer({"t": Relation({"a": np.arange(3)})},
+                    total_mem=None).serve([], concurrency=1,
+                                          queries_per_worker=1)
+
+
+def test_fifo_dispatch_queue_is_fair():
+    """The device dispatch queue must be strict FIFO: a plain lock lets the
+    releasing thread barge back in, which starves queries and manufactures
+    a fake p99 tail."""
+    from repro.core.fused import _FifoLock
+
+    lock = _FifoLock()
+    order = []
+    gate = threading.Event()
+
+    def worker(k: int):
+        lock.acquire()
+        try:
+            gate.wait(5)
+            order.append(k)
+        finally:
+            lock.release()
+
+    lock.acquire()  # park everyone behind the held lock, in arrival order
+    threads = []
+    import time
+    for k in range(6):
+        th = threading.Thread(target=worker, args=(k,))
+        th.start()
+        time.sleep(0.02)  # deterministic arrival order
+        threads.append(th)
+    gate.set()
+    lock.release()
+    for th in threads:
+        th.join(timeout=10)
+    assert order == list(range(6))

@@ -1,0 +1,78 @@
+"""SpillManager failure-mode regressions: zero-column run dirs and partial
+writes must fail loudly, never silently."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Relation, SpillManager
+from repro.core.metrics import SpillAccount
+
+
+def test_run_reader_on_empty_dir_raises_value_error_not_stopiteration():
+    """A run dir with no column files used to raise bare StopIteration from
+    ``next(iter(...))`` — which a generator-based caller swallows as silent
+    end-of-stream (PEP 479's exact failure mode).  It must be a ValueError.
+    """
+    with SpillManager() as mgr:
+        empty = os.path.join(mgr.dir, "empty_run")
+        os.makedirs(empty)
+        with pytest.raises(ValueError, match="no column files"):
+            mgr.open_run_reader(empty, SpillAccount())
+
+        # regression shape: proof it surfaces inside a generator instead of
+        # terminating it (the bug this guards against)
+        def gen():
+            yield mgr.open_run_reader(empty, SpillAccount())
+
+        with pytest.raises(ValueError):
+            next(gen())
+
+
+def test_run_reader_roundtrip_still_works():
+    rel = Relation({"a": np.arange(100, dtype=np.int64),
+                    "b": np.arange(100, dtype=np.int64) * 3})
+    with SpillManager() as mgr:
+        acct = SpillAccount()
+        path = mgr.write_relation(rel, "run", acct)
+        reader = mgr.open_run_reader(path, acct)
+        chunks = []
+        while not reader.exhausted:
+            chunks.append(reader.read_rows(33))
+        out = chunks[0]
+        for c in chunks[1:]:
+            out = out.concat(c)
+        assert out.equals(rel)
+
+
+def test_write_relation_failure_removes_partial_dir():
+    """A mid-write failure must not leave a partial spill dir behind: it
+    would read back as a truncated relation (silently wrong results) and
+    leak temp space for the life of the manager."""
+    rel = Relation({"a": np.arange(64, dtype=np.int64),
+                    "b": np.arange(64, dtype=np.int64),
+                    "c": np.arange(64, dtype=np.int64)})
+    with SpillManager() as mgr:
+        acct = SpillAccount()
+        real_save = np.save
+        calls = {"n": 0}
+
+        def failing_save(path, arr, **kw):
+            calls["n"] += 1
+            if calls["n"] == 2:  # first column lands, second write dies
+                raise OSError("disk full")
+            return real_save(path, arr, **kw)
+
+        np.save = failing_save
+        try:
+            with pytest.raises(OSError, match="disk full"):
+                mgr.write_relation(rel, "jb", acct)
+        finally:
+            np.save = real_save
+        # the partial dir is gone, and the manager dir holds no leftovers
+        assert os.listdir(mgr.dir) == []
+        # files_created counts only COMPLETED relations
+        assert acct.files_created == 0
+        # ...and the manager still works afterwards
+        path = mgr.write_relation(rel, "jb", acct)
+        assert mgr.read_relation(path, SpillAccount()).equals(rel)
