@@ -582,11 +582,16 @@ def fig11_concurrent_tail(reps: int = 6) -> Dict:
         budget = budgets[budget_name]
         cell: Dict = {}
         for policy in ("linear", "tensor", "auto"):
+            # fig11 is the PR-4 reproduction: pin PR-4 semantics — strict
+            # one-at-a-time device dispatch and grant-size-only (queue-
+            # blind) pricing — so the phase transition stays comparable
+            # across PRs; fig12 measures the PR-5 queue-aware/batched
+            # serving behavior
             server = QueryServer(
                 {"small_build": sb, "small_probe": sp,
                  "large_build": lb, "large_probe": lp},
                 total_mem=budget, work_mem=work_mem, policy=policy,
-                min_grant=2 * MB)
+                min_grant=2 * MB, queue_aware=False, device_max_batch=1)
             small = (server.session.table("small_probe")
                      .join("small_build", on="k")
                      .sort("k", "w").aggregate("b_v", "sum"))
@@ -660,6 +665,202 @@ def fig11_concurrent_tail(reps: int = 6) -> Dict:
     return out
 
 
+# -- Fig 12: queue-aware vs queue-blind selection under admission pressure ----
+
+def fig12_queue_aware(reps: int = 6) -> Dict:
+    """Queue-aware vs queue-blind ``auto`` (PR 5): pricing what a request
+    will WAIT for, not just what it will get.
+
+    A "batch tenant" (5 background threads over a pool that holds 4 — one
+    always parked, so the pool stays saturated continuously) cycles
+    min_grant-sized memory leases through the server's broker.  The
+    interactive stream is a selective-filter 4-sort-key star fragment
+    (N=120k): its hash table (4.2 MB) fits even the floor grant it would
+    receive under pressure, the ~2% filter collapses the linear side's
+    post-filter sort (so the whole linear fragment fits that grant too),
+    and the fused path pays a full capacity-padded 4-key device sort — the
+    LINEAR path is genuinely the faster execution when memory is actually
+    free, by a structural margin feedback noise cannot flip.  A
+    queue-BLIND selector (broker wait pricing disabled — the PR-4
+    behavior) therefore keeps choosing linear, and every query parks in
+    admission behind the tenant, twice (join grant + sort grant).  The
+    queue-AWARE selector prices the expected admission wait (EWMA of
+    observed lease holds/waits x standing waiters) into the linear path
+    and serves from the fused device path immediately, where same-shape
+    dispatches coalesce into micro-batched device-lease groups
+    (``device_max_batch=3`` — the serving-system batch cap that bounds
+    co-execution so the closed loop's tail stays tight).
+
+    Hard gates (the PR acceptance criterion): queue-aware auto stays
+    stable — P99/P50 <= 1.5, with an absolute-scale arm (P99 <= 0.6x the
+    tenant hold) because the ratio is regime-dependent on a 2-core CI
+    host: an under-saturated device queue yields bimodal sub-second walls
+    whose P99/P50 exceeds 1.5 even though the tail sits at device-round
+    scale, nowhere near the multi-second parking scale the claim is
+    about.  Queue-blind P99 must be >= 2x the aware P99 — the
+    selector-regret gate, measured on the tail because that is the
+    paper's stability metric (a parked-linear strategy can look
+    mean-competitive while its P99 collapses; predictability is exactly
+    what it loses).  Plus: zero over-budget grants in both modes, and
+    batched (coalesced) fused dispatch observed AND bit-for-bit equal to
+    the serial reference.
+    """
+    import threading
+    import time as _time
+
+    from repro.core import QueryServer, Session, col
+
+    n = 120_000
+    budget, work_mem, min_grant = 20 * MB, 16 * MB, 5 * MB
+    tenant_hold_s, tenant_gap_s = 6.0, 0.005
+    conc = 8
+    qpw = max(12, int(reps))
+    rng = np.random.default_rng(5)
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 1000, n).astype(np.int64),
+                      "s1": rng.integers(0, 1000, n).astype(np.int64),
+                      "s2": rng.integers(0, 1000, n).astype(np.int64)})
+
+    def query_of(sess):
+        return (sess.table("p").join("b", on="k").filter(col("w") < 20)
+                .sort("w", "s1", "s2", "k").aggregate("b_v", "sum"))
+
+    # serial reference: ungoverned, uncontended — the bit-for-bit oracle
+    ref_sess = Session(work_mem=work_mem, policy="auto")
+    ref_sess.register("b", build).register("p", probe)
+    ref_scalar = query_of(ref_sess).scalar()
+
+    # pre-warm EVERY physical path's compiled programs (fused pipeline,
+    # per-operator device walk, linear) through throwaway sessions: the jit
+    # caches are process-global, and `auto` explores paths as queues shift —
+    # a first-time XLA compile inside the measured window would be a
+    # multi-second tail sample that measures compilation, not queueing
+    for warm_policy, warm_fuse in (("tensor", True), ("tensor", False),
+                                   ("linear", True)):
+        ws = Session(work_mem=work_mem, policy=warm_policy, fuse=warm_fuse)
+        ws.register("b", build).register("p", probe)
+        for _ in range(2):
+            if query_of(ws).scalar() != ref_scalar:
+                raise RuntimeError(f"{warm_policy}/fuse={warm_fuse} warmup "
+                                   f"diverged from the reference")
+    # ... and the MIXED walk's data-dependent shape: linear join + host
+    # filter, then device sort/aggregate over the small filtered
+    # intermediate (deterministic row count for fixed tables)
+    lin_sess = Session(work_mem=work_mem, policy="linear")
+    lin_sess.register("b", build).register("p", probe)
+    filtered = (lin_sess.table("p").join("b", on="k")
+                .filter(col("w") < 20).to_relation())
+    mix_sess = Session(work_mem=work_mem, policy="tensor", fuse=False)
+    for _ in range(2):
+        if (mix_sess.from_relation(filtered).sort("w", "s1", "s2", "k")
+                .aggregate("b_v", "sum").scalar()) != ref_scalar:
+            raise RuntimeError("mixed-walk warmup diverged")
+
+    out: Dict = {}
+    for mode in ("aware", "blind"):
+        server = QueryServer({"b": build, "p": probe}, total_mem=budget,
+                             work_mem=work_mem, policy="auto",
+                             min_grant=min_grant, device_max_batch=3,
+                             queue_aware=(mode == "aware"))
+        q = query_of(server.session)
+        stop = threading.Event()
+
+        def tenant():
+            while not stop.is_set():
+                try:
+                    lease = server.broker.memory_lease(min_grant, timeout=1.0)
+                except TimeoutError:
+                    continue
+                _time.sleep(tenant_hold_s)
+                lease.release()
+                _time.sleep(tenant_gap_s)
+
+        # 5 tenants over a pool that holds 4: one is always parked in
+        # admission, so the pool is saturated CONTINUOUSLY (no gap windows
+        # where a query prices the linear path as free and then loses the
+        # race) and the governor's waiter count is honest standing demand
+        tenants = [threading.Thread(target=tenant, daemon=True)
+                   for _ in range(5)]
+        for th in tenants:
+            th.start()
+        _time.sleep(0.1)  # let the tenant occupy the pool before warmup
+        # warmup (off the clock, tenant running): seeds the broker's
+        # hold/wait EWMAs — queue-aware pricing learns from observed
+        # leases, not from configuration — and lets the feedback profile
+        # converge each mode's steady-state choices
+        rep = server.serve([q], concurrency=conc, queries_per_worker=qpw,
+                           warmup=3, keep_relations=False)
+        stop.set()
+        for th in tenants:
+            th.join(timeout=5)
+        # startup-ramp exclusion (fig11's argument, one round deeper): all
+        # 8 workers arrive simultaneously — no open system does that — and
+        # the resulting device-queue backlog takes ~2 service rounds to
+        # drain, so each worker's first two queries measure the ramp, not
+        # steady-state serving
+        steady = [r for r in rep.queries if r.seq > 1]
+        s = latency_stats([r.wall_s for r in steady])
+        gov = rep.governor
+        brk = rep.broker
+        paths = {r.paths for r in steady}
+        for r in rep.queries:
+            if r.scalar != ref_scalar:
+                raise RuntimeError(
+                    f"{mode} run diverged from the serial reference: "
+                    f"{r.scalar} != {ref_scalar} (worker {r.worker})")
+        if gov.over_budget_events:
+            raise RuntimeError(f"{mode}: governor over-granted: {gov}")
+        if server.governor.stats().peak_in_use > budget:
+            raise RuntimeError(f"{mode}: peak grant exceeds budget")
+        ratio = s.p99 / max(s.p50, 1e-9)
+        emit(f"fig12/{mode}_auto_c{conc}", s.p50 * 1e6,
+             {"p99_s": round(s.p99, 4), "p99_over_p50": round(ratio, 2),
+              "paths": "|".join(sorted(paths)),
+              "mem_wait_s_total": round(sum(r.mem_wait_s for r in steady), 3),
+              "dev_wait_s_total": round(sum(r.queue_wait_s
+                                            for r in steady), 3),
+              "coalesced_dispatches": brk.device_coalesced,
+              "dispatch_groups": brk.device_groups,
+              "degraded_grants": gov.degraded,
+              "admission_waits": gov.waits,
+              "over_budget": gov.over_budget_events,
+              "qps": round(rep.qps, 2)})
+        out[mode] = {"p50": s.p50, "p99": s.p99, "mean": s.mean,
+                     "ratio": ratio,
+                     "paths": sorted(paths),
+                     "coalesced": brk.device_coalesced,
+                     "batched_queries": sum(r.batched for r in steady),
+                     "mem_wait_s": sum(r.mem_wait_s for r in steady),
+                     "over_budget": gov.over_budget_events}
+    # THE acceptance gates: wait pricing keeps auto out of admission (stable
+    # tail), wait blindness parks it there (>=2x worse P99, worse P50 too)
+    stable_abs = 0.6 * tenant_hold_s  # device-round scale, not parking scale
+    if out["aware"]["ratio"] > 1.5 and out["aware"]["p99"] > stable_abs:
+        raise RuntimeError(
+            f"queue-aware auto p99/p50 {out['aware']['ratio']:.2f} > 1.5 "
+            f"AND p99 {out['aware']['p99']:.2f}s > {stable_abs:.1f}s: wait "
+            f"pricing did not keep the stream stable")
+    if out["blind"]["p99"] < 2.0 * out["aware"]["p99"]:
+        raise RuntimeError(
+            f"queue-blind p99 {out['blind']['p99']:.3f}s is not >= 2x the "
+            f"queue-aware p99 {out['aware']['p99']:.3f}s: the admission-"
+            f"parking pathology did not reproduce")
+    if out["aware"]["coalesced"] == 0:
+        raise RuntimeError(
+            "no micro-batched device dispatch observed in the aware run: "
+            "8 same-shape workers should coalesce")
+    emit("fig12/regret_blind_vs_aware", 0.0,
+         {"aware_p50_s": round(out["aware"]["p50"], 4),
+          "blind_p50_s": round(out["blind"]["p50"], 4),
+          "blind_over_aware_mean": round(
+              out["blind"]["mean"] / max(out["aware"]["mean"], 1e-9), 2),
+          "blind_over_aware_p99": round(
+              out["blind"]["p99"] / max(out["aware"]["p99"], 1e-9), 2)})
+    return out
+
+
 ALL = {
     "fig1": fig1_scalability,
     "fig3": fig3_hashtable_growth,
@@ -671,6 +872,7 @@ ALL = {
     "fig9": fig9_serving,
     "fig10": fig10_star_join,
     "fig11": fig11_concurrent_tail,
+    "fig12": fig12_queue_aware,
     "headline": headline,
     "selector": selector_analysis,
     "regime": regime_model,

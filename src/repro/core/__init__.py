@@ -24,12 +24,16 @@ Layered, front to back:
   * **Residency** — :mod:`~repro.core.table_cache`: device base-table column
     cache and key-cardinality sketches, both content-token keyed and safe
     to share across concurrent sessions.
-  * **Serving layer** — :class:`MemoryGovernor` (ONE memory budget for all
-    concurrent linear operators: full grants, floor degradation, admission
+  * **Serving layer** — :class:`ResourceBroker` (typed :class:`MemoryLease`
+    / :class:`DeviceLease` acquisition over every resource, live queue
+    depth + EWMA wait tracking, and the :meth:`~ResourceBroker.price`
+    quotes that make ``auto`` queue-aware), :class:`MemoryGovernor` (ONE
+    memory budget for all concurrent linear operators: full grants,
+    policy-driven degradation — floor or proportional-share — admission
     control, a never-over-budget invariant) and :class:`QueryServer`
     (closed-loop concurrent driver over one shared Session, reporting
-    P50/P99, spill volume, and grant statistics per run — the fig11
-    reproduction of the paper's tail-latency claim).
+    P50/P99, spill volume, grant and broker statistics per run — the
+    fig11/fig12 reproductions of the paper's tail-latency claim).
 
 See ``docs/ARCHITECTURE.md`` for the full layer map, ``docs/query-api.md``
 for the front-end (including the ``explain()`` stage-chain notation), and
@@ -47,11 +51,16 @@ from .fused import (FusedSpec, match_fragment, pipeline_cache_clear,
 from .linear_engine import HashTable, hash_join_linear, sort_linear, table_bytes_estimate
 from .logical import (LAggregate, LFilter, LGroupBy, LJoin, LProject, LScan,
                       LSort, from_physical, schema)
-from .memory_governor import GovernorStats, MemoryGovernor, MemoryGrant
+from .memory_governor import (FloorGrantPolicy, GovernorStats, GrantPolicy,
+                              MemoryGovernor, MemoryGrant,
+                              ProportionalShareGrantPolicy)
 from .metrics import BLOCK_BYTES, LatencyStats, OpMetrics, SpillAccount, latency_stats
 from .path_selector import Decision, PathSelector
 from .planner import Program, plan_program, prune_columns, push_filters
 from .relation import Relation, column_token
+from .resource_broker import (BrokerStats, DeviceLease, DeviceQueue,
+                              MemoryLease, PressureQuote, ResourceBroker,
+                              ResourceRequest, default_broker)
 from .runtime_profile import DEFAULT_PROFILE, RuntimeProfile, size_bucket
 from .server import QueryServer, ServeReport, ServedQuery
 from .session import Query, Session
@@ -71,19 +80,22 @@ from .tensor_engine import (
 )
 
 __all__ = [
-    "Aggregate", "BLOCK_BYTES", "CostConstants", "CostModel",
-    "DEFAULT_PROFILE", "Decision", "DeviceColumn", "DeviceRelation",
-    "Executor", "Expr", "Filter", "FragmentEstimate", "FusedSpec",
-    "GovernorStats", "GroupBy",
+    "Aggregate", "BLOCK_BYTES", "BrokerStats", "CostConstants", "CostModel",
+    "DEFAULT_PROFILE", "Decision", "DeviceColumn", "DeviceLease",
+    "DeviceQueue", "DeviceRelation",
+    "Executor", "Expr", "Filter", "FloorGrantPolicy", "FragmentEstimate",
+    "FusedSpec", "GovernorStats", "GrantPolicy", "GroupBy",
     "HashTable", "Join", "KeyStats", "LAggregate", "LFilter", "LGroupBy",
     "LJoin", "LProject", "LScan", "LSort", "LatencyStats",
-    "MemoryGovernor", "MemoryGrant", "OpMetrics",
-    "PHYSICAL_NODES", "PathSelector", "Program", "Project", "Query",
-    "QueryResult", "QueryServer", "Relation",
+    "MemoryGovernor", "MemoryGrant", "MemoryLease", "OpMetrics",
+    "PHYSICAL_NODES", "PathSelector", "PressureQuote", "Program", "Project",
+    "ProportionalShareGrantPolicy", "Query",
+    "QueryResult", "QueryServer", "Relation", "ResourceBroker",
+    "ResourceRequest",
     "RuntimeProfile", "Scan", "ServeReport", "ServedQuery", "Session",
     "Sort", "SpillAccount",
     "SpillManager", "aligned_join_indices", "capacity_bucket", "col",
-    "column_token", "from_physical", "get_device_columns",
+    "column_token", "default_broker", "from_physical", "get_device_columns",
     "hash_join_linear", "join_capacity", "key_stats",
     "group_aggregate_device", "group_aggregate_linear", "group_aggregate_tensor",
     "latency_stats", "lit", "match_fragment", "pending_upload_bytes",

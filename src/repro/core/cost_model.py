@@ -14,6 +14,14 @@ model ships with conservative defaults and a ``calibrate()`` routine that fits
 them from micro-runs of both engines — mirroring how the paper's selector uses
 "indicators that are relatively easy to observe at the time of execution"
 rather than a full optimizer-grade cost model.
+
+These estimates price *execution*.  Under a :class:`~repro.core.
+resource_broker.ResourceBroker` the selector additionally folds the broker's
+**queue-wait terms** (expected memory-admission wait onto T_rel, expected
+device-queue wait onto T_tensor) on top of the feedback-blended estimates —
+current load is a property of this instant's queues, not a cost to learn,
+which is why it is added after the blend and never recorded into the profile
+(see ``docs/costing.md``).
 """
 from __future__ import annotations
 
@@ -90,6 +98,25 @@ class FragmentEstimate:
 class CostModel:
     def __init__(self, constants: Optional[CostConstants] = None):
         self.c = constants or CostConstants()
+
+    # -- linearized-intermediate footprints ---------------------------------
+    # One source of truth for "how much memory will this linear operator
+    # actually need": the executor sizes its grant requests with these, and
+    # the ResourceBroker prices admission (grant + expected wait) against
+    # the SAME numbers — a quote probed with a different footprint than the
+    # grant request would price the linear path against a queue it will
+    # never stand in.
+
+    @staticmethod
+    def hash_need_bytes(n_rows: int) -> int:
+        """Open-addressing hash-table footprint for an n-row build side
+        (also the group-table footprint for n distinct groups)."""
+        return table_bytes_estimate(n_rows)
+
+    @staticmethod
+    def sort_need_bytes(n_rows: int, row_bytes: int) -> int:
+        """External-sort working set: input + run buffers ≈ 2× data."""
+        return 2 * max(1, int(n_rows)) * max(1, int(row_bytes))
 
     # -- α(N, M) -------------------------------------------------------------
     def join_spill_bytes(self, n_build: int, n_probe: int, row_bytes_b: int,

@@ -30,11 +30,13 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from .device_relation import DeviceRelation
-from .linear_engine import hash_join_linear, sort_linear, table_bytes_estimate
+from .linear_engine import hash_join_linear, sort_linear
 from .memory_governor import MemoryGovernor
 from .metrics import OpMetrics, SpillAccount, Timer
 from .path_selector import Decision, PathSelector
 from .relation import Relation
+from .resource_broker import (PressureQuote, ResourceBroker, ResourceRequest,
+                              default_broker)
 from .spill import SpillManager
 from .tensor_engine import (tensor_join_device, tensor_sort_device)
 
@@ -112,6 +114,20 @@ class Project:
 # legacy detection both key off this one tuple (add new nodes HERE)
 PHYSICAL_NODES = (Scan, Filter, Join, Sort, Aggregate, GroupBy, Project)
 
+# Process-wide registry of per-operator device shape signatures whose jitted
+# programs have (very likely) already compiled — jax's compile cache is
+# process-global, so freshness is too.  Exact row counts on purpose: the
+# per-op programs compile at exact shapes, and bucketing would classify a
+# genuinely-fresh shape as warm (a compile inside an exclusive lease — the
+# stall the bypass prevents).  Capped as a backstop: overflow clears the
+# registry, costing at most one extra unleased run per shape — jax's own
+# compile cache grows one (much larger) entry per shape regardless.
+import threading as _threading
+
+_WARM_SIGS: set = set()
+_WARM_SIG_LOCK = _threading.Lock()
+_WARM_SIGS_CAP = 4096
+
 
 @dataclasses.dataclass
 class QueryResult:
@@ -146,7 +162,8 @@ class Executor:
                  selector: Optional[PathSelector] = None,
                  spill_root: Optional[str] = None,
                  fuse: bool = True,
-                 governor: Optional[MemoryGovernor] = None):
+                 governor: Optional[MemoryGovernor] = None,
+                 broker: Optional[ResourceBroker] = None):
         if policy not in ("auto", "linear", "tensor"):
             raise ValueError(policy)
         force = None if policy == "auto" else policy
@@ -156,17 +173,41 @@ class Executor:
         self.work_mem = work_mem
         self.spill_root = spill_root
         self.fuse = fuse
+        # Every resource acquisition goes through ONE broker: memory leases
+        # for linear operators (when a governor exists), device leases for
+        # fused and per-operator tensor dispatch, and the pressure quotes
+        # the selector folds into path costs.  A governor without a broker
+        # gets a private broker; no governor falls back to the process-wide
+        # default broker (device-only — its queue is THE queue for every
+        # broker-less session, preserving one-device serialization).
+        if broker is None:
+            # an auto-built broker SHARES the process-wide device queue:
+            # the physical device is one resource however many governed
+            # sessions exist, and a private queue here would let two
+            # sessions' fused programs time-slice against each other —
+            # the tail the queue exists to remove.  Per-server private
+            # queues are an explicit choice (QueryServer passes one).
+            broker = (ResourceBroker(governor,
+                                     device_queue=default_broker().device)
+                      if governor is not None else default_broker())
+        elif governor is not None and broker.governor is not governor:
+            raise ValueError(
+                "pass either governor or broker (or a broker built over "
+                "that governor); conflicting governors would split the "
+                "budget accounting")
+        self.broker = broker
         # Shared memory governor (concurrent serving): linear operators
         # acquire a grant before building their linearized intermediate and
         # the GRANT size — not the static work_mem — bounds their memory.
         # None keeps the single-query semantics: a private work_mem.
-        self.governor = governor
+        self.governor = governor if governor is not None else broker.governor
 
     # -- memory grants -------------------------------------------------------
     def _effective_work_mem(self, need_bytes: Optional[int] = None) -> int:
-        """The work_mem a linear operator would receive *right now* — the
-        pressure signal fed to the selector so path decisions track current
-        memory contention, not the configured ceiling.
+        """The work_mem a linear operator would receive *right now*.
+        Decision-time pricing goes through :meth:`_quotes` (grant size AND
+        expected waits); this remains the plain grant-size peek for
+        diagnostics and callers that only need the memory half.
 
         ``need_bytes`` (the operator's estimated linearized-intermediate
         footprint) makes the probe EXACTLY the request :meth:`_granted`
@@ -182,29 +223,103 @@ class Executor:
             req = min(self.work_mem, max(1, int(need_bytes)))
         return self.governor.would_grant(req)
 
+    def _quotes(self, need_bytes: int):
+        """Broker pressure quotes for one deferred decision: ``(mem_quote,
+        dev_quote)``.  The memory quote is probed with EXACTLY the request
+        :meth:`_granted` would make (same ``min(work_mem, need)`` sizing),
+        so grant pricing and admission-wait pricing describe the queue the
+        operator would actually stand in; the device quote prices the
+        dispatch queue the tensor path would join.  ``(None, None)`` when
+        ungoverned AND the device queue is idle-priced away (no broker).
+        A forced-policy selector never reads quotes — skip the two
+        lock-acquiring price calls on that hot path."""
+        if self.selector.force is not None:
+            return None, None
+        if self.broker.governor is not None:
+            req = min(self.work_mem, max(1, int(need_bytes)))
+            mem = self.broker.price(ResourceRequest("memory", need_bytes=req))
+        else:
+            # ungoverned: a synthetic full-grant quote at the EXECUTOR's
+            # work_mem, preserving the pre-broker contract that decisions
+            # are priced against the executor's budget even when the
+            # selector was constructed with a different one
+            mem = PressureQuote("memory", self.work_mem, 0.0, 0, False)
+        dev = self.broker.price(ResourceRequest("device"))
+        return mem, dev
+
     @contextlib.contextmanager
     def _granted(self, need_bytes: int):
-        """Grant scope for one linear operator: yields ``(work_mem, grant)``
+        """Grant scope for one linear operator: yields ``(work_mem, lease)``
         where ``work_mem`` is what the operator must live within and
-        ``grant`` is None for ungoverned executors.  Requests the smaller
+        ``lease`` is None for ungoverned executors.  Requests the smaller
         of the configured work_mem and the operator's estimated
         linearized-intermediate footprint, so small operators under a
         shared budget don't hoard memory they cannot use."""
-        if self.governor is None:
+        if self.broker.governor is None:
             yield self.work_mem, None
             return
-        grant = self.governor.acquire(
+        lease = self.broker.memory_lease(
             min(self.work_mem, max(1, int(need_bytes))))
         try:
-            yield grant.size, grant
+            yield lease.size, lease
         finally:
-            grant.release()
+            lease.release()
+
+    @contextlib.contextmanager
+    def _device_leased(self, sig: object = None):
+        """Device lease scope for one per-operator tensor dispatch.  The
+        shared ``"per-op"`` batch bucket lets concurrent per-operator work
+        coalesce with itself (its device programs are small and lazy) while
+        still queueing, in arrival order, behind exclusive fused dispatches.
+        The lease wait is load, not cost: callers stamp it into
+        ``OpMetrics.queue_wait_s`` so profile feedback excludes it.
+
+        ``sig`` is the call's shape signature: its FIRST sighting process-
+        wide runs without a lease (yields None), because a first call of a
+        jitted per-operator program pays XLA compilation — seconds spent
+        inside the queue would stall every other query's device phase.
+        This mirrors ``run_fused``'s fresh-program bypass; per-op programs
+        have no explicit compile cache to ask, so the signature registry is
+        the freshness oracle (approximate is fine — a misclassification
+        costs one unqueued warm run or one queued compile, never a wrong
+        result)."""
+        if sig is not None:
+            with _WARM_SIG_LOCK:
+                fresh = sig not in _WARM_SIGS
+            if fresh:
+                yield None
+                # registered only on normal completion: a run that raised
+                # may never have finished compiling, and treating the
+                # shape as warm would put the retry's compile INSIDE an
+                # exclusive lease — the stall this bypass exists to avoid
+                with _WARM_SIG_LOCK:
+                    if len(_WARM_SIGS) >= _WARM_SIGS_CAP:
+                        _WARM_SIGS.clear()
+                    _WARM_SIGS.add(sig)
+                return
+        lease = self.broker.device_lease(batch_key="per-op")
+        try:
+            yield lease
+        finally:
+            lease.release()
 
     @staticmethod
     def _stamp_grant(m: OpMetrics, grant) -> None:
         if grant is not None:
             m.grant_bytes = grant.size
             m.grant_degraded = grant.degraded
+            m.mem_wait_s = grant.wait_s
+
+    @staticmethod
+    def _stamp_lease(m: OpMetrics, lease) -> None:
+        """Device-lease accounting: the wait is end-to-end latency (added
+        to wall_s) but contention noise for the runtime profile (mirrored
+        into queue_wait_s, which feedback subtracts — the fix for the
+        ROADMAP-noted per-operator profile pollution)."""
+        if lease is not None:
+            m.wall_s += lease.wait_s
+            m.queue_wait_s += lease.wait_s
+            m.batched = m.batched or lease.batched
 
     def execute(self, plan) -> QueryResult:
         if not isinstance(plan, PHYSICAL_NODES):
@@ -299,17 +414,20 @@ class Executor:
             return None
         spec, build, probe = frag
         # the fragment's dominant linear intermediate is the join hash
-        # table; probing with it makes the pressure signal the same
-        # full-or-floor answer the join's _acquire would get
+        # table; quoting with it makes the pressure signal (grant size AND
+        # expected admission wait) the same answer the join's grant
+        # acquisition would get
+        mem_q, dev_q = self._quotes(
+            self.selector.model.hash_need_bytes(len(build)))
         decision = self.selector.choose_fragment(
-            spec, build, probe, work_mem=self._effective_work_mem(
-                table_bytes_estimate(len(build))))
+            spec, build, probe, mem_quote=mem_q, dev_quote=dev_q)
         if decision.path != "tensor":
             return None
         decisions.append(decision)
         try:
             result, m = run_fused(spec, build, probe,
-                                  decision_reason=decision.reason)
+                                  decision_reason=decision.reason,
+                                  broker=self.broker)
         except Exception:
             # e.g. a predicate that cannot trace (np.nonzero & friends):
             # fall back to the generic walk, which evaluates it on host
@@ -335,25 +453,41 @@ class Executor:
 
     # -- root materialization ----------------------------------------------
     def _materialize_root(self, out, metrics):
-        """The single host-materialization point of a device-resident query."""
+        """The single host-materialization point of a device-resident query.
+
+        This is where the per-operator tensor path's LAZY device work
+        actually executes (pending gathers + the result fetch), so it — not
+        just the operator launch sites — runs under a device lease: without
+        it, concurrent materializations would time-slice against each other
+        and their walls would carry exactly the contention noise the
+        ROADMAP flagged for profile feedback.
+        """
         if isinstance(out, DeviceRelation):
-            with Timer() as t:
-                rel = out.to_host()
-            metrics.append(OpMetrics(
+            sig = ("materialize", out.num_physical_rows, out.names,
+                   out.valid is None)
+            with self._device_leased(sig) as lease:
+                with Timer() as t:
+                    rel = out.to_host()
+            m = OpMetrics(
                 op="materialize", path="tensor", rows_in=len(out),
                 rows_out=len(rel), wall_s=t.elapsed, spill=SpillAccount(),
-                host_syncs=1))
+                host_syncs=1)
+            self._stamp_lease(m, lease)
+            metrics.append(m)
             return rel
         if isinstance(out, _DeviceScalar):
             # 0-d device scalar from an Aggregate over a device relation;
             # one fetch brings the value and its supporting row count
-            with Timer() as t:
-                import jax
-                val, n_valid = (float(x) for x in
-                                jax.device_get((out.value, out.n_valid)))
-            metrics.append(OpMetrics(
+            with self._device_leased(("agg_fetch", out.fn)) as lease:
+                with Timer() as t:
+                    import jax
+                    val, n_valid = (float(x) for x in
+                                    jax.device_get((out.value, out.n_valid)))
+            m = OpMetrics(
                 op="materialize", path="tensor", rows_in=1, rows_out=1,
-                wall_s=t.elapsed, spill=SpillAccount(), host_syncs=1))
+                wall_s=t.elapsed, spill=SpillAccount(), host_syncs=1)
+            self._stamp_lease(m, lease)
+            metrics.append(m)
             if out.fn in ("min", "max") and n_valid == 0:
                 raise ValueError(
                     f"{out.fn} over an empty result has no identity")
@@ -424,19 +558,24 @@ class Executor:
         if isinstance(node, Join):
             build = self._exec(node.build, metrics, decisions, mgr)
             probe = self._exec(node.probe, metrics, decisions, mgr)
+            mem_q, dev_q = self._quotes(
+                self.selector.model.hash_need_bytes(len(build)))
             decision = self.selector.choose_join(
-                build, probe, node.key, work_mem=self._effective_work_mem(
-                    table_bytes_estimate(len(build))))
+                build, probe, node.key, mem_quote=mem_q, dev_quote=dev_q)
             decisions.append(decision)
             if decision.path == "tensor":
                 dev_b, up_b = self._to_device(build)
                 dev_p, up_p = self._to_device(probe)
-                out, m = tensor_join_device(dev_b, dev_p, node.key)
+                sig = ("join", dev_b.num_physical_rows,
+                       dev_p.num_physical_rows, node.key)
+                with self._device_leased(sig) as lease:
+                    out, m = tensor_join_device(dev_b, dev_p, node.key)
+                self._stamp_lease(m, lease)
                 m.h2d_bytes += up_b + up_p
             else:
                 build, probe, syncs = self._lower_for_linear(build, probe)
-                with self._granted(table_bytes_estimate(len(build))) as (
-                        wm, grant):
+                with self._granted(self.selector.model.hash_need_bytes(
+                        len(build))) as (wm, grant):
                     out, m = hash_join_linear(build, probe, node.key, wm, mgr)
                 m.host_syncs += syncs
                 self._stamp_grant(m, grant)
@@ -445,17 +584,23 @@ class Executor:
             return out
         if isinstance(node, Sort):
             child = self._exec(node.child, metrics, decisions, mgr)
+            mem_q, dev_q = self._quotes(self.selector.model.sort_need_bytes(
+                len(child), child.row_bytes()))
             decision = self.selector.choose_sort(
-                child, node.keys, work_mem=self._effective_work_mem(
-                    2 * len(child) * child.row_bytes()))
+                child, node.keys, mem_quote=mem_q, dev_quote=dev_q)
             decisions.append(decision)
             if decision.path == "tensor":
                 dev_c, up_c = self._to_device(child)
-                out, m = tensor_sort_device(dev_c, node.keys)
+                sig = ("sort", dev_c.num_physical_rows, tuple(node.keys),
+                       dev_c.valid is None)
+                with self._device_leased(sig) as lease:
+                    out, m = tensor_sort_device(dev_c, node.keys)
+                self._stamp_lease(m, lease)
                 m.h2d_bytes += up_c
             else:
                 child, syncs = self._lower_for_linear(child)
-                with self._granted(2 * child.nbytes()) as (wm, grant):
+                with self._granted(self.selector.model.sort_need_bytes(
+                        len(child), child.row_bytes())) as (wm, grant):
                     out, m = sort_linear(child, node.keys, wm, mgr)
                 m.host_syncs += syncs
                 self._stamp_grant(m, grant)
@@ -471,13 +616,19 @@ class Executor:
             # compares (data bytes), not the group-table estimate the
             # grant below requests — mixing units would price a spill an
             # ungoverned session with the same work_mem would never see
+            mem_q, dev_q = self._quotes(self.selector.model.sort_need_bytes(
+                len(child), child.row_bytes()))
             decision = self.selector.choose_sort(
-                child, [node.key], work_mem=self._effective_work_mem(
-                    2 * len(child) * child.row_bytes()))
+                child, [node.key], mem_quote=mem_q, dev_quote=dev_q)
             decisions.append(decision)
             if decision.path == "tensor":
                 dev_c, up_c = self._to_device(child)
-                out, m = group_aggregate_device(dev_c, node.key, node.values)
+                sig = ("group", dev_c.num_physical_rows,
+                       tuple(node.values.items()), dev_c.valid is None)
+                with self._device_leased(sig) as lease:
+                    out, m = group_aggregate_device(dev_c, node.key,
+                                                    node.values)
+                self._stamp_lease(m, lease)
                 m.h2d_bytes += up_c
             else:
                 child, syncs = self._lower_for_linear(child)
@@ -490,8 +641,8 @@ class Executor:
                 st = key_stats(child, node.key)
                 scale = max(1, len(child) // max(1, st.sample_n))
                 n_groups = min(len(child), max(1, st.card * scale))
-                with self._granted(table_bytes_estimate(n_groups)) as (
-                        wm, grant):
+                with self._granted(self.selector.model.hash_need_bytes(
+                        n_groups)) as (wm, grant):
                     out, m = group_aggregate_linear(child, node.key,
                                                     node.values, wm, mgr)
                 m.host_syncs += syncs

@@ -27,9 +27,7 @@ numpy inputs and costs no device traffic.
 from __future__ import annotations
 
 import dataclasses
-import os
 import threading
-import time
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -476,45 +474,20 @@ def _build_program(spec: FusedSpec, key: str, capacity: int,
 # ---------------------------------------------------------------------------
 
 # The device is a serially-shared resource: concurrent serving sessions
-# funnel fused-program launches through this dispatch queue, so a query's
-# device phase runs at full speed instead of time-slicing against seven
-# neighbors (the scheduler roulette that turns a homogeneous workload into
-# a 3x p99/p50 spread).  Latency becomes queue wait + execution — the wait
-# is accounted in OpMetrics.queue_wait_s and excluded from the runtime
-# profile's execution-cost observations.  ``REPRO_DEVICE_SERIALIZE=0``
-# restores free-for-all dispatch (e.g. multi-device hosts where XLA can
-# genuinely overlap programs).
-class _FifoLock:
-    """Strict-FIFO mutex (ticket lock).  A plain ``threading.Lock`` lets the
-    releasing thread barge back in before older waiters are scheduled; in a
-    closed serving loop that starves individual queries for many service
-    times and manufactures exactly the p99 tail this queue exists to
-    remove.  Tickets make the wait bound deterministic: queue-depth ×
-    service time."""
-
-    def __init__(self):
-        self._cond = threading.Condition()
-        self._next_ticket = 0
-        self._now_serving = 0
-
-    def acquire(self) -> None:
-        with self._cond:
-            ticket = self._next_ticket
-            self._next_ticket += 1
-            while ticket != self._now_serving:
-                self._cond.wait()
-
-    def release(self) -> None:
-        with self._cond:
-            self._now_serving += 1
-            self._cond.notify_all()
-
-
-_DISPATCH_LOCK = _FifoLock()
-
-
-def _serialize_dispatch() -> bool:
-    return os.environ.get("REPRO_DEVICE_SERIALIZE", "1") != "0"
+# funnel fused-program launches through the broker's DeviceQueue (a typed
+# DeviceLease per dispatch), so a query's device phase runs at full speed
+# instead of time-slicing against seven neighbors (the scheduler roulette
+# that turns a homogeneous workload into a 3x p99/p50 spread).  Latency
+# becomes queue wait + execution — the wait is accounted in
+# OpMetrics.queue_wait_s and excluded from the runtime profile's
+# execution-cost observations.  Queued dispatches of the SAME compiled
+# shape (lease batch_key = the pipeline cache key) coalesce into one
+# micro-batched admission group instead of running strictly one-at-a-time;
+# the programs are identical compiled artifacts over independent inputs, so
+# coalescing changes scheduling only, never results.
+# ``REPRO_DEVICE_SERIALIZE=0`` makes the broker grant device leases without
+# serializing (e.g. multi-device hosts where XLA can genuinely overlap
+# programs).
 
 
 def _host_plan(build: Relation, probe: Relation, key: str):
@@ -542,19 +515,28 @@ def _host_plan(build: Relation, probe: Relation, key: str):
 
 
 def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
-              decision_reason: str = "") -> Tuple[object, OpMetrics]:
+              decision_reason: str = "", broker=None) -> Tuple[object, OpMetrics]:
     """Execute a fused fragment; returns (Relation | float, OpMetrics).
 
     Happy path: one compiled program launch + one batched device→host fetch.
     Capacity overflow (optimistic bucket too small) re-runs once at the exact
     bucket; both programs stay cached for subsequent queries.
+
+    Device dispatch acquires a :class:`~repro.core.resource_broker.
+    DeviceLease` from ``broker`` (the process-wide default broker when none
+    is passed — one shared queue per physical device); queued dispatches of
+    the same compiled shape coalesce into one micro-batched admission group.
     """
+    if broker is None:
+        from .resource_broker import default_broker
+        broker = default_broker()
     n_build, n_probe = len(build), len(probe)
     b_bucket = capacity_bucket(n_build)
     p_bucket = capacity_bucket(n_probe)
     syncs = 0
     queue_wait = 0.0
     any_fresh = False
+    batched = False
     with Timer() as t:
         # host planning is part of the query's wall time (the per-op
         # baseline pays for its planning inside its timers too)
@@ -563,7 +545,6 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         pcols, up_p = get_device_columns(probe, p_bucket)
         dtypes = tuple(sorted((k, str(v.dtype)) for k, v in bcols.items()))
         dtypes += tuple(sorted((k, str(v.dtype)) for k, v in pcols.items()))
-        dispatch = _DISPATCH_LOCK if _serialize_dispatch() else None
         while True:
             cache_key = (spec.cache_signature(), capacity, b_bucket,
                          p_bucket, dense_domain, dtypes)
@@ -577,17 +558,20 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
             # own unserialized execution is a one-off, and compiling runs
             # never feed the runtime profile anyway)
             any_fresh = any_fresh or fresh
-            hold = dispatch if not fresh else None
-            if hold is not None:
-                t_q = time.perf_counter()
-                hold.acquire()
-                queue_wait += time.perf_counter() - t_q
+            lease = None
+            if not fresh:
+                lease = broker.device_lease(batch_key=("fused", cache_key))
+                queue_wait += lease.wait_s
             try:
                 out = prog(bcols, pcols, n_build, n_probe, kmin)
                 fetched = jax.device_get(out)  # THE host sync of the query
             finally:
-                if hold is not None:
-                    hold.release()
+                if lease is not None:
+                    lease.release()
+                    # read AFTER the run: `batched` is live — a solo lease
+                    # becomes batched when a same-shape arrival joins its
+                    # in-flight round
+                    batched = batched or lease.batched
             if fresh:
                 _CACHE.mark_ready(cache_key)
             syncs += 1
@@ -623,5 +607,6 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         h2d_bytes=up_b + up_p,
         queue_wait_s=queue_wait,
         compiled=any_fresh,
+        batched=batched,
     )
     return result, metrics

@@ -14,10 +14,12 @@ table / sort runs) and release it when the operator completes:
 
   * a request is served **in full** when the budget allows — the operator
     runs exactly as it would have with a private ``work_mem``;
-  * under pressure the grant is **degraded** down to ``min_grant`` — the
-    operator still runs, but with less memory than it wanted, which is what
-    pushes it over the spill boundary (the contention-induced tail fig11
-    measures);
+  * under pressure the grant is **degraded** by the configured
+    :class:`GrantPolicy` — down to ``min_grant`` under the default
+    :class:`FloorGrantPolicy`, or to a demand-weighted share of the free
+    pool under :class:`ProportionalShareGrantPolicy` — the operator still
+    runs, but with less memory than it wanted, which is what pushes it over
+    the spill boundary (the contention-induced tail fig11 measures);
   * when not even ``min_grant`` is available the request **blocks**
     (admission control) until a running query releases memory — queueing
     delay instead of an out-of-memory failure.
@@ -25,25 +27,111 @@ table / sort runs) and release it when the operator completes:
 The governor's hard invariant — asserted continuously and exposed for tests
 via :attr:`GovernorStats.over_budget_events` / :attr:`GovernorStats.
 peak_in_use` — is that the sum of outstanding grants never exceeds the
-budget.  Tensor-path operators never acquire grants: device-resident
-execution is precisely the path that does not build a host linearized
-intermediate, which is why it sidesteps the contention this module models.
+budget, *whatever the policy returns* (policy output is clamped centrally).
+Tensor-path operators never acquire grants: device-resident execution is
+precisely the path that does not build a host linearized intermediate, which
+is why it sidesteps the contention this module models.
 
-:meth:`would_grant` is the *pressure signal* for the decision layer: the
-:class:`~repro.core.path_selector.PathSelector` prices the linear path at
-the work_mem a request would receive *right now*, so ``auto`` shifts toward
-the fused path exactly as memory tightens.
+:meth:`would_grant` is the grant-size half of the pressure signal; the
+queue-aware half (expected admission *wait*) lives in
+:meth:`~repro.core.resource_broker.ResourceBroker.price`, which reads
+:meth:`admission_probe` — the peek that also reports whether acquisition
+would block and how many waiters are already parked.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from typing import Optional
+from typing import Optional, Union
 
-__all__ = ["MemoryGovernor", "MemoryGrant", "GovernorStats"]
+__all__ = ["MemoryGovernor", "MemoryGrant", "GovernorStats", "GrantPolicy",
+           "FloorGrantPolicy", "ProportionalShareGrantPolicy"]
 
 MB = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# Grant degradation policies
+# ---------------------------------------------------------------------------
+
+class GrantPolicy:
+    """Sizing for a request that cannot be served in full.
+
+    ``degraded_size(requested, available, floor, demand_bytes)`` returns the
+    bytes to grant; ``demand_bytes`` is the sum of *requested* bytes across
+    outstanding grants and parked waiters (excluding this request) — the
+    live demand picture a workload-aware policy weighs against.  The
+    governor clamps the result into ``[floor, min(requested, available)]``
+    regardless, so no policy can violate the budget invariant.
+    """
+
+    name = "base"
+
+    def degraded_size(self, requested: int, available: int, floor: int,
+                      demand_bytes: int) -> int:
+        raise NotImplementedError
+
+
+class FloorGrantPolicy(GrantPolicy):
+    """Full grant if it fits, else the admission floor — NOT "whatever is
+    left".  A partially-filled grant spills anyway (its deficit is what it
+    is) while stranding the remaining pool, so the queries that COULD have
+    fit (the fast tier) start degrading too and the whole distribution
+    collapses.  Floor-degrading keeps the pool liquid: operators that fit
+    stay fast, operators that don't pay their own spill and nobody else's.
+    """
+
+    name = "floor"
+
+    def degraded_size(self, requested, available, floor, demand_bytes):
+        return floor
+
+
+class ProportionalShareGrantPolicy(GrantPolicy):
+    """Demand-weighted proportional share — the PostgreSQL
+    ``hash_mem_multiplier`` analogue.
+
+    A squeezed request receives its share of the *free* pool weighted by its
+    estimated linearized-intermediate footprint (callers request estimated
+    hash-table / sort-run bytes, so the weight IS the hash-table size):
+
+        share = available * (requested * m) / (demand + requested * m)
+
+    with ``m = hash_mem_multiplier``.  Memory-hungry hash builds are favored
+    by ``m`` exactly as PG lets hash tables exceed ``work_mem`` by that
+    factor — their spill amplification is superlinear in the deficit, so a
+    byte given to the biggest deficit saves the most temp I/O.  Unlike the
+    floor policy this trades pool liquidity for deficit reduction; fig11's
+    floor rationale still holds for bimodal workloads, which is why floor
+    stays the default and this policy is opt-in
+    (``MemoryGovernor(policy="proportional")``).
+    """
+
+    name = "proportional"
+
+    def __init__(self, hash_mem_multiplier: float = 2.0):
+        if hash_mem_multiplier <= 0:
+            raise ValueError(
+                f"hash_mem_multiplier must be positive, got "
+                f"{hash_mem_multiplier}")
+        self.hash_mem_multiplier = float(hash_mem_multiplier)
+
+    def degraded_size(self, requested, available, floor, demand_bytes):
+        weighted = requested * self.hash_mem_multiplier
+        share = int(available * weighted / max(1.0, demand_bytes + weighted))
+        return max(floor, share)
+
+
+def _resolve_policy(policy: Union[str, GrantPolicy, None]) -> GrantPolicy:
+    if policy is None or policy == "floor":
+        return FloorGrantPolicy()
+    if policy == "proportional":
+        return ProportionalShareGrantPolicy()
+    if isinstance(policy, GrantPolicy):
+        return policy
+    raise ValueError(f"unknown grant policy {policy!r}; expected 'floor', "
+                     f"'proportional', or a GrantPolicy instance")
 
 
 @dataclasses.dataclass
@@ -63,8 +151,11 @@ class MemoryGrant:
     """An outstanding slice of the governor's budget.
 
     ``size`` is the work_mem the holding operator must live within; ``size <
-    requested`` marks a degraded grant.  Use as a context manager (releases
-    on exit) or call :meth:`release` exactly once.
+    requested`` marks a degraded grant.  Use as a context manager (exit
+    releases if still held) or call :meth:`release` exactly once — a second
+    explicit release raises instead of silently corrupting the budget
+    accounting (a double ``_release`` would inflate the available pool and
+    let the governor over-grant its budget).
     """
 
     governor: "MemoryGovernor"
@@ -77,23 +168,32 @@ class MemoryGrant:
     def degraded(self) -> bool:
         return self.size < self.requested
 
+    @property
+    def released(self) -> bool:
+        return self._released
+
     def release(self) -> None:
-        if not self._released:
-            self._released = True
-            self.governor._release(self.size)
+        if self._released:
+            raise RuntimeError(
+                f"memory grant of {self.size} B released twice; a silent "
+                f"double release would inflate the available budget")
+        self._released = True
+        self.governor._release(self.size, self.requested)
 
     def __enter__(self) -> "MemoryGrant":
         return self
 
     def __exit__(self, *exc) -> None:
-        self.release()
+        if not self._released:
+            self.release()
 
 
 class MemoryGovernor:
     """Thread-safe admission controller over one total memory budget."""
 
     def __init__(self, total_bytes: int, min_grant: int = 1 * MB,
-                 full_grant_wait_s: float = 0.0):
+                 full_grant_wait_s: float = 0.0,
+                 policy: Union[str, GrantPolicy, None] = None):
         if total_bytes <= 0:
             raise ValueError(f"total_bytes must be positive, got {total_bytes}")
         min_grant = max(1, int(min_grant))
@@ -108,7 +208,11 @@ class MemoryGovernor:
         # early trades per-query latency for throughput, like PG choosing a
         # smaller hash table over queueing the whole backend)
         self.full_grant_wait_s = float(full_grant_wait_s)
+        self.policy = _resolve_policy(policy)
         self._in_use = 0
+        self._demand = 0          # sum of REQUESTED bytes, outstanding grants
+        self._waiters = 0         # requests parked in admission control
+        self._waiting_demand = 0  # sum of their requested bytes
         self._cond = threading.Condition()
         self._stats = GovernorStats()
 
@@ -122,6 +226,11 @@ class MemoryGovernor:
         return self.total_bytes - self._in_use
 
     @property
+    def waiters(self) -> int:
+        """Requests currently parked in admission control."""
+        return self._waiters
+
+    @property
     def pressure(self) -> float:
         """Fraction of the budget currently granted (0.0 = idle, 1.0 = full)."""
         return self._in_use / self.total_bytes
@@ -130,27 +239,50 @@ class MemoryGovernor:
         with self._cond:
             return dataclasses.replace(self._stats)
 
+    def _size_for(self, requested: int, avail: int, floor: int) -> int:
+        """Grant sizing (lock held): full if it fits, else the policy's
+        degraded size clamped into [floor, min(requested, avail)] — the
+        clamp, not the policy, owns the never-over-budget invariant.
+        Callers are never in the waiting set at sizing time (acquire runs
+        ``end_wait`` first), so the demand picture excludes this request
+        by construction."""
+        if avail >= requested:
+            return requested
+        demand = self._demand + self._waiting_demand
+        size = int(self.policy.degraded_size(requested, avail, floor,
+                                             max(0, demand)))
+        return max(floor, min(size, requested, max(floor, avail)))
+
     def would_grant(self, requested: int) -> int:
         """Non-binding peek: the grant size a request of ``requested`` bytes
-        would receive right now.  This is the decision layer's pressure
-        signal — cheap, lock-held only for the read, and never blocks.
-        Mirrors :meth:`acquire`'s full-or-floor SIZING exactly (a signal
-        reporting the in-between leftover would price the linear path
-        against memory the grant will never contain); it does NOT model
-        admission blocking — when not even the floor is free it still
-        returns the floor the waiter will eventually get, and the wait
-        itself is unpriced (see ROADMAP: queue-aware admission)."""
+        would receive right now.  Mirrors :meth:`acquire`'s sizing exactly
+        (a signal reporting a size the grant will never contain would price
+        the linear path against phantom memory); it does NOT model admission
+        blocking — :meth:`admission_probe` adds the would-block/waiters
+        picture and :meth:`~repro.core.resource_broker.ResourceBroker.price`
+        turns that into an expected wait."""
+        return self.admission_probe(requested)[0]
+
+    def admission_probe(self, requested: int):
+        """``(size, would_block, waiters)`` — the wait-aware pressure peek.
+
+        ``size`` is :meth:`would_grant`'s answer; ``would_block`` reports
+        whether :meth:`acquire` would park in admission control right now
+        (not even the floor is free); ``waiters`` how many requests are
+        already parked ahead.  Lock-held reads only; never blocks, never
+        reserves."""
         requested = max(1, int(requested))
+        floor = min(requested, self.min_grant)
         with self._cond:
             avail = self.total_bytes - self._in_use
-        floor = min(requested, self.min_grant)
-        return requested if avail >= requested else floor
+            size = self._size_for(requested, avail, floor)
+            return size, avail < floor, self._waiters
 
     # -- grant lifecycle -----------------------------------------------------
     def acquire(self, requested: int, timeout: Optional[float] = None
                 ) -> MemoryGrant:
         """Block until at least ``min(requested, min_grant)`` bytes are free,
-        then grant ``min(requested, available)``.
+        then grant the policy's sizing (full when it fits).
 
         With ``full_grant_wait_s > 0`` the request first waits up to that
         long for its *full* size before settling for a degraded grant.
@@ -164,38 +296,48 @@ class MemoryGovernor:
         deadline = None if timeout is None else t0 + timeout
         with self._cond:
             waited = False
-            # phase 1: opportunistic wait for the full request
-            if self.full_grant_wait_s > 0:
-                full_deadline = t0 + self.full_grant_wait_s
-                if deadline is not None:
-                    full_deadline = min(full_deadline, deadline)
-                while (self.total_bytes - self._in_use < requested
-                       and time.perf_counter() < full_deadline):
+
+            def begin_wait():
+                nonlocal waited
+                if not waited:
                     waited = True
-                    self._cond.wait(full_deadline - time.perf_counter())
-            # phase 2: admission control — never grant below the floor
-            while self.total_bytes - self._in_use < floor:
-                waited = True
-                remaining = (None if deadline is None
-                             else deadline - time.perf_counter())
-                if remaining is not None and remaining <= 0:
-                    self._stats.waits += 1
-                    self._stats.wait_s_total += time.perf_counter() - t0
-                    raise TimeoutError(
-                        f"admission control: {requested} B requested, "
-                        f"{self.total_bytes - self._in_use} B available "
-                        f"after {timeout:.3f}s")
-                self._cond.wait(remaining)
-            # full grant if it fits, else the floor — NOT "whatever is
-            # left".  A partially-filled grant spills anyway (its deficit
-            # is what it is) while stranding the remaining pool, so the
-            # queries that COULD have fit (the fast tier) start degrading
-            # too and the whole distribution collapses.  Floor-degrading
-            # keeps the pool liquid: operators that fit stay fast,
-            # operators that don't pay their own spill and nobody else's.
+                    self._waiters += 1
+                    self._waiting_demand += requested
+
+            def end_wait():
+                if waited:
+                    self._waiters -= 1
+                    self._waiting_demand -= requested
+
+            try:
+                # phase 1: opportunistic wait for the full request
+                if self.full_grant_wait_s > 0:
+                    full_deadline = t0 + self.full_grant_wait_s
+                    if deadline is not None:
+                        full_deadline = min(full_deadline, deadline)
+                    while (self.total_bytes - self._in_use < requested
+                           and time.perf_counter() < full_deadline):
+                        begin_wait()
+                        self._cond.wait(full_deadline - time.perf_counter())
+                # phase 2: admission control — never grant below the floor
+                while self.total_bytes - self._in_use < floor:
+                    begin_wait()
+                    remaining = (None if deadline is None
+                                 else deadline - time.perf_counter())
+                    if remaining is not None and remaining <= 0:
+                        self._stats.waits += 1
+                        self._stats.wait_s_total += time.perf_counter() - t0
+                        raise TimeoutError(
+                            f"admission control: {requested} B requested, "
+                            f"{self.total_bytes - self._in_use} B available "
+                            f"after {timeout:.3f}s")
+                    self._cond.wait(remaining)
+            finally:
+                end_wait()
             avail = self.total_bytes - self._in_use
-            size = requested if avail >= requested else floor
+            size = self._size_for(requested, avail, floor)
             self._in_use += size
+            self._demand += requested
             if self._in_use > self.total_bytes:  # pragma: no cover
                 self._stats.over_budget_events += 1
             self._stats.grants += 1
@@ -209,10 +351,13 @@ class MemoryGovernor:
             wait_s = time.perf_counter() - t0 if waited else 0.0
         return MemoryGrant(self, size, requested, wait_s)
 
-    def _release(self, size: int) -> None:
+    def _release(self, size: int, requested: int) -> None:
         with self._cond:
             self._in_use -= size
-            if self._in_use < 0:  # pragma: no cover - double release guard
+            self._demand -= requested
+            if self._in_use < 0:  # pragma: no cover - accounting corruption
                 self._stats.over_budget_events += 1
                 self._in_use = 0
+            if self._demand < 0:  # pragma: no cover
+                self._demand = 0
             self._cond.notify_all()

@@ -85,11 +85,23 @@ class OpMetrics:
     # problem; the profile models cost).
     grant_bytes: int = 0
     grant_degraded: bool = False
-    # Seconds this operator spent queued for the device dispatch lock
-    # (concurrent serving: fused programs execute serially per device).
+    # Seconds this operator spent queued for its device lease (concurrent
+    # serving: device dispatch is admitted through the broker's DeviceQueue;
+    # the fused pipeline AND the per-operator tensor path both hold a lease).
     # Included in wall_s — it IS end-to-end latency — but excluded from the
     # runtime-profile feedback, which models execution cost, not load.
     queue_wait_s: float = 0.0
+    # Seconds this linear operator spent blocked in memory admission control
+    # before its grant was issued (0 when ungoverned or on the tensor path).
+    # NOT part of wall_s: the operator's timer starts after admission, so
+    # admission wait never pollutes runtime-profile feedback; end-to-end
+    # latency including it is the serving layer's per-query timer.
+    mem_wait_s: float = 0.0
+    # True when this operator's device dispatch was admitted as part of a
+    # coalesced (micro-batched) lease group — several queued dispatches of
+    # the same compiled shape ran as one admission round instead of
+    # serially.  Scheduling only; results are bit-for-bit identical.
+    batched: bool = False
     # True when this operator's run may have paid jit compilation (a fused
     # program cache miss, including a hit on a not-yet-ready entry).  The
     # executor's warm-feedback gate keys off THIS, not a global counter

@@ -24,6 +24,17 @@ design:
     times for the same ``(op, path, size-bucket)``, so the crossover point
     self-corrects on hosts where the shipped constants are stale.
 
+PR 5 adds **queue-aware pricing**: when the executor runs under a
+:class:`~repro.core.resource_broker.ResourceBroker` it passes each decision
+the broker's :class:`~repro.core.resource_broker.PressureQuote`\\ s — the
+expected memory grant *and* expected admission wait (charged to the linear
+path) plus the expected device-queue wait (charged to the tensor path).
+``auto`` therefore stops choosing a small linear operator that then parks
+in admission while the tensor path would run immediately, and stops piling
+onto a deeply-queued device when the linear path is free.  The wait terms
+are folded AFTER the feedback blend and never recorded into the profile:
+load is a property of this instant's queues, not an execution cost.
+
 Key-cardinality sampling is served by the cached sketch in
 :mod:`repro.core.table_cache` — the seed re-ran a 65536-row ``np.unique``
 on every ``choose_join`` call.
@@ -60,6 +71,10 @@ class Decision:
     t_tensor: float
     predicted_spill_bytes: int
     h2d_bytes: int = 0  # pending upload bytes charged to the tensor estimate
+    # Broker queue-wait terms folded into t_linear / t_tensor (0 when the
+    # decision was priced without quotes — ungoverned, or queue-blind):
+    mem_wait_s: float = 0.0  # expected memory-admission wait (linear path)
+    dev_wait_s: float = 0.0  # expected device-queue wait (tensor path)
 
 
 class PathSelector:
@@ -76,6 +91,37 @@ class PathSelector:
         # runtime_profile.DEFAULT_PROFILE to share across executors.
         self.profile = RuntimeProfile() if profile is None else profile
 
+    # -- broker quotes -------------------------------------------------------
+    @staticmethod
+    def _waits(mem_quote, dev_quote):
+        """Queue-wait terms from the broker's quotes: expected memory-
+        admission wait charges the LINEAR path (it is what the operator
+        would stand in before its grant), expected device-queue wait
+        charges the TENSOR path.  Folded AFTER the feedback blend — load is
+        a property of this instant's queues, not an execution cost to
+        learn."""
+        mem_wait = 0.0 if mem_quote is None else float(mem_quote.expected_wait_s)
+        dev_wait = 0.0 if dev_quote is None else float(dev_quote.expected_wait_s)
+        return mem_wait, dev_wait
+
+    def _resolve_wm(self, work_mem, mem_quote) -> int:
+        """The work_mem this decision prices the linear path against: an
+        explicit override wins, else the quote's expected grant (the
+        governor's full-or-policy sizing), else the configured ceiling."""
+        if work_mem is not None:
+            return int(work_mem)
+        if mem_quote is not None:
+            return int(mem_quote.grant_bytes)
+        return self.work_mem
+
+    @staticmethod
+    def _wait_note(mem_wait: float, dev_wait: float) -> str:
+        if mem_wait < 1e-4 and dev_wait < 1e-4:
+            return ""
+        return (f"; queue-aware: +{mem_wait * 1e3:.0f}ms expected admission "
+                f"wait on linear, +{dev_wait * 1e3:.0f}ms device queue on "
+                f"tensor")
+
     # -- execution-time observables -----------------------------------------
     @staticmethod
     def _dup_estimate(build, key: str) -> float:
@@ -91,58 +137,72 @@ class PathSelector:
 
     # -- join ---------------------------------------------------------------
     def choose_join(self, build: Relation, probe: Relation, key: str,
-                    work_mem: Optional[int] = None) -> Decision:
+                    work_mem: Optional[int] = None,
+                    mem_quote=None, dev_quote=None) -> Decision:
         """``work_mem`` overrides the selector's configured budget for THIS
-        decision: under a shared :class:`~repro.core.memory_governor.
-        MemoryGovernor` the executor passes the grant a request would
-        receive *right now*, so contention shifts ``auto`` toward the
-        tensor path exactly when the linear path would be squeezed into
-        the spill regime."""
+        decision; under a shared governor the executor instead passes the
+        broker's ``mem_quote`` (the grant a request would receive *right
+        now* PLUS the expected admission wait) and ``dev_quote`` (expected
+        device-queue wait), so contention shifts ``auto`` toward the tensor
+        path both when the linear path would be squeezed into the spill
+        regime AND when it would park in admission while the device is
+        free."""
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
-        wm = self.work_mem if work_mem is None else int(work_mem)
+        wm = self._resolve_wm(work_mem, mem_quote)
+        mem_wait, dev_wait = self._waits(mem_quote, dev_quote)
         n_b, n_p = len(build), len(probe)
         dup = self._dup_estimate(build, key)
         est_out = int(n_p * dup)
         est = self.model.estimate_join(
             n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out, wm)
-        t_lin = self.profile.blend(est.t_linear, "hash_join", "linear", n_b + n_p)
-        t_ten = self.profile.blend(est.t_tensor, "hash_join", "tensor", n_b + n_p)
+        t_lin = self.profile.blend(est.t_linear, "hash_join", "linear",
+                                   n_b + n_p) + mem_wait
+        t_ten = self.profile.blend(est.t_tensor, "hash_join", "tensor",
+                                   n_b + n_p) + dev_wait
+        note = self._wait_note(mem_wait, dev_wait)
         if est.path_fits_mem and t_lin <= t_ten:
             return Decision(
                 "linear",
                 f"hash table fits work_mem ({wm} B); linear path has "
-                f"no spill regime at this scale",
-                t_lin, t_ten, 0)
+                f"no spill regime at this scale" + note,
+                t_lin, t_ten, 0, mem_wait_s=mem_wait, dev_wait_s=dev_wait)
         path = "tensor" if t_ten < t_lin else "linear"
         return Decision(
             path,
             f"predicted spill {est.spill_bytes / 1e6:.1f} MB over {est.passes} "
             f"partition pass(es): α(N,M) makes T_linear={t_lin:.3f}s vs "
-            f"T_tensor={t_ten:.3f}s (feedback-blended)",
-            t_lin, t_ten, est.spill_bytes)
+            f"T_tensor={t_ten:.3f}s (feedback-blended)" + note,
+            t_lin, t_ten, est.spill_bytes,
+            mem_wait_s=mem_wait, dev_wait_s=dev_wait)
 
     # -- sort ------------------------------------------------------------------
     def choose_sort(self, rel: Relation, keys,
-                    work_mem: Optional[int] = None) -> Decision:
+                    work_mem: Optional[int] = None,
+                    mem_quote=None, dev_quote=None) -> Decision:
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
-        wm = self.work_mem if work_mem is None else int(work_mem)
+        wm = self._resolve_wm(work_mem, mem_quote)
+        mem_wait, dev_wait = self._waits(mem_quote, dev_quote)
         est = self.model.estimate_sort(
             len(rel), rel.row_bytes(), len(keys), wm)
-        t_lin = self.profile.blend(est.t_linear, "sort", "linear", len(rel))
-        t_ten = self.profile.blend(est.t_tensor, "sort", "tensor", len(rel))
+        t_lin = self.profile.blend(est.t_linear, "sort", "linear",
+                                   len(rel)) + mem_wait
+        t_ten = self.profile.blend(est.t_tensor, "sort", "tensor",
+                                   len(rel)) + dev_wait
+        note = self._wait_note(mem_wait, dev_wait)
         if est.path_fits_mem and t_lin <= t_ten:
             return Decision(
                 "linear",
-                "dataset fits work_mem; in-memory lexsort is cheapest",
-                t_lin, t_ten, 0)
+                "dataset fits work_mem; in-memory lexsort is cheapest" + note,
+                t_lin, t_ten, 0, mem_wait_s=mem_wait, dev_wait_s=dev_wait)
         path = "tensor" if t_ten < t_lin else "linear"
         return Decision(
             path,
             f"predicted spill {est.spill_bytes / 1e6:.1f} MB / {est.passes} merge "
-            f"pass(es); T_linear={t_lin:.3f}s vs T_tensor={t_ten:.3f}s",
-            t_lin, t_ten, est.spill_bytes)
+            f"pass(es); T_linear={t_lin:.3f}s vs T_tensor={t_ten:.3f}s" + note,
+            t_lin, t_ten, est.spill_bytes,
+            mem_wait_s=mem_wait, dev_wait_s=dev_wait)
 
     # -- fused fragment (plan-level, PR 2) ----------------------------------
     @staticmethod
@@ -200,19 +260,23 @@ class PathSelector:
         return sel
 
     def choose_fragment(self, spec, build: Relation, probe: Relation,
-                        work_mem: Optional[int] = None) -> Decision:
+                        work_mem: Optional[int] = None,
+                        mem_quote=None, dev_quote=None) -> Decision:
         """Price a whole fusable fragment: ONE fixed dispatch, ONE host sync,
         and H2D transfer only for base-table columns not already resident in
         the device cache (warm serving queries charge 0).  Fragments arrive
         from the rewrite planner, so this prices the REWRITTEN plan — pruned
         scans carry smaller row_bytes, pushed-down filters carry sampled
-        selectivity.  ``work_mem`` overrides the configured budget with the
-        governor's current-grant estimate (memory-pressure awareness)."""
+        selectivity.  ``work_mem`` overrides the configured budget;
+        ``mem_quote``/``dev_quote`` (broker quotes) carry the governor's
+        current-grant estimate plus the expected admission/device-queue
+        waits (queue-aware pricing)."""
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
         from .tensor_engine import capacity_bucket
 
-        wm = self.work_mem if work_mem is None else int(work_mem)
+        wm = self._resolve_wm(work_mem, mem_quote)
+        mem_wait, dev_wait = self._waits(mem_quote, dev_quote)
         n_b, n_p = len(build), len(probe)
         dup = self._dup_estimate(build, spec.join_key)
         est_out = int(n_p * dup)
@@ -226,21 +290,26 @@ class PathSelector:
             filter_selectivity=self._filter_selectivity(spec.filter_fn,
                                                         probe, build))
         n = n_b + n_p
-        t_lin = self.profile.blend(est.t_linear, "fragment", "linear", n)
-        t_ten = self.profile.blend(est.t_tensor, "fragment", "tensor", n)
+        t_lin = self.profile.blend(est.t_linear, "fragment", "linear",
+                                   n) + mem_wait
+        t_ten = self.profile.blend(est.t_tensor, "fragment", "tensor",
+                                   n) + dev_wait
+        note = self._wait_note(mem_wait, dev_wait)
         num_ops = 1 + (spec.filter_fn is not None) + bool(spec.sort_keys) \
             + (spec.agg is not None)
         if est.path_fits_mem and t_lin <= t_ten:
             return Decision(
                 "linear",
                 f"whole linear fragment fits work_mem ({wm} B) and "
-                f"T_linear={t_lin:.3f}s <= T_tensor={t_ten:.3f}s",
-                t_lin, t_ten, 0, h2d)
+                f"T_linear={t_lin:.3f}s <= T_tensor={t_ten:.3f}s" + note,
+                t_lin, t_ten, 0, h2d,
+                mem_wait_s=mem_wait, dev_wait_s=dev_wait)
         path = "tensor" if t_ten < t_lin else "linear"
         return Decision(
             path,
             f"fragment-level: T_linear={t_lin:.3f}s vs T_tensor={t_ten:.3f}s "
             f"(fixed cost amortized over {num_ops} fused ops, "
             f"{h2d / 1e6:.1f} MB pending H2D, predicted spill "
-            f"{est.spill_bytes / 1e6:.1f} MB, feedback-blended)",
-            t_lin, t_ten, est.spill_bytes, h2d)
+            f"{est.spill_bytes / 1e6:.1f} MB, feedback-blended)" + note,
+            t_lin, t_ten, est.spill_bytes, h2d,
+            mem_wait_s=mem_wait, dev_wait_s=dev_wait)

@@ -41,6 +41,7 @@ from .executor import QueryResult
 from .memory_governor import GovernorStats, MemoryGovernor
 from .metrics import LatencyStats, Timer, latency_stats
 from .relation import Relation
+from .resource_broker import BrokerStats, DeviceQueue, ResourceBroker
 from .session import Query, Session
 
 __all__ = ["QueryServer", "ServeReport", "ServedQuery"]
@@ -61,6 +62,9 @@ class ServedQuery:
     paths: str             # "tensor", "linear", or "mixed"
     scalar: Optional[float]
     relation: Optional[Relation]
+    mem_wait_s: float = 0.0    # total memory-admission wait across operators
+    queue_wait_s: float = 0.0  # total device-lease wait across operators
+    batched: bool = False      # any dispatch ran in a coalesced lease group
 
 
 @dataclasses.dataclass
@@ -73,6 +77,9 @@ class ServeReport:
     total_temp_mb: float
     governor: GovernorStats
     concurrency: int
+    # per-run broker accounting (device dispatch groups/coalescing, lease
+    # waits, quote counts); EWMA/peak fields are end-of-run gauges
+    broker: Optional[BrokerStats] = None
 
     @property
     def qps(self) -> float:
@@ -101,13 +108,30 @@ def _paths_of(result: QueryResult) -> str:
 
 
 class QueryServer:
-    """Owns the serving-scope state: session + tables + memory governor.
+    """Owns the serving-scope state: session + tables + resource broker.
 
     ``total_mem`` is the budget EVERY concurrent linear operator shares;
     ``work_mem`` is the per-operator ceiling a single grant may reach (the
     classic PostgreSQL meaning).  ``total_mem=None`` runs ungoverned —
     every query gets the full ``work_mem``, which reduces to the
     single-query semantics of the earlier PRs.
+
+    Every server owns its :class:`~repro.core.resource_broker.
+    ResourceBroker` (private device queue + the governor): leases, queue
+    depth, EWMA waits and pressure quotes are all per-server state, so one
+    server's load never pollutes another's pricing.  That isolation trades
+    away cross-server device serialization — servers meant to run
+    CONCURRENTLY in one process should share a queue (build their sessions
+    over brokers constructed with the same
+    :class:`~repro.core.resource_broker.DeviceQueue`).  ``grant_policy``
+    selects the governor's degradation policy (``"floor"`` default,
+    ``"proportional"`` for the PG hash_mem_multiplier analogue, or a
+    :class:`~repro.core.memory_governor.GrantPolicy` instance);
+    ``queue_aware=False`` disables the broker's wait pricing — the
+    queue-blind ablation fig12 measures against (grant sizing stays
+    pressure-aware; only the wait terms vanish); ``device_max_batch``
+    bounds a coalesced device-dispatch group (``1`` = strict PR-4
+    one-at-a-time serialization, ``None`` = unbounded coalescing).
     """
 
     def __init__(self, tables: Dict[str, Relation],
@@ -115,31 +139,43 @@ class QueryServer:
                  policy: Optional[str] = None,
                  min_grant: Optional[int] = None,
                  full_grant_wait_s: Optional[float] = None,
+                 grant_policy=None,
+                 queue_aware: Optional[bool] = None,
+                 device_max_batch: Optional[int] = None,
                  session: Optional[Session] = None):
         if session is not None:
-            # a prebuilt session owns its governor, work_mem and policy;
-            # silently dropping overrides would let a caller believe it
-            # forced a configuration it never got
+            # a prebuilt session owns its broker, governor, work_mem and
+            # policy; silently dropping overrides would let a caller
+            # believe it forced a configuration it never got
             conflicts = {"total_mem": total_mem, "work_mem": work_mem,
                          "policy": policy, "min_grant": min_grant,
-                         "full_grant_wait_s": full_grant_wait_s}
+                         "full_grant_wait_s": full_grant_wait_s,
+                         "grant_policy": grant_policy,
+                         "queue_aware": queue_aware,
+                         "device_max_batch": device_max_batch}
             given = [k for k, v in conflicts.items() if v is not None]
             if given:
                 raise ValueError(
                     f"pass either a prebuilt session or "
                     f"{'/'.join(given)}; an explicit session already owns "
-                    f"its governor, work_mem and policy")
+                    f"its broker, governor, work_mem and policy")
         else:
             governor = (MemoryGovernor(
                 total_mem,
                 min_grant=1 * MB if min_grant is None else min_grant,
-                full_grant_wait_s=full_grant_wait_s or 0.0)
+                full_grant_wait_s=full_grant_wait_s or 0.0,
+                policy=grant_policy)
                 if total_mem is not None else None)
+            broker = ResourceBroker(
+                governor,
+                device_queue=DeviceQueue(max_group=device_max_batch),
+                queue_pricing=True if queue_aware is None else queue_aware)
             session = Session(
                 work_mem=32 * MB if work_mem is None else work_mem,
-                policy=policy or "auto", governor=governor)
+                policy=policy or "auto", broker=broker)
         self.session = session
         self.governor = session.governor
+        self.broker = session.broker
         for name, rel in tables.items():
             self.session.register(name, rel)
 
@@ -185,6 +221,7 @@ class QueryServer:
 
         base_stats = (self.governor.stats() if self.governor is not None
                       else GovernorStats())
+        base_broker = self.broker.stats()
         served: List[ServedQuery] = []
         errors: List[BaseException] = []
         lock = threading.Lock()
@@ -200,7 +237,11 @@ class QueryServer:
                         wall_s=t.elapsed, temp_mb=res.total_temp_mb,
                         grant_bytes=_min_grant_of(res),
                         paths=_paths_of(res), scalar=res.scalar,
-                        relation=res.relation if keep_relations else None)
+                        relation=res.relation if keep_relations else None,
+                        mem_wait_s=sum(m.mem_wait_s for m in res.metrics),
+                        queue_wait_s=sum(m.queue_wait_s
+                                         for m in res.metrics),
+                        batched=any(m.batched for m in res.metrics))
                     with lock:
                         served.append(rec)
             except BaseException as e:  # surfaced after join, never silent
@@ -232,4 +273,5 @@ class QueryServer:
             wall_s=run_t.elapsed,
             total_temp_mb=sum(q.temp_mb for q in served),
             governor=gov,
-            concurrency=concurrency)
+            concurrency=concurrency,
+            broker=self.broker.stats().since(base_broker))

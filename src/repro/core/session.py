@@ -43,6 +43,7 @@ from .logical import (LAggregate, LFilter, LGroupBy, LJoin, LProject, LScan,
                       LSort, LogicalNode, schema)
 from .memory_governor import MemoryGovernor
 from .path_selector import PathSelector
+from .resource_broker import ResourceBroker
 from .relation import Relation
 from .runtime_profile import RuntimeProfile
 
@@ -59,14 +60,27 @@ class Session:
     compile cache, device column cache, and runtime profile it reaches are
     all lock-guarded, and passing a :class:`~repro.core.memory_governor.
     MemoryGovernor` makes every linear operator draw its work_mem from the
-    shared budget instead of the private ``work_mem`` ceiling.
+    shared budget instead of the private ``work_mem`` ceiling.  Resource
+    acquisition is mediated by a :class:`~repro.core.resource_broker.
+    ResourceBroker` (``self.broker``): memory leases, device dispatch
+    leases, and the pressure quotes that make ``auto`` queue-aware; pass an
+    explicit ``broker`` to control queue pricing or share a device queue.
     """
 
     def __init__(self, work_mem: int = 64 * MB, policy: str = "auto",
                  selector: Optional[PathSelector] = None,
                  profile: Optional[RuntimeProfile] = None,
                  fuse: bool = True, spill_root: Optional[str] = None,
-                 governor: Optional["MemoryGovernor"] = None):
+                 governor: Optional["MemoryGovernor"] = None,
+                 broker: Optional["ResourceBroker"] = None):
+        if broker is not None and governor is not None \
+                and broker.governor is not governor:
+            raise ValueError(
+                "pass either governor or broker (or a broker built over "
+                "that governor); conflicting governors would split the "
+                "budget accounting")
+        if broker is not None and governor is None:
+            governor = broker.governor
         if selector is None:
             force = None if policy == "auto" else policy
             selector = PathSelector(work_mem, force=force,
@@ -87,7 +101,11 @@ class Session:
         self.governor = governor
         self.executor = Executor(work_mem, policy=policy, selector=selector,
                                  spill_root=spill_root, fuse=fuse,
-                                 governor=governor)
+                                 governor=governor, broker=broker)
+        # the executor resolves the broker (private one per governor, the
+        # process default otherwise); the session exposes it as the single
+        # handle for leases, quotes and queue stats
+        self.broker = self.executor.broker
         self._tables: Dict[str, Relation] = {}
 
     # -- table registry ----------------------------------------------------

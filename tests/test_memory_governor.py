@@ -89,13 +89,96 @@ def test_would_grant_is_nonbinding_peek():
     hold.release(), hold2.release()
 
 
-def test_double_release_is_idempotent():
+def test_double_release_raises_and_does_not_inflate_budget():
+    """Regression: releasing the same grant twice must raise — a silent
+    second release would credit the pool twice and let the governor
+    over-grant its budget."""
     gov = MemoryGovernor(8 * MB)
     g = gov.acquire(4 * MB)
     g.release()
-    g.release()
+    with pytest.raises(RuntimeError):
+        g.release()
+    assert gov.in_use == 0  # the failed release changed nothing
+    assert gov.stats().over_budget_events == 0
+    # the pool was credited exactly once: a full-budget request still fits
+    with gov.acquire(8 * MB) as g2:
+        assert g2.size == 8 * MB
+
+
+def test_context_manager_exit_after_manual_release_is_safe():
+    gov = MemoryGovernor(8 * MB)
+    with gov.acquire(4 * MB) as g:
+        g.release()  # explicit early release inside the with-block
     assert gov.in_use == 0
     assert gov.stats().over_budget_events == 0
+
+
+def test_admission_probe_reports_blocking_and_waiters():
+    gov = MemoryGovernor(4 * MB, min_grant=1 * MB)
+    size, would_block, waiters = gov.admission_probe(2 * MB)
+    assert (size, would_block, waiters) == (2 * MB, False, 0)
+    hold = gov.acquire(4 * MB)  # pool exhausted
+    size, would_block, waiters = gov.admission_probe(2 * MB)
+    assert size == 1 * MB and would_block and waiters == 0
+    started = threading.Event()
+
+    def blocked():
+        started.set()
+        with gov.acquire(2 * MB):
+            pass
+
+    th = threading.Thread(target=blocked)
+    th.start()
+    started.wait(5)
+    time.sleep(0.05)  # let the thread park in admission control
+    assert gov.admission_probe(2 * MB)[2] == 1  # one waiter visible
+    hold.release()
+    th.join(timeout=5)
+    assert gov.admission_probe(2 * MB) == (2 * MB, False, 0)
+
+
+def test_proportional_share_policy_weights_by_demand():
+    """PG hash_mem_multiplier analogue: a squeezed request receives a
+    demand-weighted share of the FREE pool (never below the floor, never
+    the over-budget), instead of collapsing straight to the floor."""
+    gov = MemoryGovernor(24 * MB, min_grant=2 * MB, policy="proportional")
+    hold = gov.acquire(16 * MB)
+    assert hold.size == 16 * MB  # fits: policy only shapes degraded grants
+    # avail=8MB, demand=16MB, request 16MB with multiplier 2:
+    #   share = 8 * 32 / (16 + 32) = 5.33 MB — between floor and leftover
+    g = gov.acquire(16 * MB)
+    assert 2 * MB < g.size < 8 * MB
+    assert g.degraded
+    assert gov.in_use <= 24 * MB
+    # would_grant mirrors acquire's policy sizing (one grant outstanding
+    # per probe, so the numbers match the just-issued grant's environment)
+    g.release()
+    assert gov.would_grant(16 * MB) == g.size
+    # the weight IS the estimated hash-table size: of two requests that
+    # both exceed the free pool, the hungrier one gets the bigger share
+    assert 2 * MB <= gov.would_grant(10 * MB) < gov.would_grant(20 * MB)
+    hold.release()
+
+
+def test_proportional_share_never_exceeds_available():
+    from repro.core import ProportionalShareGrantPolicy
+
+    gov = MemoryGovernor(
+        16 * MB, min_grant=1 * MB,
+        policy=ProportionalShareGrantPolicy(hash_mem_multiplier=100.0))
+    hold = gov.acquire(10 * MB)
+    # an absurd multiplier wants everything; the central clamp caps the
+    # grant at the free pool (the invariant lives in the governor, not
+    # the policy)
+    g = gov.acquire(16 * MB)
+    assert g.size <= 6 * MB
+    assert gov.in_use <= 16 * MB
+    g.release(), hold.release()
+
+
+def test_grant_policy_rejects_unknown_names():
+    with pytest.raises(ValueError):
+        MemoryGovernor(8 * MB, policy="fair-ish")
 
 
 def test_constructor_validation():

@@ -1,0 +1,363 @@
+"""ResourceBroker: typed lease semantics, the exclusive-dispatch invariant,
+micro-batch coalescing (bit-for-bit vs serial), and queue-aware pricing."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (DeviceQueue, Executor, FusedSpec, MemoryGovernor,
+                        PathSelector, PressureQuote, Relation, ResourceBroker,
+                        ResourceRequest, RuntimeProfile, run_fused)
+
+MB = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# Lease semantics
+# ---------------------------------------------------------------------------
+
+def test_memory_lease_wraps_governor_grant():
+    gov = MemoryGovernor(16 * MB, min_grant=1 * MB)
+    broker = ResourceBroker(gov)
+    with broker.memory_lease(4 * MB) as lease:
+        assert lease.size == 4 * MB
+        assert not lease.degraded
+        assert gov.in_use == 4 * MB
+    assert gov.in_use == 0
+    # hold EWMA learned from the release — the signal that prices waits
+    assert broker.stats().mem_ewma_hold_s > 0
+
+
+def test_memory_lease_double_release_raises():
+    broker = ResourceBroker(MemoryGovernor(8 * MB))
+    lease = broker.memory_lease(2 * MB)
+    lease.release()
+    with pytest.raises(RuntimeError):
+        lease.release()
+    assert broker.governor.in_use == 0
+
+
+def test_memory_lease_requires_governor():
+    with pytest.raises(RuntimeError):
+        ResourceBroker().memory_lease(1 * MB)
+
+
+def test_device_lease_double_release_raises():
+    broker = ResourceBroker()
+    lease = broker.device_lease()
+    lease.release()
+    with pytest.raises(RuntimeError):
+        lease.release()
+
+
+def test_resource_request_validation():
+    with pytest.raises(ValueError):
+        ResourceRequest("gpu-ram")
+
+
+# ---------------------------------------------------------------------------
+# Device queue: exclusivity, coalescing, escape hatch
+# ---------------------------------------------------------------------------
+
+def test_same_batch_key_coalesces_distinct_keys_do_not():
+    """Queued same-shape dispatches are admitted together as ONE group;
+    a different shape queued between rounds stays exclusive."""
+    queue = DeviceQueue()
+    hold = queue.acquire(batch_key="head")
+    active = []
+    lock = threading.Lock()
+    peak_batched = []
+    done = threading.Event()
+
+    def worker(key):
+        with queue.acquire(batch_key=key) as lease:
+            with lock:
+                active.append(lease)
+                if len(active) > 1:
+                    peak_batched.append(all(l.batched for l in active))
+            done.wait(2)  # keep group members overlapping
+            with lock:
+                active.remove(lease)
+
+    threads = [threading.Thread(target=worker, args=("A",)) for _ in range(3)]
+    threads.append(threading.Thread(target=worker, args=("B",)))
+    for th in threads:
+        th.start()
+        time.sleep(0.02)  # arrival order: A, A, A, B
+    hold.release()
+    time.sleep(0.1)  # the A-group should now be admitted together
+    with lock:
+        n_active = len(active)
+    done.set()
+    for th in threads:
+        th.join(timeout=10)
+    assert n_active == 3           # the whole A group ran concurrently
+    assert peak_batched and all(peak_batched)  # >1 active ⟹ all batched
+    stats = queue.stats()
+    assert stats["coalesced"] == 3  # the three A leases shared a group
+    assert stats["groups"] == 3     # head, A-group, B
+
+
+def test_serialize_escape_hatch_grants_without_queueing(monkeypatch):
+    monkeypatch.setenv("REPRO_DEVICE_SERIALIZE", "0")
+    queue = DeviceQueue()
+    hold = queue.acquire(batch_key="x")
+    t0 = time.perf_counter()
+    other = queue.acquire(batch_key="y")  # must NOT block behind hold
+    assert time.perf_counter() - t0 < 0.5
+    assert other.wait_s == 0.0
+    other.release(), hold.release()
+    assert queue.stats()["bypassed"] == 2
+    wait, depth = queue.expected_wait()
+    assert wait == 0.0  # unserialized dispatch has no queue to price
+
+
+def test_hammer_never_over_budget_and_exclusive_unless_batched():
+    """The broker-level invariants under adversarial concurrency: the
+    governor never over-grants, and the device never runs more than one
+    dispatch at a time unless every concurrent lease belongs to one
+    coalesced batch group."""
+    budget = 16 * MB
+    broker = ResourceBroker(MemoryGovernor(budget, min_grant=1 * MB))
+    stop = time.perf_counter() + 1.0
+    errors = []
+    active = []
+    lock = threading.Lock()
+    sizes = [3 * MB, 7 * MB, 12 * MB, 5 * MB]
+    keys = ["A", "B", None, "A", None, "B"]
+
+    def worker(seed: int):
+        i = seed
+        try:
+            while time.perf_counter() < stop:
+                if i % 2:
+                    with broker.memory_lease(sizes[i % len(sizes)]) as g:
+                        assert 0 < g.size <= sizes[i % len(sizes)]
+                        time.sleep(0.001)
+                else:
+                    with broker.device_lease(keys[i % len(keys)]) as lease:
+                        with lock:
+                            active.append(lease)
+                            if len(active) > 1:
+                                assert all(l.batched for l in active), \
+                                    "concurrent exclusive dispatches"
+                        time.sleep(0.001)
+                        with lock:
+                            active.remove(lease)
+                i += 1
+        except BaseException as e:  # pragma: no cover - diagnostic path
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=30)
+    assert not errors
+    gov_stats = broker.governor.stats()
+    assert gov_stats.over_budget_events == 0
+    assert 0 < gov_stats.peak_in_use <= budget
+    assert broker.governor.in_use == 0
+    stats = broker.stats()
+    assert stats.device_dispatches > 8
+    assert stats.device_ewma_service_s > 0
+
+
+# ---------------------------------------------------------------------------
+# Micro-batched fused dispatch: bit-for-bit parity with serial
+# ---------------------------------------------------------------------------
+
+def _join_tables(n, seed=11):
+    rng = np.random.default_rng(seed)
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    return build, probe
+
+
+def test_batched_fused_dispatch_bit_for_bit_equal_to_serial():
+    """Concurrent same-shape fused dispatches coalesce into micro-batched
+    lease groups; every result must equal the serial run exactly (int64
+    aggregates: bit-for-bit)."""
+    broker = ResourceBroker(device_queue=DeviceQueue())
+    n = 30_000
+    spec = FusedSpec(join_key="k", filter_fn=None, sort_keys=("k",),
+                     agg=("b_v", "sum"))
+    tables = [_join_tables(n, seed=100 + i) for i in range(4)]
+    serial = [run_fused(spec, b, p, broker=broker)[0] for b, p in tables]
+
+    results = {}
+    errors = []
+    start = threading.Barrier(8)
+
+    def worker(wid: int):
+        try:
+            start.wait(10)
+            out = []
+            for i, (b, p) in enumerate(tables):
+                val, m = run_fused(spec, b, p, broker=broker)
+                out.append(val)
+            results[wid] = out
+        except BaseException as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=120)
+    assert not errors
+    for wid, out in results.items():
+        assert out == serial  # float equality of int64 sums: exact
+    # with 8 workers racing 4 warm shapes, coalescing must have happened
+    assert broker.stats().device_coalesced > 0
+
+
+# ---------------------------------------------------------------------------
+# Pricing
+# ---------------------------------------------------------------------------
+
+def test_memory_quote_prices_admission_wait_after_observations():
+    gov = MemoryGovernor(8 * MB, min_grant=2 * MB)
+    broker = ResourceBroker(gov)
+    free = broker.price(ResourceRequest("memory", need_bytes=4 * MB))
+    assert free.grant_bytes == 4 * MB
+    assert free.expected_wait_s == 0.0 and not free.would_block
+    hold = broker.memory_lease(8 * MB)
+    blocked = broker.price(ResourceRequest("memory", need_bytes=4 * MB))
+    assert blocked.would_block
+    assert blocked.expected_wait_s == 0.0  # no wait/hold history yet
+    time.sleep(0.05)
+    hold.release()  # teaches the hold EWMA (~50ms)
+    hold2 = broker.memory_lease(8 * MB)
+    quote = broker.price(ResourceRequest("memory", need_bytes=4 * MB))
+    assert quote.would_block
+    assert quote.expected_wait_s > 0.01  # ≈ half the observed hold, at least
+    hold2.release()
+
+
+def test_queue_blind_broker_quotes_zero_wait_but_real_grants():
+    """The fig12 ablation: queue_pricing=False keeps PR-4 semantics —
+    pressure-aware grant sizing, no wait term."""
+    gov = MemoryGovernor(8 * MB, min_grant=2 * MB)
+    broker = ResourceBroker(gov, queue_pricing=False)
+    with broker.memory_lease(8 * MB):
+        time.sleep(0.02)
+    hold = broker.memory_lease(8 * MB)
+    quote = broker.price(ResourceRequest("memory", need_bytes=4 * MB))
+    assert quote.grant_bytes == 2 * MB  # degraded sizing still reported
+    assert quote.would_block            # blocking still visible
+    assert quote.expected_wait_s == 0.0  # the wait term is what is ablated
+    dev = broker.price(ResourceRequest("device"))
+    assert dev.expected_wait_s == 0.0
+    hold.release()
+
+
+def test_device_quote_counts_serial_rounds_not_coalescible_work():
+    queue = DeviceQueue()
+    broker = ResourceBroker(device_queue=queue)
+    # teach the service EWMA with one completed lease
+    lease = broker.device_lease("warm")
+    time.sleep(0.02)
+    lease.release()
+    service = queue.stats()["ewma_service_s"]
+    assert service > 0
+    hold = broker.device_lease("running")
+    waiters = []
+    for key in ("A", "A", "B"):
+        th = threading.Thread(
+            target=lambda k=key: broker.device_lease(k).release())
+        th.start()
+        waiters.append(th)
+        time.sleep(0.02)
+    # queued: A, A, B → rounds ahead for a NEW shape = running + A + B = 3
+    wait_new, depth = queue.expected_wait("C")
+    # for a shape that coalesces with the queued A round: running + B = 2
+    wait_a, _ = queue.expected_wait("A")
+    assert depth == 4
+    assert wait_new == pytest.approx(3 * service, rel=0.5)
+    assert wait_a < wait_new
+    hold.release()
+    for th in waiters:
+        th.join(timeout=10)
+
+
+def test_selector_folds_quote_waits_into_path_costs():
+    """A linear-friendly fragment flips to tensor when the memory quote
+    carries an admission wait, and back when the device queue is the
+    expensive side — run-time queues, not estimates, break the tie."""
+    rng = np.random.default_rng(3)
+    n = 20_000
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    spec = FusedSpec(join_key="k", filter_fn=None, sort_keys=("k",),
+                     agg=("b_v", "sum"))
+    sel = PathSelector(64 * MB, profile=RuntimeProfile())
+    base = sel.choose_fragment(spec, build, probe)
+    stall = max(1.0, 10 * (base.t_linear + base.t_tensor))
+    parked = sel.choose_fragment(
+        spec, build, probe,
+        mem_quote=PressureQuote("memory", 64 * MB, stall, 1, True))
+    assert parked.path == "tensor"
+    assert parked.mem_wait_s == stall
+    jammed = sel.choose_fragment(
+        spec, build, probe,
+        dev_quote=PressureQuote("device", 0, stall, 3, True))
+    assert jammed.path == "linear"
+    assert jammed.dev_wait_s == stall
+
+
+# ---------------------------------------------------------------------------
+# Per-operator tensor path: lease acquisition + profile hygiene
+# ---------------------------------------------------------------------------
+
+def test_per_op_tensor_path_lease_wait_excluded_from_profile():
+    """The ROADMAP-noted profile pollution: per-operator tensor
+    observations taken while the device lease was queued must not carry
+    the contention noise — lease wait lands in OpMetrics.queue_wait_s and
+    the profile records wall MINUS wait, exactly as fused queue_wait_s."""
+    from repro.core import Join, Scan, Sort
+
+    rng = np.random.default_rng(5)
+    n = 4_000
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 100, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 100, n).astype(np.int64)})
+    broker = ResourceBroker(device_queue=DeviceQueue())
+    profile = RuntimeProfile()
+    sel = PathSelector(1 * MB, force="tensor", profile=profile)
+    ex = Executor(work_mem=1 * MB, policy="tensor", selector=sel,
+                  fuse=False, broker=broker)
+    plan = lambda: Sort(Join(Scan(build), Scan(probe), "k"), ["k"])
+    ex.execute(plan())  # warm the jit caches (warmup discard consumes it)
+    ex.execute(plan())  # converge profile cells with an uncontended run
+
+    hold = broker.device_lease(batch_key="jam")  # jam the device queue
+    stall = 0.25
+    releaser = threading.Timer(stall, hold.release)
+    releaser.start()
+    res = ex.execute(plan())
+    queued = [m for m in res.metrics if m.queue_wait_s > 0]
+    assert queued, "per-operator tensor path never waited on its lease"
+    total_wait = sum(m.queue_wait_s for m in res.metrics)
+    assert total_wait >= 0.8 * stall  # the jam is visible end-to-end...
+    for m in res.metrics:
+        cell = profile.observed(m.op, "tensor", m.rows_in)
+        if cell is None or cell.count == 0:
+            continue
+        # ...but no profile cell absorbed it: observations stay at the
+        # uncontended execution cost, orders of magnitude below the stall
+        assert cell.wall_s < 0.5 * stall
+    releaser.join()
+
+
+def test_executor_conflicting_governor_and_broker_rejected():
+    gov_a = MemoryGovernor(8 * MB)
+    broker_b = ResourceBroker(MemoryGovernor(8 * MB))
+    with pytest.raises(ValueError):
+        Executor(work_mem=4 * MB, governor=gov_a, broker=broker_b)

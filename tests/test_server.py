@@ -217,25 +217,23 @@ def test_server_rejects_conflicting_construction():
                                           queries_per_worker=1)
 
 
-def test_fifo_dispatch_queue_is_fair():
-    """The device dispatch queue must be strict FIFO: a plain lock lets the
-    releasing thread barge back in, which starves queries and manufactures
-    a fake p99 tail."""
-    from repro.core.fused import _FifoLock
+def test_device_queue_dispatch_is_fair():
+    """The broker's device queue must preserve strict arrival order across
+    distinct batch keys (the `_FifoLock` contract it replaced): a plain
+    lock lets the releasing thread barge back in, which starves queries
+    and manufactures a fake p99 tail.  Distinct keys never coalesce, so
+    admission is one serial round per waiter, in arrival order."""
+    from repro.core import DeviceQueue
 
-    lock = _FifoLock()
+    queue = DeviceQueue()
     order = []
-    gate = threading.Event()
 
     def worker(k: int):
-        lock.acquire()
-        try:
-            gate.wait(5)
+        with queue.acquire(batch_key=("shape", k)) as lease:
+            assert not lease.batched
             order.append(k)
-        finally:
-            lock.release()
 
-    lock.acquire()  # park everyone behind the held lock, in arrival order
+    hold = queue.acquire(batch_key=("shape", "head"))
     threads = []
     import time
     for k in range(6):
@@ -243,8 +241,9 @@ def test_fifo_dispatch_queue_is_fair():
         th.start()
         time.sleep(0.02)  # deterministic arrival order
         threads.append(th)
-    gate.set()
-    lock.release()
+    hold.release()
     for th in threads:
         th.join(timeout=10)
     assert order == list(range(6))
+    stats = queue.stats()
+    assert stats.get("coalesced") == 0  # distinct shapes: no micro-batching
