@@ -861,6 +861,270 @@ def fig12_queue_aware(reps: int = 6) -> Dict:
     return out
 
 
+# -- Fig 13: open-loop SLO serving — shedding, reservations, chaos ------------
+
+def fig13_slo_serving(reps: int = 6, seed: int = 0) -> Dict:
+    """Open-loop SLO-aware serving (PR 6): the robustness triptych.
+
+    **A. Bursty mixed-tenant storm.**  A premium tenant (non-sheddable,
+    priority 2, generous deadline) and a best-effort tenant (sheddable,
+    tight deadline) drive one governed server through
+    :meth:`QueryServer.serve_open`: premium is a steady Poisson stream,
+    best-effort goes calm → storm → cool-down with a storm rate far above
+    the pool's drain rate.  A closed loop cannot produce this experiment at
+    all — its offered load throttles itself — which is why fig11/fig12
+    could not measure admission control.  Gates: the premium tenant meets
+    its P99 SLO through the storm; best-effort is *shed* under the burst
+    (admission rejects what it cannot serve in time) but NOT starved (it
+    still gets real service); every arrival is accounted exactly once
+    (served + shed + failed = submitted).
+
+    **B. Price-and-hold vs quote-only (decide-then-lose).**  N churn
+    threads race price→decide→acquire cycles over a pool that holds ~2
+    full grants.  With reservations (the default), the quoted bytes are
+    committed behind a short-TTL hold at decision time, so conversion is
+    exact and waitless: zero decide-then-lose incidents, zero leaked holds
+    (every hold converts, expires, or cancels).  With ``reservations=
+    False`` (the quote-only ablation — the PR-5 behavior), the same race
+    loses repeatedly: a quote that promised an unblocked full grant is
+    stale by acquisition time, and the decision runs on a degraded grant
+    it never priced.  Gates: reservations → 0 incidents AND hold
+    conservation; quote-only → incidents > 0.
+
+    **C. Chaos.**  The same serving paths run with every fault injector
+    armed (spill I/O errors, device dispatch failures and slowdowns,
+    memory-grant timeouts): a linear spilling stream plus an auto
+    open-loop stream share one seeded injector.  Retry-with-backoff and
+    path fallback absorb what they can; what they cannot becomes a
+    *failed sample*, never a poisoned result.  Gates: faults actually
+    fired (spill I/O and device sites both — "survived chaos" must not
+    mean "chaos never happened"), every served result is bit-for-bit
+    equal to the serial reference, zero over-budget grants, zero leaked
+    reservations, and exact served/shed/failed accounting.
+
+    ``seed`` threads through table generation, arrival schedules, and the
+    fault injector — the committed baseline records it, and re-running
+    with the same seed replays the same storm and the same fault schedule.
+    """
+    import threading as _threading
+    import time as _time
+
+    from repro.core import (ArrivalProcess, FaultInjector, MemoryGovernor,
+                            QueryServer, ResourceBroker, ResourceRequest,
+                            Session, TenantClass)
+
+    fast = reps < 6
+    out: Dict = {}
+
+    # -- A. bursty mixed-tenant storm ----------------------------------------
+    n = 120_000
+    work_mem = 16 * MB
+    build, probe = join_tables(n, seed=seed)
+    server = QueryServer({"b": build, "p": probe},
+                         total_mem=64 * MB, work_mem=work_mem,
+                         policy="auto", full_grant_wait_s=0.02)
+    q_small = (server.session.table("p").join("b", on="k")
+               .aggregate("b_v", "sum"))
+    q_sort = (server.session.table("p").join("b", on="k")
+              .sort("k", "w").aggregate("b_v", "sum"))
+    premium = TenantClass("premium", deadline_s=3.0, priority=2,
+                          sheddable=False)
+    calm, storm = (6.0, 120.0) if fast else (6.0, 150.0)
+    besteffort = TenantClass("besteffort", deadline_s=0.3, priority=0)
+    duration = 3.5 if fast else 5.0
+    rep = server.serve_open(
+        workloads={"premium": [q_small, q_sort],
+                   "besteffort": [q_sort, q_small]},
+        arrivals={"premium": ArrivalProcess(rate_qps=8, seed=seed + 1),
+                  "besteffort": ArrivalProcess(
+                      phases=[(1.0, calm), (1.5, storm), (2.5, calm)],
+                      seed=seed + 2)},
+        duration_s=duration, tenants=[premium, besteffort],
+        workers=4, warmup=2)
+    prem_lat = rep.tenant_latency("premium")
+    prem = rep.tenant_counts("premium")
+    be = rep.tenant_counts("besteffort")
+    counts = rep.counts
+    emit("fig13/storm", (prem_lat.p50 if prem_lat else 0.0) * 1e6,
+         {"premium_p99_s": round(prem_lat.p99, 4) if prem_lat else None,
+          "premium_slo": round(rep.slo_attainment("premium"), 3),
+          "premium_served": prem["served"],
+          "be_served": be["served"], "be_shed": be["shed"],
+          "be_failed": be["failed"],
+          "submitted": counts["submitted"],
+          "preemptions": rep.broker.preemptions,
+          "decide_then_lose": rep.broker.decide_then_lose,
+          "over_budget": rep.governor.over_budget_events})
+    out["storm"] = {
+        "premium_p50": prem_lat.p50 if prem_lat else 0.0,
+        "premium_p99": prem_lat.p99 if prem_lat else 0.0,
+        "premium_slo": rep.slo_attainment("premium"),
+        "premium": prem, "besteffort": be, "counts": counts,
+        "preemptions": rep.broker.preemptions,
+        "decide_then_lose": rep.broker.decide_then_lose}
+    if counts["submitted"] != (counts["served"] + counts["shed"]
+                               + counts["failed"]):
+        raise RuntimeError(f"arrival accounting leaked: {counts}")
+    if prem["served"] == 0 or prem["shed"] or prem["failed"]:
+        raise RuntimeError(
+            f"premium (non-sheddable) must serve everything: {prem}")
+    if prem_lat.p99 > premium.deadline_s \
+            or rep.slo_attainment("premium") < 0.95:
+        raise RuntimeError(
+            f"premium missed its SLO through the storm: p99 "
+            f"{prem_lat.p99:.3f}s vs deadline {premium.deadline_s}s, "
+            f"attainment {rep.slo_attainment('premium'):.3f}")
+    if be["shed"] == 0:
+        raise RuntimeError(
+            f"the storm never triggered load shedding ({be}); the burst "
+            f"is not overloading the pool")
+    if be["served"] == 0:
+        raise RuntimeError(f"best-effort starved: {be}")
+    if rep.governor.over_budget_events:
+        raise RuntimeError("governor over-granted during the storm")
+
+    # -- B. price-and-hold vs quote-only (decide-then-lose) -------------------
+    need = 8 * MB
+    iters = 30 if fast else 60
+    churners = 6
+    ablate: Dict = {}
+    for mode, reserve_on in (("reserved", True), ("quote_only", False)):
+        gov = MemoryGovernor(2 * need + need // 2, min_grant=1 * MB,
+                             full_grant_wait_s=0.005)
+        broker = ResourceBroker(gov, reservations=reserve_on)
+        stop = _threading.Event()
+
+        def churn():
+            for _ in range(iters):
+                if stop.is_set():
+                    return
+                rsv = broker.reserve(ResourceRequest("memory",
+                                                     need_bytes=need))
+                try:
+                    # the decide window: selector pricing + plan bookkeeping
+                    _time.sleep(0.0005)
+                    with broker.memory_lease(need, timeout=5.0,
+                                             reservation=rsv):
+                        _time.sleep(0.001)
+                finally:
+                    rsv.cancel()
+
+        threads = [_threading.Thread(target=churn, daemon=True)
+                   for _ in range(churners)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=120)
+        stop.set()
+        stats = broker.stats()
+        gstats = gov.stats()
+        leaked = gstats.holds - (gstats.holds_converted
+                                 + gstats.holds_expired
+                                 + gstats.holds_cancelled)
+        ablate[mode] = {"decide_then_lose": stats.decide_then_lose,
+                        "reservations": stats.reservations,
+                        "holds": gstats.holds, "leaked_holds": leaked,
+                        "held_bytes": gov.held_bytes,
+                        "over_budget": gstats.over_budget_events}
+        emit(f"fig13/ablation_{mode}", 0.0, ablate[mode])
+        if gstats.over_budget_events:
+            raise RuntimeError(f"{mode}: holds broke the budget invariant")
+        if leaked or gov.held_bytes:
+            raise RuntimeError(
+                f"{mode}: leaked reservations: {leaked} holds unaccounted, "
+                f"{gov.held_bytes} B still held")
+    if ablate["reserved"]["decide_then_lose"] != 0:
+        raise RuntimeError(
+            f"price-and-hold still lost decisions: "
+            f"{ablate['reserved']['decide_then_lose']}")
+    if ablate["quote_only"]["decide_then_lose"] == 0:
+        raise RuntimeError(
+            "quote-only churn produced zero decide-then-lose incidents; "
+            "the race the reservation closes did not manifest")
+    out["ablation"] = ablate
+
+    # -- C. chaos: all injectors armed, results bit-for-bit -------------------
+    inj = FaultInjector(seed=seed, spill_io_p=0.02, device_fail_p=0.03,
+                        device_slow_p=0.05, device_slow_s=0.005,
+                        grant_timeout_p=0.01)
+    ref = Session(work_mem=work_mem)
+    ref.register("b", build).register("p", probe)
+    ref_scalars = {
+        0: ref.table("p").join("b", on="k").aggregate("b_v", "sum").scalar(),
+        1: (ref.table("p").join("b", on="k").sort("k", "w")
+            .aggregate("b_v", "sum").scalar())}
+
+    # linear spilling stream: exercises the spill-I/O and grant fault sites
+    # (the budget holds well under one hash table, so every worker's grant
+    # degrades toward the floor and genuinely spills — fig11's regime)
+    lin = QueryServer({"b": build, "p": probe}, total_mem=10 * MB,
+                      work_mem=work_mem, policy="linear", min_grant=1 * MB,
+                      faults=inj)
+    lq = (lin.session.table("p").join("b", on="k").sort("k", "w")
+          .aggregate("b_v", "sum"))
+    lin_rep = lin.serve([lq], concurrency=4,
+                        queries_per_worker=3 if fast else 5, warmup=1)
+    # auto open-loop stream: exercises the device fault sites + fallback
+    chaos = QueryServer({"b": build, "p": probe}, total_mem=64 * MB,
+                        work_mem=work_mem, policy="auto", faults=inj)
+    cq0 = (chaos.session.table("p").join("b", on="k")
+           .aggregate("b_v", "sum"))
+    cq1 = (chaos.session.table("p").join("b", on="k").sort("k", "w")
+           .aggregate("b_v", "sum"))
+    chaos_rep = chaos.serve_open(
+        workloads={"t": [cq0, cq1]},
+        arrivals={"t": ArrivalProcess(rate_qps=30 if fast else 40,
+                                      seed=seed + 3)},
+        duration_s=2.0 if fast else 3.0,
+        tenants=[TenantClass("t", deadline_s=5.0)], workers=4, warmup=1)
+    fired = inj.counts()
+    for name, srv, rep_ in (("linear", lin, lin_rep),
+                            ("auto", chaos, chaos_rep)):
+        c = rep_.counts
+        if c["submitted"] != c["served"] + c["shed"] + c["failed"]:
+            raise RuntimeError(f"chaos/{name} accounting leaked: {c}")
+        if rep_.governor.over_budget_events:
+            raise RuntimeError(f"chaos/{name}: over-budget under faults")
+        g = srv.governor.stats()
+        if g.holds != (g.holds_converted + g.holds_expired
+                       + g.holds_cancelled) or srv.governor.held_bytes:
+            raise RuntimeError(f"chaos/{name}: leaked reservations: {g}")
+    for r in lin_rep.queries:
+        if r.scalar != ref_scalars[1]:
+            raise RuntimeError(
+                f"chaos/linear diverged: {r.scalar} != {ref_scalars[1]}")
+    for r in chaos_rep.queries:
+        if r.scalar != ref_scalars[r.workload_idx]:
+            raise RuntimeError(
+                f"chaos/auto diverged on item {r.workload_idx}: "
+                f"{r.scalar} != {ref_scalars[r.workload_idx]}")
+    if fired["spill_io"] == 0:
+        raise RuntimeError(
+            f"chaos ran but the spill I/O injector never fired: {fired}")
+    if fired["device_fail"] == 0 and fired["device_slow"] == 0:
+        raise RuntimeError(
+            f"chaos ran but no device fault ever fired: {fired}")
+    out["chaos"] = {
+        "faults": fired,
+        "linear": {"counts": lin_rep.counts,
+                   "fault_counts": lin_rep.faults},
+        "auto": {"counts": chaos_rep.counts,
+                 "p99_s": chaos_rep.latency.p99,
+                 "fault_counts": chaos_rep.faults},
+        "seed": seed}
+    emit("fig13/chaos", 0.0,
+         {"faults_injected": sum(fired.values()),
+          "spill_io": fired["spill_io"],
+          "device_fail": fired["device_fail"],
+          "grant_timeout": fired["grant_timeout"],
+          "linear_served": lin_rep.counts["served"],
+          "linear_failed": lin_rep.counts["failed"],
+          "auto_served": chaos_rep.counts["served"],
+          "auto_failed": chaos_rep.counts["failed"],
+          "bit_for_bit": True, "seed": seed})
+    return out
+
+
 ALL = {
     "fig1": fig1_scalability,
     "fig3": fig3_hashtable_growth,
@@ -873,6 +1137,7 @@ ALL = {
     "fig10": fig10_star_join,
     "fig11": fig11_concurrent_tail,
     "fig12": fig12_queue_aware,
+    "fig13": fig13_slo_serving,
     "headline": headline,
     "selector": selector_analysis,
     "regime": regime_model,

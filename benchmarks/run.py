@@ -19,6 +19,10 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmarks")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed threaded into workload/arrival/fault "
+                         "generation (benchmarks that accept one); recorded "
+                         "in the summary so a run can be replayed exactly")
     # default is NOT results/bench_summary.json: that file is the committed
     # p50 baseline benchmarks/compare.py gates against — rewrite it only on
     # purpose, with an explicit --save
@@ -28,19 +32,23 @@ def main() -> None:
     from .figures import ALL
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")
-    summary = {}
+    # seed first so every summary records how to replay it (compare.py only
+    # reads numeric leaves whose key mentions p50, so this never gates)
+    summary = {"run_config": {"seed": args.seed, "fast": bool(args.fast)}}
     for name in names:
         fn = ALL[name]
         t0 = time.time()
         kw = {}
         # inspect.signature sees through functools.wraps/partial wrappers,
         # unlike fn.__code__.co_varnames which only works on plain functions
-        if args.fast:
-            try:
-                if "reps" in inspect.signature(fn).parameters:
-                    kw["reps"] = 3
-            except (TypeError, ValueError):
-                pass
+        try:
+            params = inspect.signature(fn).parameters
+        except (TypeError, ValueError):
+            params = {}
+        if args.fast and "reps" in params:
+            kw["reps"] = 3
+        if "seed" in params:
+            kw["seed"] = args.seed
         try:
             summary[name] = fn(**kw)
         except Exception as e:  # keep the harness going; record the failure

@@ -46,24 +46,31 @@ from .device_relation import DeviceColumn, DeviceRelation
 from .executor import (PHYSICAL_NODES, Aggregate, Executor, Filter, GroupBy,
                        Join, Project, QueryResult, Scan, Sort)
 from .expr import Expr, col, lit
+from .faults import (DeadlineExceeded, DeviceDispatchError, FaultInjector,
+                     GrantTimeout, PreemptedError, QueryRejected, RetryPolicy,
+                     SimulatedCrash, SpillIOError, TransientError)
 from .fused import (FusedSpec, match_fragment, pipeline_cache_clear,
                     pipeline_cache_info, run_fused)
 from .linear_engine import HashTable, hash_join_linear, sort_linear, table_bytes_estimate
 from .logical import (LAggregate, LFilter, LGroupBy, LJoin, LProject, LScan,
                       LSort, from_physical, schema)
-from .memory_governor import (FloorGrantPolicy, GovernorStats, GrantPolicy,
-                              MemoryGovernor, MemoryGrant,
+from .memory_governor import (BrokerInvariantViolation, FloorGrantPolicy,
+                              GovernorStats, GrantPolicy, MemoryGovernor,
+                              MemoryGrant, MemoryHold,
                               ProportionalShareGrantPolicy)
 from .metrics import BLOCK_BYTES, LatencyStats, OpMetrics, SpillAccount, latency_stats
 from .path_selector import Decision, PathSelector
 from .planner import Program, plan_program, prune_columns, push_filters
 from .relation import Relation, column_token
 from .resource_broker import (BrokerStats, DeviceLease, DeviceQueue,
-                              MemoryLease, PressureQuote, ResourceBroker,
-                              ResourceRequest, default_broker)
+                              MemoryLease, PreemptToken, PressureQuote,
+                              Reservation, ResourceBroker, ResourceRequest,
+                              default_broker)
 from .runtime_profile import DEFAULT_PROFILE, RuntimeProfile, size_bucket
-from .server import QueryServer, ServeReport, ServedQuery
+from .server import (FailedQuery, QueryServer, ServeReport, ServedQuery,
+                     ShedQuery)
 from .session import Query, Session
+from .slo import ArrivalProcess, TenantClass
 from .spill import SpillManager
 from .table_cache import (KeyStats, get_device_columns, key_stats,
                           pending_upload_bytes, table_cache_clear,
@@ -80,20 +87,27 @@ from .tensor_engine import (
 )
 
 __all__ = [
-    "Aggregate", "BLOCK_BYTES", "BrokerStats", "CostConstants", "CostModel",
-    "DEFAULT_PROFILE", "Decision", "DeviceColumn", "DeviceLease",
+    "Aggregate", "ArrivalProcess", "BLOCK_BYTES", "BrokerInvariantViolation",
+    "BrokerStats", "CostConstants", "CostModel",
+    "DEFAULT_PROFILE", "DeadlineExceeded", "Decision", "DeviceColumn",
+    "DeviceDispatchError", "DeviceLease",
     "DeviceQueue", "DeviceRelation",
-    "Executor", "Expr", "Filter", "FloorGrantPolicy", "FragmentEstimate",
-    "FusedSpec", "GovernorStats", "GrantPolicy", "GroupBy",
+    "Executor", "Expr", "FailedQuery", "FaultInjector", "Filter",
+    "FloorGrantPolicy", "FragmentEstimate",
+    "FusedSpec", "GovernorStats", "GrantPolicy", "GrantTimeout", "GroupBy",
     "HashTable", "Join", "KeyStats", "LAggregate", "LFilter", "LGroupBy",
     "LJoin", "LProject", "LScan", "LSort", "LatencyStats",
-    "MemoryGovernor", "MemoryGrant", "MemoryLease", "OpMetrics",
-    "PHYSICAL_NODES", "PathSelector", "PressureQuote", "Program", "Project",
-    "ProportionalShareGrantPolicy", "Query",
-    "QueryResult", "QueryServer", "Relation", "ResourceBroker",
-    "ResourceRequest",
+    "MemoryGovernor", "MemoryGrant", "MemoryHold", "MemoryLease",
+    "OpMetrics",
+    "PHYSICAL_NODES", "PathSelector", "PreemptToken", "PreemptedError",
+    "PressureQuote", "Program", "Project",
+    "ProportionalShareGrantPolicy", "Query", "QueryRejected",
+    "QueryResult", "QueryServer", "Relation", "Reservation",
+    "ResourceBroker",
+    "ResourceRequest", "RetryPolicy",
     "RuntimeProfile", "Scan", "ServeReport", "ServedQuery", "Session",
-    "Sort", "SpillAccount",
+    "ShedQuery", "SimulatedCrash",
+    "Sort", "SpillAccount", "SpillIOError", "TenantClass", "TransientError",
     "SpillManager", "aligned_join_indices", "capacity_bucket", "col",
     "column_token", "default_broker", "from_physical", "get_device_columns",
     "hash_join_linear", "join_capacity", "key_stats",

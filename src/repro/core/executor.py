@@ -25,18 +25,21 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
 from .device_relation import DeviceRelation
+from .faults import (DeviceDispatchError, FaultInjector, PreemptedError,
+                     RetryPolicy, TransientError)
 from .linear_engine import hash_join_linear, sort_linear
 from .memory_governor import MemoryGovernor
 from .metrics import OpMetrics, SpillAccount, Timer
 from .path_selector import Decision, PathSelector
 from .relation import Relation
-from .resource_broker import (PressureQuote, ResourceBroker, ResourceRequest,
-                              default_broker)
+from .resource_broker import (PreemptToken, PressureQuote, ResourceBroker,
+                              ResourceRequest, default_broker)
 from .spill import SpillManager
 from .tensor_engine import (tensor_join_device, tensor_sort_device)
 
@@ -163,7 +166,9 @@ class Executor:
                  spill_root: Optional[str] = None,
                  fuse: bool = True,
                  governor: Optional[MemoryGovernor] = None,
-                 broker: Optional[ResourceBroker] = None):
+                 broker: Optional[ResourceBroker] = None,
+                 faults: Optional[FaultInjector] = None,
+                 retry: Optional[RetryPolicy] = None):
         if policy not in ("auto", "linear", "tensor"):
             raise ValueError(policy)
         force = None if policy == "auto" else policy
@@ -201,6 +206,16 @@ class Executor:
         # the GRANT size — not the static work_mem — bounds their memory.
         # None keeps the single-query semantics: a private work_mem.
         self.governor = governor if governor is not None else broker.governor
+        # Fault handling: the injector (also reachable through the broker,
+        # which owns the device/grant sites) feeds the spill-write site via
+        # the per-query SpillManager; the retry policy drives the
+        # TransientError backoff loop and the device path-fallback
+        # threshold.  Thread-local state because one executor serves many
+        # worker threads: a device failing for THIS query must not pin a
+        # neighbor's path.
+        self.faults = faults if faults is not None else broker.faults
+        self.retry = retry if retry is not None else RetryPolicy()
+        self._tls = _threading.local()
 
     # -- memory grants -------------------------------------------------------
     def _effective_work_mem(self, need_bytes: Optional[int] = None) -> int:
@@ -224,20 +239,29 @@ class Executor:
         return self.governor.would_grant(req)
 
     def _quotes(self, need_bytes: int):
-        """Broker pressure quotes for one deferred decision: ``(mem_quote,
-        dev_quote)``.  The memory quote is probed with EXACTLY the request
-        :meth:`_granted` would make (same ``min(work_mem, need)`` sizing),
-        so grant pricing and admission-wait pricing describe the queue the
-        operator would actually stand in; the device quote prices the
-        dispatch queue the tensor path would join.  ``(None, None)`` when
-        ungoverned AND the device queue is idle-priced away (no broker).
-        A forced-policy selector never reads quotes — skip the two
-        lock-acquiring price calls on that hot path."""
+        """Broker pricing for one deferred decision: ``(mem_quote,
+        dev_quote, reservation)``.  The memory quote is probed with EXACTLY
+        the request :meth:`_granted` would make (same ``min(work_mem,
+        need)`` sizing), so grant pricing and admission-wait pricing
+        describe the queue the operator would actually stand in; the device
+        quote prices the dispatch queue the tensor path would join.
+
+        Under a governed broker the memory quote arrives as a
+        price-and-hold :class:`~repro.core.resource_broker.Reservation`:
+        the quoted bytes are committed until the decision converts the hold
+        (linear path — pass the reservation to :meth:`_granted`) or cancels
+        it (tensor path / any exception; the caller's ``finally`` must
+        cancel, and the TTL backstops leaks).  A forced-policy selector
+        never reads quotes — skip the lock-acquiring pricing on that hot
+        path."""
         if self.selector.force is not None:
-            return None, None
+            return None, None, None
+        rsv = None
         if self.broker.governor is not None:
             req = min(self.work_mem, max(1, int(need_bytes)))
-            mem = self.broker.price(ResourceRequest("memory", need_bytes=req))
+            rsv = self.broker.reserve(ResourceRequest("memory",
+                                                      need_bytes=req))
+            mem = rsv.quote
         else:
             # ungoverned: a synthetic full-grant quote at the EXECUTOR's
             # work_mem, preserving the pre-broker contract that decisions
@@ -245,25 +269,72 @@ class Executor:
             # selector was constructed with a different one
             mem = PressureQuote("memory", self.work_mem, 0.0, 0, False)
         dev = self.broker.price(ResourceRequest("device"))
-        return mem, dev
+        return mem, dev, rsv
 
     @contextlib.contextmanager
-    def _granted(self, need_bytes: int):
+    def _granted(self, need_bytes: int, reservation=None):
         """Grant scope for one linear operator: yields ``(work_mem, lease)``
         where ``work_mem`` is what the operator must live within and
         ``lease`` is None for ungoverned executors.  Requests the smaller
         of the configured work_mem and the operator's estimated
         linearized-intermediate footprint, so small operators under a
-        shared budget don't hoard memory they cannot use."""
+        shared budget don't hoard memory they cannot use.  ``reservation``
+        redeems a :meth:`_quotes` hold: the decision's quoted bytes convert
+        into the grant with zero admission wait (decide-then-lose closed)."""
         if self.broker.governor is None:
             yield self.work_mem, None
             return
         lease = self.broker.memory_lease(
-            min(self.work_mem, max(1, int(need_bytes))))
+            min(self.work_mem, max(1, int(need_bytes))),
+            reservation=reservation)
         try:
             yield lease.size, lease
         finally:
             lease.release()
+
+    # -- preemption ----------------------------------------------------------
+    def _preempt_token(self, lease) -> Optional[PreemptToken]:
+        """Register a floor-degraded linear operator as preemptible.  A full
+        grant runs as fast as it ever will — only the degraded case (the
+        spill wall) is worth abandoning for a tensor requeue."""
+        if lease is None or not lease.degraded:
+            return None
+        token = PreemptToken()
+        self.broker.register_preemptible(token)
+        return token
+
+    def _drop_token(self, token: Optional[PreemptToken]) -> None:
+        if token is not None:
+            self.broker.unregister_preemptible(token)
+
+    # -- transient-fault handling --------------------------------------------
+    def _forced_linear(self) -> bool:
+        return getattr(self._tls, "force_path", None) == "linear"
+
+    def _decide(self, decision: Decision) -> Decision:
+        """Apply this thread's device path-fallback to a selector decision:
+        after repeated device-dispatch failures the rest of the query runs
+        linear whatever the costs say — the selector prices a healthy
+        device, and the fault counter is the evidence it is wrong."""
+        if decision.path == "tensor" and self._forced_linear():
+            return dataclasses.replace(
+                decision, path="linear",
+                reason="device-fallback: " + decision.reason)
+        return decision
+
+    def _note_transient(self, exc: TransientError) -> None:
+        """Per-thread failure accounting: repeated device-dispatch failures
+        pin the REST of this thread's current query onto the linear path
+        (path fallback) — a sick device must degrade service, not abort it."""
+        if isinstance(exc, DeviceDispatchError):
+            fails = getattr(self._tls, "device_failures", 0) + 1
+            self._tls.device_failures = fails
+            if fails >= self.retry.device_fallback_after:
+                self._tls.force_path = "linear"
+
+    def _reset_fault_state(self) -> None:
+        self._tls.force_path = None
+        self._tls.device_failures = 0
 
     @contextlib.contextmanager
     def _device_leased(self, sig: object = None):
@@ -325,21 +396,47 @@ class Executor:
         if not isinstance(plan, PHYSICAL_NODES):
             # logical IR (or a fluent Query): route through the rewrite
             # planner, which chains physical fragments back through this
-            # executor — same selector, same profile, merged metrics
+            # executor — same selector, same profile, merged metrics.
+            # This is the QUERY boundary: per-thread fault state (device
+            # failure count, forced path) resets here so one query's sick
+            # device never pins the next query linear.
             from .planner import plan_program
 
             node = plan.logical() if hasattr(plan, "logical") else plan
-            return plan_program(node).run(self)
+            self._reset_fault_state()
+            try:
+                return plan_program(node).run(self)
+            finally:
+                self._reset_fault_state()
+        # Physical fragment: retry TransientErrors with exponential backoff
+        # + jitter.  Fragments are pure (inputs are immutable relations; all
+        # scratch state — spill manager, leases, holds — is per-attempt and
+        # released on the way out), so re-running one is safe.  Planner
+        # stages re-enter here per fragment, which scopes the retry to the
+        # failed fragment instead of the whole multi-stage program.
+        attempt = 0
+        while True:
+            attempt += 1
+            try:
+                return self._execute_physical(plan)
+            except TransientError as exc:
+                self._note_transient(exc)
+                if attempt >= self.retry.max_attempts:
+                    raise
+                time.sleep(self.retry.backoff(attempt))
+
+    def _execute_physical(self, plan) -> QueryResult:
         metrics: List[OpMetrics] = []
         decisions: List[Decision] = []
 
         # fused device-resident fast path for recognized fragments
-        if self.fuse and self.selector.force != "linear":
+        if (self.fuse and self.selector.force != "linear"
+                and not self._forced_linear()):
             fused = self._try_fused(plan, metrics, decisions)
             if fused is not None:
                 return fused
 
-        with SpillManager(self.spill_root) as mgr:
+        with SpillManager(self.spill_root, faults=self.faults) as mgr:
             out = self._exec(plan, metrics, decisions, mgr)
             out = self._materialize_root(out, metrics)
         result = (QueryResult(out, None, metrics, decisions)
@@ -417,22 +514,32 @@ class Executor:
         # table; quoting with it makes the pressure signal (grant size AND
         # expected admission wait) the same answer the join's grant
         # acquisition would get
-        mem_q, dev_q = self._quotes(
+        mem_q, dev_q, rsv = self._quotes(
             self.selector.model.hash_need_bytes(len(build)))
-        decision = self.selector.choose_fragment(
-            spec, build, probe, mem_quote=mem_q, dev_quote=dev_q)
-        if decision.path != "tensor":
-            return None
-        decisions.append(decision)
         try:
-            result, m = run_fused(spec, build, probe,
-                                  decision_reason=decision.reason,
-                                  broker=self.broker)
-        except Exception:
-            # e.g. a predicate that cannot trace (np.nonzero & friends):
-            # fall back to the generic walk, which evaluates it on host
-            decisions.pop()
-            return None
+            decision = self.selector.choose_fragment(
+                spec, build, probe, mem_quote=mem_q, dev_quote=dev_q)
+            if decision.path != "tensor":
+                return None  # generic walk re-quotes (and re-reserves) itself
+            decisions.append(decision)
+            try:
+                result, m = run_fused(spec, build, probe,
+                                      decision_reason=decision.reason,
+                                      broker=self.broker)
+            except TransientError:
+                # an injected/real infrastructure fault is NOT a fallback
+                # case: it must reach the retry loop (and the device-failure
+                # counter), not silently reroute onto the generic walk
+                decisions.pop()
+                raise
+            except Exception:
+                # e.g. a predicate that cannot trace (np.nonzero & friends):
+                # fall back to the generic walk, which evaluates it on host
+                decisions.pop()
+                return None
+        finally:
+            if rsv is not None:
+                rsv.cancel()  # fused runs on device; the memory hold lapses
         m.decision_reason = decision.reason
         metrics.append(m)
         # Feedback hygiene: a run that compiled a new program is not a
@@ -558,12 +665,10 @@ class Executor:
         if isinstance(node, Join):
             build = self._exec(node.build, metrics, decisions, mgr)
             probe = self._exec(node.probe, metrics, decisions, mgr)
-            mem_q, dev_q = self._quotes(
+            mem_q, dev_q, rsv = self._quotes(
                 self.selector.model.hash_need_bytes(len(build)))
-            decision = self.selector.choose_join(
-                build, probe, node.key, mem_quote=mem_q, dev_quote=dev_q)
-            decisions.append(decision)
-            if decision.path == "tensor":
+
+            def join_tensor():
                 dev_b, up_b = self._to_device(build)
                 dev_p, up_p = self._to_device(probe)
                 sig = ("join", dev_b.num_physical_rows,
@@ -572,24 +677,47 @@ class Executor:
                     out, m = tensor_join_device(dev_b, dev_p, node.key)
                 self._stamp_lease(m, lease)
                 m.h2d_bytes += up_b + up_p
-            else:
-                build, probe, syncs = self._lower_for_linear(build, probe)
-                with self._granted(self.selector.model.hash_need_bytes(
-                        len(build))) as (wm, grant):
-                    out, m = hash_join_linear(build, probe, node.key, wm, mgr)
-                m.host_syncs += syncs
-                self._stamp_grant(m, grant)
+                return out, m
+
+            try:
+                decision = self._decide(self.selector.choose_join(
+                    build, probe, node.key, mem_quote=mem_q, dev_quote=dev_q))
+                decisions.append(decision)
+                if decision.path == "tensor":
+                    out, m = join_tensor()
+                else:
+                    hb, hp, syncs = self._lower_for_linear(build, probe)
+                    try:
+                        with self._granted(
+                                self.selector.model.hash_need_bytes(len(hb)),
+                                reservation=rsv) as (wm, grant):
+                            token = self._preempt_token(grant)
+                            try:
+                                out, m = hash_join_linear(
+                                    hb, hp, node.key, wm, mgr, cancel=token)
+                            finally:
+                                self._drop_token(token)
+                        m.host_syncs += syncs
+                        self._stamp_grant(m, grant)
+                    except PreemptedError:
+                        # the broker cancelled this floor-degraded spill:
+                        # requeue on the tensor path (the grant is already
+                        # released by the _granted exit)
+                        out, m = join_tensor()
+                        m.preempted = True
+            finally:
+                if rsv is not None:
+                    rsv.cancel()  # idempotent; no-op after conversion
             m.decision_reason = decision.reason
             metrics.append(m)
             return out
         if isinstance(node, Sort):
             child = self._exec(node.child, metrics, decisions, mgr)
-            mem_q, dev_q = self._quotes(self.selector.model.sort_need_bytes(
-                len(child), child.row_bytes()))
-            decision = self.selector.choose_sort(
-                child, node.keys, mem_quote=mem_q, dev_quote=dev_q)
-            decisions.append(decision)
-            if decision.path == "tensor":
+            mem_q, dev_q, rsv = self._quotes(
+                self.selector.model.sort_need_bytes(
+                    len(child), child.row_bytes()))
+
+            def sort_tensor():
                 dev_c, up_c = self._to_device(child)
                 sig = ("sort", dev_c.num_physical_rows, tuple(node.keys),
                        dev_c.valid is None)
@@ -597,13 +725,35 @@ class Executor:
                     out, m = tensor_sort_device(dev_c, node.keys)
                 self._stamp_lease(m, lease)
                 m.h2d_bytes += up_c
-            else:
-                child, syncs = self._lower_for_linear(child)
-                with self._granted(self.selector.model.sort_need_bytes(
-                        len(child), child.row_bytes())) as (wm, grant):
-                    out, m = sort_linear(child, node.keys, wm, mgr)
-                m.host_syncs += syncs
-                self._stamp_grant(m, grant)
+                return out, m
+
+            try:
+                decision = self._decide(self.selector.choose_sort(
+                    child, node.keys, mem_quote=mem_q, dev_quote=dev_q))
+                decisions.append(decision)
+                if decision.path == "tensor":
+                    out, m = sort_tensor()
+                else:
+                    hc, syncs = self._lower_for_linear(child)
+                    try:
+                        with self._granted(
+                                self.selector.model.sort_need_bytes(
+                                    len(hc), hc.row_bytes()),
+                                reservation=rsv) as (wm, grant):
+                            token = self._preempt_token(grant)
+                            try:
+                                out, m = sort_linear(hc, node.keys, wm, mgr,
+                                                     cancel=token)
+                            finally:
+                                self._drop_token(token)
+                        m.host_syncs += syncs
+                        self._stamp_grant(m, grant)
+                    except PreemptedError:
+                        out, m = sort_tensor()
+                        m.preempted = True
+            finally:
+                if rsv is not None:
+                    rsv.cancel()
             m.decision_reason = decision.reason
             metrics.append(m)
             return out
@@ -616,37 +766,43 @@ class Executor:
             # compares (data bytes), not the group-table estimate the
             # grant below requests — mixing units would price a spill an
             # ungoverned session with the same work_mem would never see
-            mem_q, dev_q = self._quotes(self.selector.model.sort_need_bytes(
-                len(child), child.row_bytes()))
-            decision = self.selector.choose_sort(
-                child, [node.key], mem_quote=mem_q, dev_quote=dev_q)
-            decisions.append(decision)
-            if decision.path == "tensor":
-                dev_c, up_c = self._to_device(child)
-                sig = ("group", dev_c.num_physical_rows,
-                       tuple(node.values.items()), dev_c.valid is None)
-                with self._device_leased(sig) as lease:
-                    out, m = group_aggregate_device(dev_c, node.key,
-                                                    node.values)
-                self._stamp_lease(m, lease)
-                m.h2d_bytes += up_c
-            else:
-                child, syncs = self._lower_for_linear(child)
-                # grant sized by estimated DISTINCT groups (the group hash
-                # table's real footprint), via the cached key sketch — a
-                # low-cardinality aggregate over many rows must not hold a
-                # work_mem-sized slice of the shared budget it cannot use
-                from .table_cache import key_stats
+            mem_q, dev_q, rsv = self._quotes(
+                self.selector.model.sort_need_bytes(
+                    len(child), child.row_bytes()))
+            try:
+                decision = self._decide(self.selector.choose_sort(
+                    child, [node.key], mem_quote=mem_q, dev_quote=dev_q))
+                decisions.append(decision)
+                if decision.path == "tensor":
+                    dev_c, up_c = self._to_device(child)
+                    sig = ("group", dev_c.num_physical_rows,
+                           tuple(node.values.items()), dev_c.valid is None)
+                    with self._device_leased(sig) as lease:
+                        out, m = group_aggregate_device(dev_c, node.key,
+                                                        node.values)
+                    self._stamp_lease(m, lease)
+                    m.h2d_bytes += up_c
+                else:
+                    child, syncs = self._lower_for_linear(child)
+                    # grant sized by estimated DISTINCT groups (the group
+                    # hash table's real footprint), via the cached key
+                    # sketch — a low-cardinality aggregate over many rows
+                    # must not hold a work_mem-sized slice of the shared
+                    # budget it cannot use
+                    from .table_cache import key_stats
 
-                st = key_stats(child, node.key)
-                scale = max(1, len(child) // max(1, st.sample_n))
-                n_groups = min(len(child), max(1, st.card * scale))
-                with self._granted(self.selector.model.hash_need_bytes(
-                        n_groups)) as (wm, grant):
-                    out, m = group_aggregate_linear(child, node.key,
-                                                    node.values, wm, mgr)
-                m.host_syncs += syncs
-                self._stamp_grant(m, grant)
+                    st = key_stats(child, node.key)
+                    scale = max(1, len(child) // max(1, st.sample_n))
+                    n_groups = min(len(child), max(1, st.card * scale))
+                    with self._granted(self.selector.model.hash_need_bytes(
+                            n_groups), reservation=rsv) as (wm, grant):
+                        out, m = group_aggregate_linear(child, node.key,
+                                                        node.values, wm, mgr)
+                    m.host_syncs += syncs
+                    self._stamp_grant(m, grant)
+            finally:
+                if rsv is not None:
+                    rsv.cancel()
             m.decision_reason = decision.reason
             metrics.append(m)
             return out

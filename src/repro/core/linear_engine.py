@@ -186,10 +186,15 @@ def _grace_join(
     spill: SpillAccount,
     peak: List[int],
     depth: int = 0,
+    cancel=None,
 ) -> Relation:
     est = table_bytes_estimate(len(build))
     if est <= work_mem or depth >= MAX_PARTITION_DEPTH or len(build) <= 64:
         return _inmem_join(build, probe, key, peak)
+    if cancel is not None:
+        # preemption poll: only the spill regime is cancellable — an
+        # in-memory join finishes faster than any requeue could
+        cancel.check()
 
     # Spill regime: recursive hash partitioning (Grace hash join).
     build_schema = {k: v for k, v in build.columns.items()}
@@ -201,6 +206,8 @@ def _grace_join(
 
     part_paths = []
     for f in range(fanout):
+        if cancel is not None:
+            cancel.check()  # per-partition poll: bounded preemption latency
         b_part = build.take(np.nonzero(bh == f)[0])
         p_part = probe.take(np.nonzero(ph == f)[0])
         b_path = mgr.write_relation(b_part, f"jb{depth}", spill) if len(b_part) else None
@@ -219,7 +226,10 @@ def _grace_join(
         p_part = mgr.read_relation(p_path, spill)
         mgr.delete(b_path)
         mgr.delete(p_path)
-        results.append(_grace_join(b_part, p_part, key, work_mem, mgr, spill, peak, depth + 1))
+        if cancel is not None:
+            cancel.check()
+        results.append(_grace_join(b_part, p_part, key, work_mem, mgr, spill,
+                                   peak, depth + 1, cancel))
     if not results:
         # empty join result with the correct joined schema
         b_empty = Relation({k: v[:0] for k, v in build_schema.items()})
@@ -237,15 +247,22 @@ def hash_join_linear(
     key: str,
     work_mem: int,
     mgr: Optional[SpillManager] = None,
+    cancel=None,
 ) -> Tuple[Relation, OpMetrics]:
-    """Linear-path hash join with work_mem discipline and real spilling."""
+    """Linear-path hash join with work_mem discipline and real spilling.
+
+    ``cancel`` is an optional preemption token (any object with a
+    ``check()`` raising :class:`~repro.core.faults.PreemptedError`): the
+    spill regime polls it at partition boundaries so a floor-degraded join
+    can abandon its spill mid-flight and be requeued on the tensor path."""
     own_mgr = mgr is None
     mgr = mgr or SpillManager()
     spill = SpillAccount()
     peak = [0]
     try:
         with Timer() as t:
-            out = _grace_join(build, probe, key, work_mem, mgr, spill, peak)
+            out = _grace_join(build, probe, key, work_mem, mgr, spill, peak,
+                              cancel=cancel)
     finally:
         if own_mgr:
             mgr.cleanup()
@@ -352,8 +369,11 @@ def sort_linear(
     keys: Sequence[str],
     work_mem: int,
     mgr: Optional[SpillManager] = None,
+    cancel=None,
 ) -> Tuple[Relation, OpMetrics]:
-    """Linear-path sort: in-memory lexsort or external merge sort with spilling."""
+    """Linear-path sort: in-memory lexsort or external merge sort with
+    spilling.  ``cancel`` as in :func:`hash_join_linear`: polled at run and
+    merge-pass boundaries so a degraded external sort is preemptible."""
     own_mgr = mgr is None
     mgr = mgr or SpillManager()
     spill = SpillAccount()
@@ -370,6 +390,8 @@ def sort_linear(
                 rows_per_run = max(64, work_mem // max(1, row_bytes))
                 run_paths: List[str] = []
                 for start in range(0, len(rel), rows_per_run):
+                    if cancel is not None:
+                        cancel.check()  # per-run poll
                     chunk = Relation(
                         {k: v[start : start + rows_per_run] for k, v in rel.columns.items()}
                     )
@@ -381,12 +403,16 @@ def sort_linear(
                 fan_in = max(2, work_mem // MERGE_BUFFER_BYTES - 1)
                 out = None
                 while True:
+                    if cancel is not None:
+                        cancel.check()  # per-merge-pass poll
                     spill.partition_passes += 1
                     if len(run_paths) <= fan_in:
                         _, out = _merge_runs(run_paths, keys, mgr, spill, row_bytes, final=True)
                         break
                     next_paths = []
                     for g in range(0, len(run_paths), fan_in):
+                        if cancel is not None:
+                            cancel.check()
                         group = run_paths[g : g + fan_in]
                         if len(group) == 1:
                             next_paths.append(group[0])

@@ -37,6 +37,20 @@ queue-aware half (expected admission *wait*) lives in
 :meth:`~repro.core.resource_broker.ResourceBroker.price`, which reads
 :meth:`admission_probe` — the peek that also reports whether acquisition
 would block and how many waiters are already parked.
+
+**Price-and-hold** closes the decide-then-act gap those peeks leave open: a
+probe is non-binding, so ``auto`` could decide "linear fits in full" on a
+quote and then *lose* the bytes to a concurrent grant before acquiring
+(fig13's decide-then-lose incident).  :meth:`hold` places a short-TTL
+:class:`MemoryHold` — the quoted bytes are *committed* (counted against the
+budget alongside grants, so the invariant becomes ``in_use + held <=
+total``) until the decision either converts the hold into a grant via
+``acquire(..., hold=...)`` (no wait: the bytes are already committed),
+cancels it (tensor path chosen), or the TTL reaps it (a decision that
+crashed or stalled can never strand budget).  Expiry is lazy-but-prompt:
+every lock acquisition reaps, and admission waits are bounded by the
+nearest hold deadline so a waiter blocked only by an expiring hold wakes
+when it lapses rather than sleeping forever.
 """
 from __future__ import annotations
 
@@ -45,8 +59,18 @@ import threading
 import time
 from typing import Optional, Union
 
-__all__ = ["MemoryGovernor", "MemoryGrant", "GovernorStats", "GrantPolicy",
-           "FloorGrantPolicy", "ProportionalShareGrantPolicy"]
+__all__ = ["MemoryGovernor", "MemoryGrant", "MemoryHold", "GovernorStats",
+           "GrantPolicy", "FloorGrantPolicy", "ProportionalShareGrantPolicy",
+           "BrokerInvariantViolation"]
+
+
+class BrokerInvariantViolation(RuntimeError):
+    """A resource-accounting invariant was broken (double release, negative
+    budget, leaked hold conversion).  The one error class the serving layer
+    treats as fatal: unlike a per-query failure, corrupted budget accounting
+    poisons every subsequent admission decision, so the run must abort.
+    Subclasses RuntimeError so existing double-release handling keeps
+    working."""
 
 MB = 1 << 20
 
@@ -142,8 +166,12 @@ class GovernorStats:
     degraded: int = 0          # grants smaller than their request
     waits: int = 0             # requests that blocked in admission control
     wait_s_total: float = 0.0  # total seconds spent blocked
-    peak_in_use: int = 0       # high-water mark of outstanding granted bytes
+    peak_in_use: int = 0       # high-water mark of committed bytes (granted + held)
     over_budget_events: int = 0  # invariant violations (must stay 0)
+    holds: int = 0             # price-and-hold reservations placed
+    holds_converted: int = 0   # holds that became grants
+    holds_expired: int = 0     # holds reaped at TTL expiry
+    holds_cancelled: int = 0   # holds explicitly released unconverted
 
 
 @dataclasses.dataclass
@@ -174,7 +202,7 @@ class MemoryGrant:
 
     def release(self) -> None:
         if self._released:
-            raise RuntimeError(
+            raise BrokerInvariantViolation(
                 f"memory grant of {self.size} B released twice; a silent "
                 f"double release would inflate the available budget")
         self._released = True
@@ -186,6 +214,47 @@ class MemoryGrant:
     def __exit__(self, *exc) -> None:
         if not self._released:
             self.release()
+
+
+class MemoryHold:
+    """A short-TTL commitment of budget bytes placed at decision time.
+
+    The price-and-hold half of a reservation: ``size`` bytes are counted
+    against the budget (``in_use + held <= total``) from placement until the
+    hold **converts** into a grant (``MemoryGovernor.acquire(...,
+    hold=...)``), is **cancelled** (the decision chose the tensor path), or
+    **expires** at ``deadline`` (the TTL backstop: a crashed or stalled
+    decision can never strand budget).  Exactly one of those three outcomes
+    occurs — the leak test asserts ``holds == converted + expired +
+    cancelled`` and ``held_bytes == 0`` at quiesce.
+    """
+
+    __slots__ = ("governor", "size", "requested", "deadline", "state")
+
+    def __init__(self, governor: "MemoryGovernor", size: int, requested: int,
+                 deadline: float):
+        self.governor = governor
+        self.size = size
+        self.requested = requested
+        self.deadline = deadline
+        self.state = "held"  # held | converted | expired | cancelled
+
+    @property
+    def active(self) -> bool:
+        """True while the hold still pins budget (reaps expiry first)."""
+        self.governor._reap_holds()
+        return self.state == "held"
+
+    def cancel(self) -> None:
+        """Release the hold unconverted.  Idempotent; a no-op once the hold
+        has converted or expired."""
+        self.governor._cancel_hold(self)
+
+    def __enter__(self) -> "MemoryHold":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.cancel()
 
 
 class MemoryGovernor:
@@ -210,6 +279,8 @@ class MemoryGovernor:
         self.full_grant_wait_s = float(full_grant_wait_s)
         self.policy = _resolve_policy(policy)
         self._in_use = 0
+        self._held = 0            # bytes committed to unexpired holds
+        self._holds: list = []    # active MemoryHold objects
         self._demand = 0          # sum of REQUESTED bytes, outstanding grants
         self._waiters = 0         # requests parked in admission control
         self._waiting_demand = 0  # sum of their requested bytes
@@ -222,8 +293,15 @@ class MemoryGovernor:
         return self._in_use
 
     @property
+    def held_bytes(self) -> int:
+        """Bytes committed to active (unexpired) holds."""
+        self._reap_holds()
+        with self._cond:
+            return self._held
+
+    @property
     def available(self) -> int:
-        return self.total_bytes - self._in_use
+        return self.total_bytes - self._in_use - self._held
 
     @property
     def waiters(self) -> int:
@@ -236,8 +314,76 @@ class MemoryGovernor:
         return self._in_use / self.total_bytes
 
     def stats(self) -> GovernorStats:
+        self._reap_holds()
         with self._cond:
             return dataclasses.replace(self._stats)
+
+    # -- hold bookkeeping (price-and-hold reservations) ----------------------
+    def _reap_locked(self, now: float) -> None:
+        """Expire past-deadline holds (lock held).  Lazy: runs on every lock
+        acquisition; admission waits are additionally bounded by the nearest
+        hold deadline so expiry also wakes parked waiters promptly."""
+        if not self._holds:
+            return
+        freed = 0
+        live = []
+        for h in self._holds:
+            if h.state == "held" and now >= h.deadline:
+                h.state = "expired"
+                freed += h.size
+                self._stats.holds_expired += 1
+            elif h.state == "held":
+                live.append(h)
+        if freed:
+            self._holds[:] = live
+            self._held -= freed
+            self._cond.notify_all()
+
+    def _reap_holds(self) -> None:
+        with self._cond:
+            self._reap_locked(time.perf_counter())
+
+    def _next_hold_deadline_locked(self):
+        return min((h.deadline for h in self._holds if h.state == "held"),
+                   default=None)
+
+    def hold(self, requested: int, ttl_s: float = 0.25
+             ) -> Optional["MemoryHold"]:
+        """Commit the bytes :meth:`acquire` would grant right now, for at
+        most ``ttl_s`` seconds.  Returns ``None`` when acquisition would
+        *block* (not even the floor is free): there is nothing truthful to
+        hold, and the quote already says "you will wait".  Never blocks."""
+        requested = max(1, int(requested))
+        floor = min(requested, self.min_grant)
+        now = time.perf_counter()
+        with self._cond:
+            self._reap_locked(now)
+            avail = self.total_bytes - self._in_use - self._held
+            if avail < floor or self._waiters > 0:
+                # parked waiters have admission priority over new decisions:
+                # holding bytes past them would starve admission control
+                return None
+            size = self._size_for(requested, avail, floor)
+            h = MemoryHold(self, size, requested, now + float(ttl_s))
+            self._holds.append(h)
+            self._held += size
+            self._stats.holds += 1
+            self._stats.peak_in_use = max(self._stats.peak_in_use,
+                                          self._in_use + self._held)
+            if self._in_use + self._held > self.total_bytes:  # pragma: no cover
+                self._stats.over_budget_events += 1
+            return h
+
+    def _cancel_hold(self, h: "MemoryHold") -> None:
+        with self._cond:
+            self._reap_locked(time.perf_counter())
+            if h.state != "held":
+                return  # converted/expired/already cancelled: idempotent
+            h.state = "cancelled"
+            self._holds.remove(h)
+            self._held -= h.size
+            self._stats.holds_cancelled += 1
+            self._cond.notify_all()
 
     def _size_for(self, requested: int, avail: int, floor: int) -> int:
         """Grant sizing (lock held): full if it fits, else the policy's
@@ -274,13 +420,14 @@ class MemoryGovernor:
         requested = max(1, int(requested))
         floor = min(requested, self.min_grant)
         with self._cond:
-            avail = self.total_bytes - self._in_use
+            self._reap_locked(time.perf_counter())
+            avail = self.total_bytes - self._in_use - self._held
             size = self._size_for(requested, avail, floor)
             return size, avail < floor, self._waiters
 
     # -- grant lifecycle -----------------------------------------------------
-    def acquire(self, requested: int, timeout: Optional[float] = None
-                ) -> MemoryGrant:
+    def acquire(self, requested: int, timeout: Optional[float] = None,
+                hold: Optional["MemoryHold"] = None) -> MemoryGrant:
         """Block until at least ``min(requested, min_grant)`` bytes are free,
         then grant the policy's sizing (full when it fits).
 
@@ -289,12 +436,37 @@ class MemoryGovernor:
         ``timeout`` bounds the total admission wait; expiry raises
         :class:`TimeoutError` (the caller's query fails rather than wedging
         a worker forever — surfaced, never silent).
+
+        ``hold`` converts a still-active :class:`MemoryHold` placed by
+        :meth:`hold` into the grant *without waiting*: the bytes were
+        committed at decision time, which is exactly the decide-then-lose
+        guarantee.  An expired or cancelled hold falls through to the normal
+        admission path (the quote's promise lapsed; the request competes
+        like everyone else).
         """
         requested = max(1, int(requested))
         floor = min(requested, self.min_grant)
         t0 = time.perf_counter()
         deadline = None if timeout is None else t0 + timeout
         with self._cond:
+            self._reap_locked(t0)
+            if hold is not None and hold.state == "held":
+                # conversion: committed bytes move from held to granted —
+                # no admission wait, no sizing (priced at hold time)
+                hold.state = "converted"
+                self._holds.remove(hold)
+                self._held -= hold.size
+                self._in_use += hold.size
+                self._demand += hold.requested
+                self._stats.holds_converted += 1
+                self._stats.grants += 1
+                if hold.size < hold.requested:
+                    self._stats.degraded += 1
+                self._stats.peak_in_use = max(self._stats.peak_in_use,
+                                              self._in_use + self._held)
+                if self._in_use + self._held > self.total_bytes:  # pragma: no cover
+                    self._stats.over_budget_events += 1
+                return MemoryGrant(self, hold.size, hold.requested, 0.0)
             waited = False
 
             def begin_wait():
@@ -309,18 +481,32 @@ class MemoryGovernor:
                     self._waiters -= 1
                     self._waiting_demand -= requested
 
+            def avail():
+                return self.total_bytes - self._in_use - self._held
+
+            def wait_bounded(remaining):
+                # bound every park by the nearest hold deadline: a waiter
+                # blocked only by an expiring hold must wake when it lapses
+                nd = self._next_hold_deadline_locked()
+                if nd is not None:
+                    until_expiry = max(1e-3, nd - time.perf_counter())
+                    remaining = (until_expiry if remaining is None
+                                 else min(remaining, until_expiry))
+                self._cond.wait(remaining)
+                self._reap_locked(time.perf_counter())
+
             try:
                 # phase 1: opportunistic wait for the full request
                 if self.full_grant_wait_s > 0:
                     full_deadline = t0 + self.full_grant_wait_s
                     if deadline is not None:
                         full_deadline = min(full_deadline, deadline)
-                    while (self.total_bytes - self._in_use < requested
+                    while (avail() < requested
                            and time.perf_counter() < full_deadline):
                         begin_wait()
-                        self._cond.wait(full_deadline - time.perf_counter())
+                        wait_bounded(full_deadline - time.perf_counter())
                 # phase 2: admission control — never grant below the floor
-                while self.total_bytes - self._in_use < floor:
+                while avail() < floor:
                     begin_wait()
                     remaining = (None if deadline is None
                                  else deadline - time.perf_counter())
@@ -329,16 +515,14 @@ class MemoryGovernor:
                         self._stats.wait_s_total += time.perf_counter() - t0
                         raise TimeoutError(
                             f"admission control: {requested} B requested, "
-                            f"{self.total_bytes - self._in_use} B available "
-                            f"after {timeout:.3f}s")
-                    self._cond.wait(remaining)
+                            f"{avail()} B available after {timeout:.3f}s")
+                    wait_bounded(remaining)
             finally:
                 end_wait()
-            avail = self.total_bytes - self._in_use
-            size = self._size_for(requested, avail, floor)
+            size = self._size_for(requested, avail(), floor)
             self._in_use += size
             self._demand += requested
-            if self._in_use > self.total_bytes:  # pragma: no cover
+            if self._in_use + self._held > self.total_bytes:  # pragma: no cover
                 self._stats.over_budget_events += 1
             self._stats.grants += 1
             if size < requested:
@@ -347,7 +531,7 @@ class MemoryGovernor:
                 self._stats.waits += 1
                 self._stats.wait_s_total += time.perf_counter() - t0
             self._stats.peak_in_use = max(self._stats.peak_in_use,
-                                          self._in_use)
+                                          self._in_use + self._held)
             wait_s = time.perf_counter() - t0 if waited else 0.0
         return MemoryGrant(self, size, requested, wait_s)
 

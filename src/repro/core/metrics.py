@@ -108,6 +108,11 @@ class OpMetrics:
     # delta — another thread's concurrent compile must not make a warm run
     # look cold.
     compiled: bool = False
+    # True when this operator started on a floor-degraded LINEAR grant, was
+    # preempted mid-spill by the broker, and re-ran (successfully) on the
+    # tensor path — the metrics describe the tensor run that produced the
+    # result; this flag records that a preemption paid for it.
+    preempted: bool = False
 
     def as_row(self) -> Dict[str, object]:
         return {

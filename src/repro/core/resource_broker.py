@@ -35,6 +35,24 @@ coalesced dispatch group instead of running strictly one-at-a-time — the
 programs are identical compiled artifacts, so overlapping them changes
 scheduling only, never results (asserted bit-for-bit in tests and fig12).
 
+**Price-and-hold reservations** close the quote's decide-then-act gap: a
+:class:`PressureQuote` is non-binding, so between "the quote said the full
+grant is free" and "the operator acquires", a concurrent grant can take the
+bytes — ``auto`` then runs its *linear* decision on a *degraded* grant it
+never priced (the decide-then-lose incident fig13 counts).
+:meth:`ResourceBroker.reserve` pairs the quote with a short-TTL
+:class:`~repro.core.memory_governor.MemoryHold`: the quoted bytes are
+committed at decision time, :meth:`memory_lease` converts the hold without
+waiting, and a decision that goes the other way cancels it (the TTL reaps
+anything leaked).  ``reservations=False`` is the quote-only ablation.
+
+**Preemption**: floor-degraded linear operators register a
+:class:`PreemptToken` while they run; :meth:`ResourceBroker.
+preempt_degraded` cancels them mid-spill (they poll the token at partition
+/ run boundaries) so the executor can requeue the operator on the tensor
+path — graceful degradation instead of a multi-second spill wall blocking
+a premium tenant's admission.
+
 ``REPRO_DEVICE_SERIALIZE=0`` keeps its escape-hatch meaning: the broker
 grants device leases without serializing (multi-device hosts where XLA can
 genuinely overlap arbitrary programs).
@@ -47,11 +65,12 @@ import threading
 import time
 from typing import List, Optional
 
-from .memory_governor import MemoryGovernor, MemoryGrant
+from .faults import FaultInjector, PreemptedError
+from .memory_governor import MemoryGovernor, MemoryGrant, MemoryHold
 
 __all__ = ["ResourceBroker", "ResourceRequest", "PressureQuote",
-           "MemoryLease", "DeviceLease", "DeviceQueue", "BrokerStats",
-           "default_broker"]
+           "Reservation", "PreemptToken", "MemoryLease", "DeviceLease",
+           "DeviceQueue", "BrokerStats", "default_broker"]
 
 # EWMA smoothing for wait/hold/service observations: heavy enough that one
 # stall cannot whipsaw the pricing, light enough to track a shifting load
@@ -103,6 +122,71 @@ class PressureQuote:
     expected_wait_s: float = 0.0
     queue_depth: int = 0
     would_block: bool = False
+
+
+class Reservation:
+    """A priced decision input that cannot be lost: quote + short-TTL hold.
+
+    ``quote`` is what the selector prices against.  When the broker placed a
+    :class:`~repro.core.memory_governor.MemoryHold` behind it (``held`` is
+    true), the quoted ``grant_bytes`` are *committed* — converting via
+    :meth:`ResourceBroker.memory_lease` gets exactly that size with zero
+    admission wait.  A quote-only reservation (``reservations=False``
+    ablation, device resources, or a would-block probe where there is
+    nothing truthful to hold) carries no hold and keeps the historical race.
+    :meth:`cancel` is idempotent and safe after conversion; the hold's TTL
+    backstops any path that forgets.
+    """
+
+    __slots__ = ("quote", "_hold", "_broker")
+
+    def __init__(self, quote: PressureQuote, hold: Optional[MemoryHold],
+                 broker: "ResourceBroker"):
+        self.quote = quote
+        self._hold = hold
+        self._broker = broker
+
+    @property
+    def held(self) -> bool:
+        return self._hold is not None and self._hold.active
+
+    def cancel(self) -> None:
+        if self._hold is not None:
+            self._hold.cancel()
+
+    def __enter__(self) -> "Reservation":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.cancel()
+
+
+class PreemptToken:
+    """Cooperative cancellation handle for a floor-degraded linear operator.
+
+    The operator polls :meth:`check` at partition/run boundaries inside its
+    spill loops; :meth:`cancel` (called by :meth:`ResourceBroker.
+    preempt_degraded`) makes the next poll raise
+    :class:`~repro.core.faults.PreemptedError`, which the executor catches
+    to requeue the operator on the tensor path.
+    """
+
+    __slots__ = ("_flag",)
+
+    def __init__(self):
+        self._flag = threading.Event()
+
+    def cancel(self) -> None:
+        self._flag.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._flag.is_set()
+
+    def check(self) -> None:
+        if self._flag.is_set():
+            raise PreemptedError(
+                "floor-degraded linear operator preempted mid-spill")
 
 
 # ---------------------------------------------------------------------------
@@ -432,12 +516,19 @@ class BrokerStats:
     mem_ewma_hold_s: float = 0.0
     quotes: int = 0
     quotes_blocking: int = 0        # memory quotes that would have parked
+    reservations: int = 0           # price-and-hold reservations placed
+    decide_then_lose: int = 0       # priced-unblocked decisions that then
+                                    # waited or got a smaller grant
+    preempt_registered: int = 0     # degraded linear ops that ran preemptible
+    preemptions: int = 0            # tokens actually cancelled
 
     def since(self, base: "BrokerStats") -> "BrokerStats":
         out = dataclasses.replace(self)
         for f in ("device_dispatches", "device_groups", "device_coalesced",
                   "device_bypassed", "device_wait_s_total", "mem_leases",
-                  "mem_wait_s_total", "quotes", "quotes_blocking"):
+                  "mem_wait_s_total", "quotes", "quotes_blocking",
+                  "reservations", "decide_then_lose", "preempt_registered",
+                  "preemptions"):
             setattr(out, f, getattr(self, f) - getattr(base, f))
         return out
 
@@ -457,10 +548,17 @@ class ResourceBroker:
 
     def __init__(self, governor: Optional[MemoryGovernor] = None,
                  device_queue: Optional[DeviceQueue] = None,
-                 queue_pricing: bool = True):
+                 queue_pricing: bool = True, reservations: bool = True,
+                 reservation_ttl_s: float = 0.25,
+                 faults: Optional[FaultInjector] = None):
         self.governor = governor
         self.device = device_queue if device_queue is not None else DeviceQueue()
         self.queue_pricing = bool(queue_pricing)
+        # price-and-hold on/off: False is the quote-only ablation fig13
+        # measures decide-then-lose incidents against
+        self.reservations = bool(reservations)
+        self.reservation_ttl_s = float(reservation_ttl_s)
+        self.faults = faults
         self._lock = threading.Lock()
         self._mem_leases = 0
         self._mem_wait_s_total = 0.0
@@ -468,29 +566,105 @@ class ResourceBroker:
         self._mem_ewma_hold_s = 0.0
         self._quotes = 0
         self._quotes_blocking = 0
+        self._reservations = 0
+        self._decide_then_lose = 0
+        self._preemptible: List[PreemptToken] = []
+        self._preempt_registered = 0
+        self._preemptions = 0
 
     # -- leases --------------------------------------------------------------
-    def memory_lease(self, need_bytes: int,
-                     timeout: Optional[float] = None) -> MemoryLease:
+    def memory_lease(self, need_bytes: int, timeout: Optional[float] = None,
+                     reservation: Optional[Reservation] = None) -> MemoryLease:
         """Acquire a memory lease (blocks under admission control exactly as
         :meth:`MemoryGovernor.acquire`); the observed admission wait feeds
-        the EWMA that prices future memory quotes."""
+        the EWMA that prices future memory quotes.
+
+        ``reservation`` redeems a :meth:`reserve` decision: an active hold
+        converts without waiting; a quote-only reservation acquires normally
+        and — when its quote promised an unblocked grant the acquisition did
+        not honor (smaller size, or it waited) — records a decide-then-lose
+        incident, the race the reservation mechanism exists to close."""
         if self.governor is None:
             raise RuntimeError("broker has no memory governor; memory leases "
                                "require a governed session")
-        grant = self.governor.acquire(need_bytes, timeout=timeout)
+        if self.faults is not None:
+            self.faults.on_memory_grant()
+        hold = reservation._hold if reservation is not None else None
+        grant = self.governor.acquire(need_bytes, timeout=timeout, hold=hold)
         with self._lock:
             self._mem_leases += 1
             self._mem_wait_s_total += grant.wait_s
             if grant.wait_s > 0:
                 self._mem_ewma_wait_s = _ewma(self._mem_ewma_wait_s,
                                               grant.wait_s)
+            if (reservation is not None
+                    and reservation.quote.resource == "memory"
+                    and not reservation.quote.would_block
+                    and (grant.size < reservation.quote.grant_bytes
+                         or grant.wait_s > 0)):
+                self._decide_then_lose += 1
         return MemoryLease(self, grant)
 
     def device_lease(self, batch_key=None) -> DeviceLease:
         """Acquire a device dispatch slot (blocks per the queue discipline;
         coalesces with queued same-``batch_key`` leases)."""
+        if self.faults is not None:
+            self.faults.on_device_dispatch()
         return self.device.acquire(batch_key)
+
+    # -- reservations --------------------------------------------------------
+    def reserve(self, request: ResourceRequest) -> Reservation:
+        """Price a request and — for memory, when reservations are enabled
+        and the grant would not block — commit the quoted bytes behind a
+        short-TTL hold.  The returned :class:`Reservation` either converts
+        (pass it to :meth:`memory_lease`) or must be cancelled; the TTL
+        reaps anything a crashed decision leaks.  Device requests and the
+        quote-only ablation return an unheld reservation (plain quote
+        semantics)."""
+        if (request.resource == "memory" and self.reservations
+                and self.governor is not None):
+            hold = self.governor.hold(request.need_bytes,
+                                      ttl_s=self.reservation_ttl_s)
+            if hold is not None:
+                with self._lock:
+                    self._quotes += 1
+                    self._reservations += 1
+                quote = PressureQuote("memory", hold.size, 0.0,
+                                      0, False)
+                return Reservation(quote, hold, self)
+        return Reservation(self.price(request), None, self)
+
+    # -- preemption ----------------------------------------------------------
+    def register_preemptible(self, token: PreemptToken) -> None:
+        """A floor-degraded linear operator announces it can be cancelled
+        mid-spill (it polls the token at partition/run boundaries)."""
+        with self._lock:
+            self._preemptible.append(token)
+            self._preempt_registered += 1
+
+    def unregister_preemptible(self, token: PreemptToken) -> None:
+        with self._lock:
+            try:
+                self._preemptible.remove(token)
+            except ValueError:
+                pass  # already preempted away
+
+    def preempt_degraded(self, max_n: Optional[int] = None) -> int:
+        """Cancel up to ``max_n`` registered floor-degraded linear operators
+        (all of them when ``None``): each abandons its spill at the next
+        poll and its query re-runs the operator on the tensor path.  Returns
+        the number preempted.  Called by the serving layer when a
+        higher-priority tenant's admission would otherwise block behind a
+        spill wall."""
+        with self._lock:
+            victims = (self._preemptible[:] if max_n is None
+                       else self._preemptible[:max_n])
+            for t in victims:
+                self._preemptible.remove(t)
+            self._preemptions += len(victims)
+        for t in victims:
+            t.cancel()
+        return len(victims)
 
     def _record_mem_hold(self, hold_s: float) -> None:
         with self._lock:
@@ -561,6 +735,10 @@ class ResourceBroker:
                 mem_ewma_hold_s=self._mem_ewma_hold_s,
                 quotes=self._quotes,
                 quotes_blocking=self._quotes_blocking,
+                reservations=self._reservations,
+                decide_then_lose=self._decide_then_lose,
+                preempt_registered=self._preempt_registered,
+                preemptions=self._preemptions,
             )
 
 

@@ -1,4 +1,4 @@
-"""Concurrent serving layer: a closed-loop query stream over one Session.
+"""Concurrent serving layer: closed-loop and open-loop query streams.
 
 This is the repo's traffic model for the paper's headline claim.  Single-query
 benchmarks (fig1–fig10) measure *throughput* per path; the phase transition
@@ -13,16 +13,40 @@ when **concurrent queries contend for one memory pool**.  A
   * one :class:`~repro.core.memory_governor.MemoryGovernor` owning the total
     memory budget; every linear operator runs under a grant, so N concurrent
     linear queries genuinely squeeze each other into the spill regime;
-  * a **closed-loop** driver: each of N workers submits its next query the
-    moment the previous one completes (classic closed-loop load generation —
-    offered concurrency is exactly N, no coordinated-omission artifacts from
-    an open-loop arrival queue backing up).
+  * two load drivers:
 
-:meth:`QueryServer.serve` returns a :class:`ServeReport` with the full
-latency sample set, P50/P99, per-query spill volume and grant sizes, and the
-governor's invariant counters (``over_budget_events`` must be 0).  Results
-are collected per workload item so callers can assert bit-for-bit parity
-against a serial run of the same queries (see ``tests/test_server.py``).
+      - :meth:`QueryServer.serve` — **closed loop**: each of N workers
+        submits its next query the moment the previous one completes, so
+        offered concurrency is exactly N (the fig11/fig12 configuration);
+      - :meth:`QueryServer.serve_open` — **open loop**: an
+        :class:`~repro.core.slo.ArrivalProcess` schedules thousands of
+        logical clients on their own clock (Poisson / bursty phases), a
+        bounded worker pool drains a priority queue, and per-tenant
+        :class:`~repro.core.slo.TenantClass` deadlines drive **admission
+        shedding** (a sheddable query whose quoted wait already exceeds its
+        deadline is rejected up front), **deadline enforcement** (an
+        admitted query that starves past its deadline in queue is recorded
+        as failed, not silently served late), and **preemption** (a
+        positive-priority tenant facing blocked admission cancels
+        floor-degraded linear operators mid-spill; they re-run on the
+        tensor path).  This is the fig13 configuration — a closed loop
+        cannot even *express* the overload it measures, because a closed
+        loop's offered load politely throttles itself (the classic
+        coordinated-omission trap).
+
+Failure discipline (both drivers): every submitted query ends as exactly one
+of **served**, **shed**, or **failed**.  Per-query exceptions — injected
+faults that exhausted their retries, deadline misses, anything raised by
+the engine — become :class:`FailedQuery` records, and the run keeps going.
+Only a :class:`~repro.core.memory_governor.BrokerInvariantViolation` (the
+never-over-budget invariant itself broke — the one condition that poisons
+every subsequent measurement) aborts the run and re-raises.
+
+:meth:`QueryServer.serve` and :meth:`~QueryServer.serve_open` return a
+:class:`ServeReport` with the full latency sample set, P50/P99, per-query
+spill volume and grant sizes, shed/failed partitions, per-tenant SLO
+attainment, fault-injection counts, and the governor's invariant counters
+(``over_budget_events`` must be 0).
 
     >>> server = QueryServer({"orders": orders, "users": users},
     ...                      total_mem=64 * MB, work_mem=32 * MB)
@@ -34,29 +58,38 @@ against a serial run of the same queries (see ``tests/test_server.py``).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Dict, List, Mapping, Optional, Sequence
 
 from .executor import QueryResult
-from .memory_governor import GovernorStats, MemoryGovernor
+from .faults import FaultInjector, SimulatedCrash
+from .memory_governor import (BrokerInvariantViolation, GovernorStats,
+                              MemoryGovernor)
 from .metrics import LatencyStats, Timer, latency_stats
 from .relation import Relation
-from .resource_broker import BrokerStats, DeviceQueue, ResourceBroker
+from .resource_broker import (BrokerStats, DeviceQueue, ResourceBroker,
+                              ResourceRequest)
 from .session import Query, Session
+from .slo import ArrivalProcess, TenantClass
 
-__all__ = ["QueryServer", "ServeReport", "ServedQuery"]
+__all__ = ["QueryServer", "ServeReport", "ServedQuery", "ShedQuery",
+           "FailedQuery"]
 
 MB = 1 << 20
 
 
 @dataclasses.dataclass
 class ServedQuery:
-    """One completed query of a closed-loop run."""
+    """One completed query of a serving run."""
 
     worker: int
-    seq: int               # per-worker sequence number
+    seq: int               # per-worker sequence number (closed loop) or
+                           # global submission sequence (open loop)
     workload_idx: int      # which workload item this was
-    wall_s: float          # end-to-end latency incl. admission wait
+    wall_s: float          # end-to-end latency; open loop: arrival→done
+                           # sojourn incl. queueing (no coordinated omission)
     temp_mb: float         # temp-file bytes this query spilled
     grant_bytes: int       # smallest grant any of its linear operators got
     paths: str             # "tensor", "linear", or "mixed"
@@ -65,11 +98,48 @@ class ServedQuery:
     mem_wait_s: float = 0.0    # total memory-admission wait across operators
     queue_wait_s: float = 0.0  # total device-lease wait across operators
     batched: bool = False      # any dispatch ran in a coalesced lease group
+    tenant: str = ""           # open loop: the TenantClass this ran under
+    arrival_s: float = 0.0     # open loop: arrival offset from run start
+    service_s: float = 0.0     # open loop: execution time excl. queueing
+    slo_ok: bool = True        # open loop: sojourn <= tenant deadline
+    preempted: bool = False    # any operator was preempted → tensor re-run
+
+
+@dataclasses.dataclass
+class ShedQuery:
+    """One query rejected by admission control (load shedding): its quoted
+    wait already exceeded its deadline, so serving it would have burned
+    capacity on a result nobody could use."""
+
+    tenant: str
+    seq: int               # global submission sequence
+    workload_idx: int
+    arrival_s: float       # arrival offset from run start
+    quoted_wait_s: float   # the wait admission quoted at arrival
+    deadline_s: float      # the tenant deadline it exceeded
+
+
+@dataclasses.dataclass
+class FailedQuery:
+    """One query that was admitted but did not produce a result: a typed
+    engine error that survived retries, or a deadline miss while queued.
+    ``error`` is the exception class name (``"DeadlineExceeded"``,
+    ``"SpillIOError"``, ...)."""
+
+    worker: int
+    seq: int
+    workload_idx: int
+    error: str
+    message: str = ""
+    tenant: str = ""
+    arrival_s: float = 0.0
+    wall_s: float = 0.0    # arrival→failure (open loop) or submit→raise
 
 
 @dataclasses.dataclass
 class ServeReport:
-    """Aggregate of one :meth:`QueryServer.serve` run."""
+    """Aggregate of one :meth:`QueryServer.serve` /
+    :meth:`QueryServer.serve_open` run."""
 
     queries: List[ServedQuery]
     latency: LatencyStats
@@ -78,8 +148,16 @@ class ServeReport:
     governor: GovernorStats
     concurrency: int
     # per-run broker accounting (device dispatch groups/coalescing, lease
-    # waits, quote counts); EWMA/peak fields are end-of-run gauges
+    # waits, quote counts, reservations, preemptions); EWMA/peak fields are
+    # end-of-run gauges
     broker: Optional[BrokerStats] = None
+    shed: List[ShedQuery] = dataclasses.field(default_factory=list)
+    failed: List[FailedQuery] = dataclasses.field(default_factory=list)
+    submitted: int = 0             # every arrival: served + shed + failed
+    # fault-injection counts for THIS run (None when no injector): the chaos
+    # gate asserts these are nonzero, so "survived chaos" can never mean
+    # "chaos never happened"
+    faults: Optional[Dict[str, int]] = None
 
     @property
     def qps(self) -> float:
@@ -91,8 +169,38 @@ class ServeReport:
         distribution.  ~1 = predictable; >>1 = the spill-regime tail."""
         return self.latency.p99 / max(self.latency.p50, 1e-9)
 
+    @property
+    def counts(self) -> Dict[str, int]:
+        return {"submitted": self.submitted, "served": len(self.queries),
+                "shed": len(self.shed), "failed": len(self.failed)}
+
     def by_workload(self, idx: int) -> List[ServedQuery]:
         return [q for q in self.queries if q.workload_idx == idx]
+
+    # -- per-tenant views (open-loop runs) -----------------------------------
+    def tenant_queries(self, tenant: str) -> List[ServedQuery]:
+        return [q for q in self.queries if q.tenant == tenant]
+
+    def tenant_latency(self, tenant: str) -> Optional[LatencyStats]:
+        """Sojourn-latency stats for one tenant's served queries (None when
+        it served nothing)."""
+        samples = [q.wall_s for q in self.tenant_queries(tenant)]
+        return latency_stats(samples) if samples else None
+
+    def tenant_counts(self, tenant: str) -> Dict[str, int]:
+        served = len(self.tenant_queries(tenant))
+        shed = sum(1 for s in self.shed if s.tenant == tenant)
+        failed = sum(1 for f in self.failed if f.tenant == tenant)
+        return {"submitted": served + shed + failed, "served": served,
+                "shed": shed, "failed": failed}
+
+    def slo_attainment(self, tenant: str) -> float:
+        """Fraction of this tenant's *served* queries that met their
+        deadline (1.0 when it served nothing — no evidence of a miss)."""
+        qs = self.tenant_queries(tenant)
+        if not qs:
+            return 1.0
+        return sum(1 for q in qs if q.slo_ok) / len(qs)
 
 
 def _min_grant_of(result: QueryResult) -> int:
@@ -131,7 +239,12 @@ class QueryServer:
     queue-blind ablation fig12 measures against (grant sizing stays
     pressure-aware; only the wait terms vanish); ``device_max_batch``
     bounds a coalesced device-dispatch group (``1`` = strict PR-4
-    one-at-a-time serialization, ``None`` = unbounded coalescing).
+    one-at-a-time serialization, ``None`` = unbounded coalescing);
+    ``reservations=False`` is the quote-only ablation — ``auto`` prices
+    against non-binding quotes and fig13 counts the decide-then-lose
+    incidents; ``faults`` plugs a :class:`~repro.core.faults.FaultInjector`
+    into every fault site the serving path crosses (spill writes, device
+    dispatch, memory grants) for chaos runs.
     """
 
     def __init__(self, tables: Dict[str, Relation],
@@ -142,6 +255,9 @@ class QueryServer:
                  grant_policy=None,
                  queue_aware: Optional[bool] = None,
                  device_max_batch: Optional[int] = None,
+                 reservations: Optional[bool] = None,
+                 faults: Optional[FaultInjector] = None,
+                 retry=None,
                  session: Optional[Session] = None):
         if session is not None:
             # a prebuilt session owns its broker, governor, work_mem and
@@ -152,7 +268,9 @@ class QueryServer:
                          "full_grant_wait_s": full_grant_wait_s,
                          "grant_policy": grant_policy,
                          "queue_aware": queue_aware,
-                         "device_max_batch": device_max_batch}
+                         "device_max_batch": device_max_batch,
+                         "reservations": reservations,
+                         "faults": faults, "retry": retry}
             given = [k for k, v in conflicts.items() if v is not None]
             if given:
                 raise ValueError(
@@ -169,13 +287,16 @@ class QueryServer:
             broker = ResourceBroker(
                 governor,
                 device_queue=DeviceQueue(max_group=device_max_batch),
-                queue_pricing=True if queue_aware is None else queue_aware)
+                queue_pricing=True if queue_aware is None else queue_aware,
+                reservations=True if reservations is None else reservations,
+                faults=faults)
             session = Session(
                 work_mem=32 * MB if work_mem is None else work_mem,
-                policy=policy or "auto", broker=broker)
+                policy=policy or "auto", broker=broker, retry=retry)
         self.session = session
         self.governor = session.governor
         self.broker = session.broker
+        self.faults = session.executor.faults
         for name, rel in tables.items():
             self.session.register(name, rel)
 
@@ -184,6 +305,64 @@ class QueryServer:
         """Run one query through the governed session (any :class:`Query`,
         logical tree, or legacy physical tree)."""
         return self.session.execute(query)
+
+    # -- report assembly -----------------------------------------------------
+    def _snapshot_base(self):
+        gov = (self.governor.stats() if self.governor is not None
+               else GovernorStats())
+        fts = self.faults.counts() if self.faults is not None else None
+        return gov, self.broker.stats(), fts
+
+    def _build_report(self, base, served, shed, failed, submitted, wall_s,
+                      concurrency) -> ServeReport:
+        base_gov, base_broker, base_faults = base
+        gov = (self.governor.stats() if self.governor is not None
+               else GovernorStats())
+        # report the governor's activity for THIS run (counters are
+        # cumulative; peak and invariant counters are monotone so the
+        # absolute values remain the right thing to assert on)
+        gov.grants -= base_gov.grants
+        gov.degraded -= base_gov.degraded
+        gov.waits -= base_gov.waits
+        gov.wait_s_total -= base_gov.wait_s_total
+        gov.holds -= base_gov.holds
+        gov.holds_converted -= base_gov.holds_converted
+        gov.holds_expired -= base_gov.holds_expired
+        gov.holds_cancelled -= base_gov.holds_cancelled
+        fault_counts = None
+        if self.faults is not None:
+            now = self.faults.counts()
+            fault_counts = {k: now[k] - (base_faults or {}).get(k, 0)
+                            for k in now}
+        return ServeReport(
+            queries=served,
+            latency=(latency_stats([q.wall_s for q in served]) if served
+                     else LatencyStats(0.0, 0.0, 0.0, 0.0, 0.0, 0)),
+            wall_s=wall_s,
+            total_temp_mb=sum(q.temp_mb for q in served),
+            governor=gov,
+            concurrency=concurrency,
+            broker=self.broker.stats().since(base_broker),
+            shed=shed, failed=failed, submitted=submitted,
+            faults=fault_counts)
+
+    def _served_record(self, res: QueryResult, *, worker: int, seq: int,
+                       idx: int, wall_s: float, keep: bool,
+                       tenant: str = "", arrival_s: float = 0.0,
+                       service_s: float = 0.0,
+                       slo_ok: bool = True) -> ServedQuery:
+        return ServedQuery(
+            worker=worker, seq=seq, workload_idx=idx,
+            wall_s=wall_s, temp_mb=res.total_temp_mb,
+            grant_bytes=_min_grant_of(res),
+            paths=_paths_of(res), scalar=res.scalar,
+            relation=res.relation if keep else None,
+            mem_wait_s=sum(m.mem_wait_s for m in res.metrics),
+            queue_wait_s=sum(m.queue_wait_s for m in res.metrics),
+            batched=any(m.batched for m in res.metrics),
+            tenant=tenant, arrival_s=arrival_s,
+            service_s=service_s or wall_s, slo_ok=slo_ok,
+            preempted=any(m.preempted for m in res.metrics))
 
     # -- closed-loop stream --------------------------------------------------
     def serve(self, workload: Sequence, concurrency: int,
@@ -205,7 +384,12 @@ class QueryServer:
         harness itself the dominant memory consumer while it measures
         memory-pressure behavior.
 
-        Worker exceptions abort the run and re-raise in the caller.
+        A query that raises is recorded as a :class:`FailedQuery` sample and
+        the run continues — under fault injection, a failed query is data,
+        not a reason to discard the measurement.  Only a
+        :class:`~repro.core.memory_governor.BrokerInvariantViolation`
+        aborts the run and re-raises: the budget invariant breaking poisons
+        every subsequent sample.
         """
         if concurrency < 1:
             raise ValueError(f"concurrency must be >= 1, got {concurrency}")
@@ -219,34 +403,39 @@ class QueryServer:
             for item in workload:
                 self.submit(item)
 
-        base_stats = (self.governor.stats() if self.governor is not None
-                      else GovernorStats())
-        base_broker = self.broker.stats()
+        base = self._snapshot_base()
         served: List[ServedQuery] = []
+        failed: List[FailedQuery] = []
         errors: List[BaseException] = []
         lock = threading.Lock()
 
         def worker(wid: int) -> None:
-            try:
-                for seq in range(queries_per_worker):
-                    idx = (wid + seq) % len(workload)
-                    with Timer() as t:
+            for seq in range(queries_per_worker):
+                idx = (wid + seq) % len(workload)
+                t = Timer()
+                try:
+                    with t:
                         res = self.submit(workload[idx])
-                    rec = ServedQuery(
-                        worker=wid, seq=seq, workload_idx=idx,
-                        wall_s=t.elapsed, temp_mb=res.total_temp_mb,
-                        grant_bytes=_min_grant_of(res),
-                        paths=_paths_of(res), scalar=res.scalar,
-                        relation=res.relation if keep_relations else None,
-                        mem_wait_s=sum(m.mem_wait_s for m in res.metrics),
-                        queue_wait_s=sum(m.queue_wait_s
-                                         for m in res.metrics),
-                        batched=any(m.batched for m in res.metrics))
+                except BrokerInvariantViolation as e:
+                    with lock:  # the one non-survivable failure
+                        errors.append(e)
+                    return
+                except (Exception, SimulatedCrash) as e:
                     with lock:
-                        served.append(rec)
-            except BaseException as e:  # surfaced after join, never silent
+                        failed.append(FailedQuery(
+                            worker=wid, seq=seq, workload_idx=idx,
+                            error=type(e).__name__, message=str(e),
+                            wall_s=t.elapsed))
+                    continue
+                except BaseException as e:  # KeyboardInterrupt etc.
+                    with lock:
+                        errors.append(e)
+                    return
+                rec = self._served_record(res, worker=wid, seq=seq, idx=idx,
+                                          wall_s=t.elapsed,
+                                          keep=keep_relations)
                 with lock:
-                    errors.append(e)
+                    served.append(rec)
 
         threads = [threading.Thread(target=worker, args=(w,), daemon=True)
                    for w in range(concurrency)]
@@ -258,20 +447,253 @@ class QueryServer:
         if errors:
             raise errors[0]
 
-        gov = (self.governor.stats() if self.governor is not None
-               else GovernorStats())
-        # report the governor's activity for THIS run (counters are
-        # cumulative; peak and invariant counters are monotone so the
-        # absolute values remain the right thing to assert on)
-        gov.grants -= base_stats.grants
-        gov.degraded -= base_stats.degraded
-        gov.waits -= base_stats.waits
-        gov.wait_s_total -= base_stats.wait_s_total
-        return ServeReport(
-            queries=served,
-            latency=latency_stats([q.wall_s for q in served]),
-            wall_s=run_t.elapsed,
-            total_temp_mb=sum(q.temp_mb for q in served),
-            governor=gov,
-            concurrency=concurrency,
-            broker=self.broker.stats().since(base_broker))
+        return self._build_report(
+            base, served, [], failed,
+            submitted=len(served) + len(failed),
+            wall_s=run_t.elapsed, concurrency=concurrency)
+
+    # -- open-loop stream ----------------------------------------------------
+    def serve_open(self, workloads: Mapping[str, Sequence],
+                   arrivals: Mapping[str, ArrivalProcess],
+                   duration_s: float, tenants: Sequence[TenantClass],
+                   workers: int = 4, warmup: int = 1,
+                   shed: bool = True, preempt: bool = True,
+                   keep_relations: bool = False) -> ServeReport:
+        """Open-loop SLO-aware serving: the fig13 driver.
+
+        ``workloads`` maps tenant name → query sequence; ``arrivals`` maps
+        tenant name → :class:`~repro.core.slo.ArrivalProcess` (each arrival
+        is an independent logical client — a storm of thousands of arrivals
+        models thousands of clients without thousands of threads); both key
+        sets must exactly match the names in ``tenants``.  A dispatcher
+        thread replays every arrival on the wall clock over ``duration_s``
+        seconds and a pool of ``workers`` threads drains the ready queue in
+        (priority, arrival) order.
+
+        Per arrival, in order:
+
+        1. **Admission** (``shed=True``): a sheddable tenant's query whose
+           quoted wait — queue backlog ahead of it × EWMA service time ÷
+           workers, plus the broker's memory-admission quote — already
+           exceeds its deadline is shed (:class:`ShedQuery`); running it
+           would burn capacity on a result nobody can use.  Non-sheddable
+           tenants are always admitted.
+        2. **Deadline enforcement at dequeue**: an admitted sheddable query
+           that starved past its deadline while queued is recorded as a
+           :class:`FailedQuery` (``error="DeadlineExceeded"``) — an
+           admission mistake, measured instead of served late.
+           Non-sheddable tenants run regardless; a late completion shows up
+           as ``slo_ok=False`` on the served record.
+        3. **Preemption** (``preempt=True``): a positive-priority tenant
+           whose memory admission would block first cancels one
+           floor-degraded linear operator mid-spill
+           (:meth:`~repro.core.resource_broker.ResourceBroker.
+           preempt_degraded`); the victim's operator re-runs on the tensor
+           path (``ServedQuery.preempted``) instead of holding the spill
+           wall in front of the premium tenant.
+
+        Latency is the arrival→completion **sojourn** — queueing included,
+        measured from the scheduled arrival time, so the report is free of
+        coordinated omission by construction.  Every arrival ends as
+        exactly one of served / shed / failed (``report.counts``).
+        """
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        if duration_s <= 0:
+            raise ValueError(f"duration_s must be > 0, got {duration_s}")
+        tenants = list(tenants)
+        if not tenants:
+            raise ValueError("need at least one TenantClass")
+        by_name = {t.name: t for t in tenants}
+        if len(by_name) != len(tenants):
+            raise ValueError("duplicate tenant names")
+        for label, mapping in (("workloads", workloads),
+                               ("arrivals", arrivals)):
+            if set(mapping) != set(by_name):
+                raise ValueError(
+                    f"{label} keys {sorted(mapping)} must match tenant "
+                    f"names {sorted(by_name)}")
+        workloads = {name: list(wl) for name, wl in workloads.items()}
+        for name, wl in workloads.items():
+            if not wl:
+                raise ValueError(f"empty workload for tenant {name!r}")
+
+        # Warmup: converge caches off the clock AND seed the service-time
+        # EWMA the admission quote needs before the first real arrival.
+        svc_ewma = 0.0
+        for r in range(max(1, warmup)):
+            for name in sorted(workloads):
+                for item in workloads[name]:
+                    try:
+                        with Timer() as t:
+                            self.submit(item)
+                    except BrokerInvariantViolation:
+                        raise
+                    except (Exception, SimulatedCrash):
+                        # a poisoned item fails here AND during serving —
+                        # there it becomes a FailedQuery sample, so warmup
+                        # must not abort the run over it
+                        continue
+                    svc_ewma = (t.elapsed if svc_ewma == 0.0
+                                else 0.7 * svc_ewma + 0.3 * t.elapsed)
+
+        # The full arrival schedule, merged across tenants in time order.
+        # Workload items cycle per tenant, so every item sees traffic.
+        events = []
+        for name in sorted(workloads):
+            ts = arrivals[name].times(duration_s)
+            n_items = len(workloads[name])
+            for i, t_off in enumerate(ts):
+                events.append((float(t_off), name, i % n_items))
+        events.sort()
+        submitted = len(events)
+
+        base = self._snapshot_base()
+        probe_bytes = self.session.executor.work_mem
+        served: List[ServedQuery] = []
+        shed_q: List[ShedQuery] = []
+        failed: List[FailedQuery] = []
+        errors: List[BaseException] = []
+        cond = threading.Condition()
+        ready: list = []        # heap of (-priority, seq, payload)
+        inflight = [0]
+        done_dispatching = [False]
+        abort = [False]
+        ewma = [svc_ewma]
+
+        def quoted_wait(tc: TenantClass) -> float:
+            """Admission-time wait estimate: ready-queue work ahead of this
+            tenant (same or higher priority) plus in-flight work, spread
+            over the pool, plus the broker's memory-admission quote."""
+            with cond:
+                ahead = inflight[0] + sum(
+                    1 for e in ready if -e[0] >= tc.priority)
+                est = (ahead / workers) * ewma[0]
+            if self.governor is not None:
+                q = self.broker.price(
+                    ResourceRequest("memory", need_bytes=probe_bytes))
+                est += q.expected_wait_s
+            return est
+
+        def dispatcher() -> None:
+            t0 = time.perf_counter()
+            for seq, (t_off, name, idx) in enumerate(events):
+                # sleep to the scheduled arrival in small slices so an
+                # abort (invariant violation) stops the storm promptly
+                while not abort[0]:
+                    lag = (t0 + t_off) - time.perf_counter()
+                    if lag <= 0:
+                        break
+                    time.sleep(min(lag, 0.05))
+                if abort[0]:
+                    return
+                tc = by_name[name]
+                if shed and tc.sheddable:
+                    est = quoted_wait(tc)
+                    if est > tc.deadline_s:
+                        with cond:
+                            shed_q.append(ShedQuery(
+                                tenant=name, seq=seq, workload_idx=idx,
+                                arrival_s=t_off, quoted_wait_s=est,
+                                deadline_s=tc.deadline_s))
+                        continue
+                with cond:
+                    heapq.heappush(ready,
+                                   (-tc.priority, seq, (t0 + t_off, name,
+                                                        idx)))
+                    cond.notify()
+            with cond:
+                done_dispatching[0] = True
+                cond.notify_all()
+
+        def worker(wid: int) -> None:
+            while True:
+                with cond:
+                    while not ready and not done_dispatching[0] \
+                            and not abort[0]:
+                        cond.wait()
+                    if abort[0] or (not ready and done_dispatching[0]):
+                        return
+                    _, seq, (arr_abs, name, idx) = heapq.heappop(ready)
+                    inflight[0] += 1
+                tc = by_name[name]
+                try:
+                    lag = time.perf_counter() - arr_abs
+                    if tc.sheddable and lag > tc.deadline_s:
+                        # admitted, then starved past its deadline in queue:
+                        # an admission mistake, recorded rather than served
+                        # late (the result is already worthless)
+                        with cond:
+                            failed.append(FailedQuery(
+                                worker=wid, seq=seq, workload_idx=idx,
+                                error="DeadlineExceeded",
+                                message=f"queued {lag:.3f}s > deadline "
+                                        f"{tc.deadline_s:.3f}s",
+                                tenant=name, wall_s=lag))
+                        continue
+                    if preempt and tc.priority > 0 \
+                            and self.governor is not None:
+                        _, would_block, waiters = \
+                            self.governor.admission_probe(probe_bytes)
+                        if would_block or waiters > 0:
+                            # a premium tenant must not park behind a
+                            # best-effort spill wall: cancel one degraded
+                            # linear operator; it re-runs on the tensor path
+                            self.broker.preempt_degraded(1)
+                    with Timer() as t:
+                        res = self.submit(workloads[name][idx])
+                    sojourn = time.perf_counter() - arr_abs
+                    rec = self._served_record(
+                        res, worker=wid, seq=seq, idx=idx, wall_s=sojourn,
+                        keep=keep_relations, tenant=name,
+                        arrival_s=0.0, service_s=t.elapsed,
+                        slo_ok=sojourn <= tc.deadline_s)
+                    with cond:
+                        served.append(rec)
+                        ewma[0] = (t.elapsed if ewma[0] == 0.0
+                                   else 0.7 * ewma[0] + 0.3 * t.elapsed)
+                except BrokerInvariantViolation as e:
+                    with cond:  # the one non-survivable failure
+                        errors.append(e)
+                        abort[0] = True
+                        cond.notify_all()
+                    return
+                except (Exception, SimulatedCrash) as e:
+                    with cond:
+                        failed.append(FailedQuery(
+                            worker=wid, seq=seq, workload_idx=idx,
+                            error=type(e).__name__, message=str(e),
+                            tenant=name,
+                            wall_s=time.perf_counter() - arr_abs))
+                except BaseException as e:  # KeyboardInterrupt etc.
+                    with cond:
+                        errors.append(e)
+                        abort[0] = True
+                        cond.notify_all()
+                    return
+                finally:
+                    with cond:
+                        inflight[0] -= 1
+
+        disp = threading.Thread(target=dispatcher, daemon=True)
+        pool = [threading.Thread(target=worker, args=(w,), daemon=True)
+                for w in range(workers)]
+        with Timer() as run_t:
+            disp.start()
+            for th in pool:
+                th.start()
+            disp.join()
+            for th in pool:
+                th.join()
+        if errors:
+            raise errors[0]
+
+        # arrival offsets were only known to the dispatcher on the absolute
+        # clock; stamp the report-relative offsets back onto the records
+        for rec in served:
+            rec.arrival_s = events[rec.seq][0]
+        for f in failed:
+            f.arrival_s = events[f.seq][0]
+        return self._build_report(
+            base, served, shed_q, failed, submitted=submitted,
+            wall_s=run_t.elapsed, concurrency=workers)

@@ -72,7 +72,8 @@ class Session:
                  profile: Optional[RuntimeProfile] = None,
                  fuse: bool = True, spill_root: Optional[str] = None,
                  governor: Optional["MemoryGovernor"] = None,
-                 broker: Optional["ResourceBroker"] = None):
+                 broker: Optional["ResourceBroker"] = None,
+                 faults=None, retry=None):
         if broker is not None and governor is not None \
                 and broker.governor is not governor:
             raise ValueError(
@@ -101,7 +102,8 @@ class Session:
         self.governor = governor
         self.executor = Executor(work_mem, policy=policy, selector=selector,
                                  spill_root=spill_root, fuse=fuse,
-                                 governor=governor, broker=broker)
+                                 governor=governor, broker=broker,
+                                 faults=faults, retry=retry)
         # the executor resolves the broker (private one per governor, the
         # process default otherwise); the session exposes it as the single
         # handle for leases, quotes and queue stats

@@ -15,6 +15,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from .faults import FaultInjector, SimulatedCrash
 from .metrics import SpillAccount
 from .relation import Relation
 
@@ -22,10 +23,19 @@ __all__ = ["SpillManager"]
 
 
 class SpillManager:
-    """Owns a temp directory; writes/reads columnar spill files with accounting."""
+    """Owns a temp directory; writes/reads columnar spill files with accounting.
 
-    def __init__(self, root: Optional[str] = None):
+    ``faults`` wires the spill-write path into a
+    :class:`~repro.core.faults.FaultInjector`: every column write first asks
+    the injector, which may raise a transient
+    :class:`~repro.core.faults.SpillIOError` or a
+    :class:`~repro.core.faults.SimulatedCrash` (a mid-write worker death —
+    the crash-consistency regression)."""
+
+    def __init__(self, root: Optional[str] = None,
+                 faults: Optional[FaultInjector] = None):
         self.dir = tempfile.mkdtemp(prefix="repro_spill_", dir=root)
+        self.faults = faults
         self._counter = 0
 
     # -- lifecycle -----------------------------------------------------------
@@ -46,21 +56,40 @@ class SpillManager:
     def write_relation(self, rel: Relation, tag: str, account: SpillAccount) -> str:
         """Write a relation as one .npy file per column; returns the base path.
 
-        A write failure (disk full, permission change mid-run) removes the
-        partial spill directory before re-raising: a half-written run left
-        behind would later be read back as a *truncated relation* by
-        ``read_relation``/``RunReader`` — silently wrong results instead of
-        the loud error the failure deserves — and would leak temp space for
-        the life of the manager."""
+        Crash-consistent finalize: columns land in a ``<base>.tmp`` staging
+        directory, every file (and the directory entry) is fsynced, and only
+        then is the directory atomically renamed to its final path.  A
+        worker killed at ANY instant therefore leaves either a fully-visible
+        complete run or an invisible ``.tmp`` orphan — never a final-named
+        dir holding a readable-but-truncated relation (which
+        ``read_relation``/``RunReader`` would return as silently wrong
+        results).  An ordinary write failure (disk full, permission change
+        mid-run) removes the staging dir before re-raising so no temp space
+        leaks; a :class:`~repro.core.faults.SimulatedCrash` deliberately
+        skips that cleanup — a killed process runs no handlers, which is
+        exactly what the crash-consistency regression exercises."""
         base = self._next_path(tag)
-        os.makedirs(base, exist_ok=True)
+        tmp = base + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
         try:
             for name, col in rel.columns.items():
-                np.save(os.path.join(base, name + ".npy"), col,
-                        allow_pickle=False)
+                path = os.path.join(tmp, name + ".npy")
+                if self.faults is not None:
+                    self.faults.on_spill_column(path)
+                np.save(path, col, allow_pickle=False)
+                with open(path, "rb") as f:
+                    os.fsync(f.fileno())
                 account.write(col.nbytes)
+            dfd = os.open(tmp, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+            os.rename(tmp, base)  # atomic publish: all columns or nothing
+        except SimulatedCrash:
+            raise  # a killed worker cleans nothing; .tmp quarantines the wreck
         except BaseException:
-            shutil.rmtree(base, ignore_errors=True)
+            shutil.rmtree(tmp, ignore_errors=True)
             raise
         account.files_created += len(rel.columns)
         return base

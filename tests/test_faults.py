@@ -1,0 +1,153 @@
+"""Fault-injection harness: taxonomy contracts, retry policy, injector sites."""
+import pytest
+
+from repro.core import (DeviceDispatchError, FaultInjector, GrantTimeout,
+                        PreemptedError, QueryRejected, RetryPolicy,
+                        SimulatedCrash, SpillIOError, TransientError)
+
+
+# -- taxonomy ----------------------------------------------------------------
+
+def test_transient_subtypes():
+    assert issubclass(SpillIOError, TransientError)
+    assert issubclass(DeviceDispatchError, TransientError)
+    assert issubclass(GrantTimeout, TransientError)
+
+
+def test_grant_timeout_is_a_timeout_error():
+    # fig12's batch tenant catches TimeoutError around memory_lease; an
+    # injected grant timeout must keep flowing through that handler
+    assert issubclass(GrantTimeout, TimeoutError)
+    with pytest.raises(TimeoutError):
+        raise GrantTimeout("injected")
+
+
+def test_spill_io_error_is_an_os_error():
+    assert issubclass(SpillIOError, OSError)
+
+
+def test_simulated_crash_skips_except_exception():
+    # a killed worker runs no cleanup handlers: `except Exception` must not
+    # see it, only an explicit BaseException handler may
+    assert issubclass(SimulatedCrash, BaseException)
+    assert not issubclass(SimulatedCrash, Exception)
+    with pytest.raises(SimulatedCrash):
+        try:
+            raise SimulatedCrash("killed")
+        except Exception:  # pragma: no cover - must NOT catch
+            pytest.fail("except Exception caught a simulated crash")
+
+
+def test_admission_outcomes_are_not_transient():
+    # shedding and deadline misses are final classifications, not retryable
+    assert not issubclass(QueryRejected, TransientError)
+    assert not issubclass(PreemptedError, TransientError)
+
+
+# -- retry policy ------------------------------------------------------------
+
+def test_backoff_within_jitter_envelope():
+    p = RetryPolicy(max_attempts=5, base_s=0.01, cap_s=0.05, seed=3)
+    for attempt in range(1, 10):
+        ceiling = min(0.05, 0.01 * 2 ** (attempt - 1))
+        for _ in range(20):
+            d = p.backoff(attempt)
+            assert 0.0 <= d <= ceiling
+
+
+def test_backoff_is_seeded():
+    a = RetryPolicy(seed=11)
+    b = RetryPolicy(seed=11)
+    assert [a.backoff(i) for i in (1, 2, 3, 4)] == \
+           [b.backoff(i) for i in (1, 2, 3, 4)]
+
+
+def test_retry_policy_validates():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+# -- injector ----------------------------------------------------------------
+
+def test_injector_validates_probabilities():
+    with pytest.raises(ValueError):
+        FaultInjector(spill_io_p=1.5)
+    with pytest.raises(ValueError):
+        FaultInjector(device_fail_p=-0.1)
+
+
+def test_injector_off_by_default():
+    inj = FaultInjector(seed=0)
+    for _ in range(50):
+        inj.on_spill_column("x")
+        inj.on_device_dispatch()
+        inj.on_memory_grant()
+    assert inj.total_injected == 0
+
+
+def test_injector_certain_faults_fire_and_count():
+    inj = FaultInjector(seed=0, spill_io_p=1.0, device_fail_p=1.0,
+                        grant_timeout_p=1.0)
+    with pytest.raises(SpillIOError):
+        inj.on_spill_column("p")
+    with pytest.raises(DeviceDispatchError):
+        inj.on_device_dispatch()
+    with pytest.raises(GrantTimeout):
+        inj.on_memory_grant()
+    c = inj.counts()
+    assert (c["spill_io"], c["device_fail"], c["grant_timeout"]) == (1, 1, 1)
+    assert inj.total_injected == 3
+
+
+def test_injector_schedule_is_seeded():
+    def schedule(seed):
+        inj = FaultInjector(seed=seed, spill_io_p=0.3)
+        fired = []
+        for i in range(100):
+            try:
+                inj.on_spill_column(str(i))
+                fired.append(False)
+            except SpillIOError:
+                fired.append(True)
+        return fired
+
+    assert schedule(5) == schedule(5)
+    assert schedule(5) != schedule(6)
+    assert any(schedule(5))
+
+
+def test_sites_roll_independent_rngs():
+    # enabling one fault class must not perturb another's schedule
+    def spill_schedule(with_device: bool):
+        inj = FaultInjector(seed=9, spill_io_p=0.3,
+                            device_fail_p=0.5 if with_device else 0.0)
+        fired = []
+        for i in range(60):
+            if with_device:
+                try:
+                    inj.on_device_dispatch()
+                except DeviceDispatchError:
+                    pass
+            try:
+                inj.on_spill_column(str(i))
+                fired.append(False)
+            except SpillIOError:
+                fired.append(True)
+        return fired
+
+    assert spill_schedule(False) == spill_schedule(True)
+
+
+def test_arm_spill_kill_counts_down_and_disarms():
+    inj = FaultInjector(seed=0)
+    inj.arm_spill_kill(after_columns=3)
+    inj.on_spill_column("a")
+    inj.on_spill_column("b")
+    with pytest.raises(SimulatedCrash):
+        inj.on_spill_column("c")
+    # one-shot: disarmed after firing
+    for i in range(10):
+        inj.on_spill_column(str(i))
+    assert inj.counts()["spill_kill"] == 1
+    with pytest.raises(ValueError):
+        inj.arm_spill_kill(after_columns=0)

@@ -1,0 +1,89 @@
+"""SLO primitives: tenant contracts and open-loop arrival processes."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ArrivalProcess, TenantClass
+
+
+# -- TenantClass -------------------------------------------------------------
+
+def test_tenant_defaults():
+    t = TenantClass("be", deadline_s=0.5)
+    assert t.priority == 0 and t.sheddable
+
+
+def test_tenant_rejects_nonpositive_deadline():
+    with pytest.raises(ValueError):
+        TenantClass("x", deadline_s=0.0)
+    with pytest.raises(ValueError):
+        TenantClass("x", deadline_s=-1.0)
+
+
+def test_tenant_is_frozen():
+    t = TenantClass("prem", deadline_s=1.0, priority=2, sheddable=False)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        t.priority = 5
+
+
+# -- ArrivalProcess ----------------------------------------------------------
+
+def test_poisson_times_sorted_and_in_range():
+    ts = ArrivalProcess(rate_qps=50, seed=1).times(10.0)
+    assert len(ts) > 0
+    assert np.all(np.diff(ts) >= 0)
+    assert ts[0] >= 0.0 and ts[-1] < 10.0
+
+
+def test_times_are_seeded():
+    a = ArrivalProcess(rate_qps=20, seed=7).times(5.0)
+    b = ArrivalProcess(rate_qps=20, seed=7).times(5.0)
+    c = ArrivalProcess(rate_qps=20, seed=8).times(5.0)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_poisson_rate_is_roughly_honored():
+    # long window + fixed seed: deterministic, so a tight-ish band is safe
+    ts = ArrivalProcess(rate_qps=100, seed=3).times(50.0)
+    assert 0.9 * 5000 < len(ts) < 1.1 * 5000
+
+
+def test_zero_rate_is_silent():
+    assert len(ArrivalProcess(rate_qps=0.0, seed=0).times(5.0)) == 0
+
+
+def test_phases_burst_and_gap():
+    # calm 2s @ 5qps, storm 1s @ 200qps, silence 2s @ 0
+    ap = ArrivalProcess(phases=[(2.0, 5), (1.0, 200), (2.0, 0)], seed=2)
+    ts = ap.times(5.0)
+    calm = np.sum(ts < 2.0)
+    storm = np.sum((ts >= 2.0) & (ts < 3.0))
+    silent = np.sum(ts >= 3.0)
+    assert storm > 5 * calm  # the burst dominates
+    assert silent == 0       # zero-rate phase generates nothing
+    assert storm > 100
+
+
+def test_phases_cycle_past_their_total():
+    # 1s on / 1s off cycled over 6s -> arrivals only in even-second windows
+    ts = ArrivalProcess(phases=[(1.0, 50), (1.0, 0)], seed=4).times(6.0)
+    assert len(ts) > 0
+    assert np.all((ts.astype(np.int64) % 2) == 0)
+
+
+def test_phase_validation():
+    with pytest.raises(ValueError):
+        ArrivalProcess(phases=[])
+    with pytest.raises(ValueError):
+        ArrivalProcess(phases=[(0.0, 5)])
+    with pytest.raises(ValueError):
+        ArrivalProcess(phases=[(1.0, -2)])
+    with pytest.raises(ValueError):
+        ArrivalProcess(rate_qps=-1)
+
+
+def test_max_n_guard_raises_instead_of_truncating():
+    with pytest.raises(ValueError):
+        ArrivalProcess(rate_qps=1e6, seed=0).times(10.0, max_n=1000)
