@@ -1,14 +1,17 @@
-"""Flag p50 regressions in a fresh benchmark run vs the committed baseline.
+"""Flag p50 and scaling regressions in a fresh benchmark run vs the baseline.
 
     PYTHONPATH=src python -m benchmarks.run --fast --save results/bench_fresh.json
     PYTHONPATH=src python -m benchmarks.compare results/bench_fresh.json
 
-Walks both summaries for numeric leaves whose key mentions ``p50`` (seconds),
-prints a ratio table, and exits non-zero when any shared p50 exceeds the
-baseline by more than ``--threshold``x.  Entries present in only one file are
-reported but never fail the run (new benchmarks land; subsets run with
-``--only``), so the gate stays usable on partial sweeps.  CI runs this with
-``continue-on-error`` — shared-runner timing noise should flag, not block.
+Walks both summaries for numeric leaves whose key mentions ``p50`` (seconds,
+lower is better) or ``speedup`` (a scaling ratio, higher is better — fig15's
+sharded-over-single throughput gain), prints a ratio table, and exits
+non-zero when any shared p50 exceeds the baseline by more than
+``--threshold``x or any shared speedup falls below baseline/``--threshold``.
+Entries present in only one file are reported but never fail the run (new
+benchmarks land; subsets run with ``--only``), so the gate stays usable on
+partial sweeps.  CI runs this with ``continue-on-error`` — shared-runner
+timing noise should flag, not block.
 """
 from __future__ import annotations
 
@@ -19,12 +22,14 @@ import sys
 from typing import Dict, Tuple
 
 
-def _p50_leaves(obj, prefix: Tuple[str, ...] = ()) -> Dict[Tuple[str, ...], float]:
+def _leaves(obj, token: str,
+            prefix: Tuple[str, ...] = ()) -> Dict[Tuple[str, ...], float]:
+    """Numeric leaves whose FINAL key mentions ``token``."""
     out: Dict[Tuple[str, ...], float] = {}
     if isinstance(obj, dict):
         for k, v in obj.items():
-            out.update(_p50_leaves(v, prefix + (str(k),)))
-    elif isinstance(obj, (int, float)) and prefix and "p50" in prefix[-1]:
+            out.update(_leaves(v, token, prefix + (str(k),)))
+    elif isinstance(obj, (int, float)) and prefix and token in prefix[-1]:
         out[prefix] = float(obj)
     return out
 
@@ -35,34 +40,43 @@ def main() -> int:
     ap.add_argument("--baseline", default="results/bench_summary.json",
                     help="committed reference summary")
     ap.add_argument("--threshold", type=float, default=1.5,
-                    help="flag fresh/baseline p50 ratios above this")
+                    help="flag fresh/baseline p50 ratios above this, and "
+                         "baseline/fresh speedup ratios above this")
     args = ap.parse_args()
 
-    base = _p50_leaves(json.loads(pathlib.Path(args.baseline).read_text()))
-    fresh = _p50_leaves(json.loads(pathlib.Path(args.fresh).read_text()))
+    base_doc = json.loads(pathlib.Path(args.baseline).read_text())
+    fresh_doc = json.loads(pathlib.Path(args.fresh).read_text())
 
     regressions = []
-    for key in sorted(base):
-        name = "/".join(key)
-        if key not in fresh:
-            print(f"SKIPPED     {name} (not in fresh run)")
-            continue
-        bv, fv = base[key], fresh[key]
-        ratio = fv / bv if bv > 0 else float("inf")
-        flag = ratio > args.threshold
-        status = "REGRESSION" if flag else "ok"
-        print(f"{status:11s} {name}: {bv:.4g}s -> {fv:.4g}s ({ratio:.2f}x)")
-        if flag:
-            regressions.append(name)
-    for key in sorted(set(fresh) - set(base)):
-        print(f"NEW         {'/'.join(key)}: {fresh[key]:.4g}s (no baseline)")
+    # latency leaves: lower is better, flag fresh/base > threshold
+    # scaling leaves: higher is better, flag base/fresh > threshold
+    for token, unit, worse in (("p50", "s", lambda b, f: f / b),
+                               ("speedup", "x", lambda b, f: b / f)):
+        base = _leaves(base_doc, token)
+        fresh = _leaves(fresh_doc, token)
+        for key in sorted(base):
+            name = "/".join(key)
+            if key not in fresh:
+                print(f"SKIPPED     {name} (not in fresh run)")
+                continue
+            bv, fv = base[key], fresh[key]
+            ratio = worse(bv, fv) if bv > 0 and fv > 0 else float("inf")
+            flag = ratio > args.threshold
+            status = "REGRESSION" if flag else "ok"
+            print(f"{status:11s} {name}: {bv:.4g}{unit} -> {fv:.4g}{unit} "
+                  f"({ratio:.2f}x worse)" if flag else
+                  f"{status:11s} {name}: {bv:.4g}{unit} -> {fv:.4g}{unit}")
+            if flag:
+                regressions.append(name)
+        for key in sorted(set(fresh) - set(base)):
+            print(f"NEW         {'/'.join(key)}: {fresh[key]:.4g}{unit} "
+                  f"(no baseline)")
 
     if regressions:
-        print(f"\n{len(regressions)} p50 regression(s) above "
+        print(f"\n{len(regressions)} regression(s) beyond "
               f"{args.threshold:.2f}x: {', '.join(regressions)}")
         return 1
-    print(f"\nno p50 regressions above {args.threshold:.2f}x "
-          f"({len(base)} baseline entries checked)")
+    print(f"\nno p50/speedup regressions beyond {args.threshold:.2f}x")
     return 0
 
 

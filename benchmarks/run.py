@@ -9,9 +9,23 @@ from __future__ import annotations
 import argparse
 import inspect
 import json
+import os
 import pathlib
 import sys
 import time
+
+
+def _ensure_device_mesh() -> None:
+    """Give the benchmarks the same 8-way forced host mesh the test suite
+    gets from tests/conftest.py (fig15 shards over it).  Must run before
+    jax initializes, which is why `from .figures import ALL` stays inside
+    main(); a user-provided XLA_FLAGS is always respected."""
+    if "jax" in sys.modules:
+        return  # too late to influence device discovery; leave it alone
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
 
 
 def main() -> None:
@@ -29,6 +43,7 @@ def main() -> None:
     ap.add_argument("--save", default="results/bench_fresh.json")
     args = ap.parse_args()
 
+    _ensure_device_mesh()
     from .figures import ALL
     names = args.only.split(",") if args.only else list(ALL)
     print("name,us_per_call,derived")

@@ -63,6 +63,13 @@ class CostConstants:
     # host→device transfer (seconds/byte); multiplied by the *pending* upload
     # bytes — zero for base tables already resident in the device cache
     h2d_byte_cost: float = 1.0e-10
+    # -- v7: sharded (partition-parallel) fragment terms --------------------
+    # per-lane dispatch overhead of a gang launch, as a fraction of
+    # fused_fixed_cost per mesh device
+    shard_lane_cost: float = 0.15
+    # per-row discount of partition-resident work: each partition's run
+    # fits a cache level the monolithic working set overflows
+    shard_residency_discount: float = 0.75
 
 
 @dataclasses.dataclass
@@ -93,6 +100,9 @@ class FragmentEstimate:
     t_linear: float
     t_tensor: float       # the FUSED device-resident pipeline
     h2d_bytes: int        # pending host→device bytes charged to the tensor path
+    # the partition-parallel fused pipeline over device_count mesh lanes
+    # (inf when the fragment is not sharded-eligible or device_count <= 1)
+    t_tensor_sharded: float = math.inf
 
 
 class CostModel:
@@ -171,7 +181,10 @@ class CostModel:
                           row_bytes_p: int, est_out: int, work_mem: int,
                           num_sort_keys: int = 0, has_filter: bool = False,
                           has_agg: bool = False, h2d_bytes: int = 0,
-                          filter_selectivity: float = 1.0) -> FragmentEstimate:
+                          filter_selectivity: float = 1.0,
+                          device_count: int = 1,
+                          partition_skew: float = 1.0,
+                          sharded_h2d_bytes: int = 0) -> FragmentEstimate:
         """Cost a whole fusable fragment instead of its operators in isolation.
 
         The linear side is the sum of its per-operator costs (join + sort over
@@ -222,8 +235,34 @@ class CostModel:
         t_ten = (self.c.fused_fixed_cost + self.c.host_sync_cost
                  + self.c.h2d_byte_cost * h2d_bytes
                  + self.c.fused_row_cost * rows)
+
+        # Sharded tensor path (aggregate roots only): the build-side
+        # n·log n sort term DISAPPEARS — the partitioned layout caches
+        # key-sorted runs, so per-query work is a searchsorted probe over
+        # cache-resident partitions — and the remaining per-row work takes
+        # the residency discount.  ``partition_skew`` (max/mean partition
+        # fill) inflates the expansion/aggregate terms: the padded
+        # capacity, and on a real mesh the critical path, follow the
+        # fullest partition.  A sort stage costs nothing here (the
+        # supported aggregates are order-independent; the per-shard
+        # program skips it).  The gang launch pays a per-lane slice of
+        # fixed cost on top of the fused dispatch.
+        t_sh = math.inf
+        if device_count > 1 and has_agg:
+            skew = max(1.0, float(partition_skew))
+            disc = self.c.shard_residency_discount
+            rows_sh = n_build / 4  # residual touch of the cached runs
+            rows_sh += (n_probe + est_out * skew) * disc
+            if has_filter:
+                rows_sh += est_out * skew * disc
+            rows_sh += est_out * disc  # aggregate reduction
+            t_sh = (self.c.fused_fixed_cost
+                    * (1 + self.c.shard_lane_cost * device_count)
+                    + self.c.host_sync_cost
+                    + self.c.h2d_byte_cost * sharded_h2d_bytes
+                    + self.c.fused_row_cost * rows_sh)
         return FragmentEstimate(spill == 0, int(spill), passes, t_lin, t_ten,
-                                int(h2d_bytes))
+                                int(h2d_bytes), t_tensor_sharded=t_sh)
 
     # -- calibration -----------------------------------------------------------
     def calibrate(self, n: int = 200_000, seed: int = 0) -> CostConstants:

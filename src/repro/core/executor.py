@@ -168,9 +168,12 @@ class Executor:
                  governor: Optional[MemoryGovernor] = None,
                  broker: Optional[ResourceBroker] = None,
                  faults: Optional[FaultInjector] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 max_shards: int = 1):
         if policy not in ("auto", "linear", "tensor"):
             raise ValueError(policy)
+        if int(max_shards) < 1:
+            raise ValueError(f"max_shards must be >= 1, got {max_shards}")
         force = None if policy == "auto" else policy
         self.selector = selector or PathSelector(work_mem, force=force)
         if selector is not None and force is not None:
@@ -215,6 +218,12 @@ class Executor:
         # neighbor's path.
         self.faults = faults if faults is not None else broker.faults
         self.retry = retry if retry is not None else RetryPolicy()
+        # Lane fan-out ceiling for fused fragments: 1 (default) keeps every
+        # dispatch on the single-device path; N > 1 lets choose_fragment
+        # price the partition-parallel sharded program (capped at the mesh's
+        # actual device count at decision time) and run_fused fan out over N
+        # broker lanes when it wins.
+        self.max_shards = int(max_shards)
         self._tls = _threading.local()
 
     # -- memory grants -------------------------------------------------------
@@ -238,7 +247,7 @@ class Executor:
             req = min(self.work_mem, max(1, int(need_bytes)))
         return self.governor.would_grant(req)
 
-    def _quotes(self, need_bytes: int):
+    def _quotes(self, need_bytes: int, lanes: int = 1):
         """Broker pricing for one deferred decision: ``(mem_quote,
         dev_quote, reservation)``.  The memory quote is probed with EXACTLY
         the request :meth:`_granted` would make (same ``min(work_mem,
@@ -268,7 +277,8 @@ class Executor:
             # are priced against the executor's budget even when the
             # selector was constructed with a different one
             mem = PressureQuote("memory", self.work_mem, 0.0, 0, False)
-        dev = self.broker.price(ResourceRequest("device"))
+        dev = self.broker.price(ResourceRequest("device",
+                                                lanes=max(1, int(lanes))))
         return mem, dev, rsv
 
     @contextlib.contextmanager
@@ -515,17 +525,20 @@ class Executor:
         # expected admission wait) the same answer the join's grant
         # acquisition would get
         mem_q, dev_q, rsv = self._quotes(
-            self.selector.model.hash_need_bytes(len(build)))
+            self.selector.model.hash_need_bytes(len(build)),
+            lanes=self.max_shards)
         try:
             decision = self.selector.choose_fragment(
-                spec, build, probe, mem_quote=mem_q, dev_quote=dev_q)
+                spec, build, probe, mem_quote=mem_q, dev_quote=dev_q,
+                max_shards=self.max_shards)
             if decision.path != "tensor":
                 return None  # generic walk re-quotes (and re-reserves) itself
             decisions.append(decision)
             try:
                 result, m = run_fused(spec, build, probe,
                                       decision_reason=decision.reason,
-                                      broker=self.broker)
+                                      broker=self.broker,
+                                      shards=decision.shards)
             except TransientError:
                 # an injected/real infrastructure fault is NOT a fallback
                 # case: it must reach the retry loop (and the device-failure
@@ -552,7 +565,11 @@ class Executor:
             self._record_profile(metrics, verified_warm=True)
             prof = getattr(self.selector, "profile", None)
             if prof is not None:
-                prof.record("fragment", "tensor", len(build) + len(probe),
+                # sharded runs feed their own profile cell: the two fused
+                # programs have different cost structures, and blending
+                # them would drag each estimate toward the other's regime
+                frag_path = "tensor_sharded" if m.devices > 1 else "tensor"
+                prof.record("fragment", frag_path, len(build) + len(probe),
                             m.wall_s - m.queue_wait_s)
         if isinstance(result, Relation):
             return QueryResult(result, None, metrics, decisions)

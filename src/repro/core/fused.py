@@ -39,8 +39,8 @@ from .relation import Relation
 from .table_cache import get_device_columns, key_stats
 from .tensor_engine import capacity_bucket
 
-__all__ = ["FusedSpec", "match_fragment", "run_fused", "pipeline_cache_info",
-           "pipeline_cache_clear"]
+__all__ = ["FusedSpec", "match_fragment", "run_fused", "sharded_supported",
+           "pipeline_cache_info", "pipeline_cache_clear"]
 
 _I64_MAX = np.iinfo(np.int64).max
 
@@ -342,6 +342,40 @@ def _join_sorted(bk, pk, n_build, n_probe, capacity):
     return build_idx, probe_idx, valid, total, has_dup
 
 
+def _join_sorted_run(sk, pk, n_probe, capacity):
+    """Join core over a PRE-SORTED build run (the sharded path).
+
+    The partitioned layout (:mod:`repro.core.partition`) stores each build
+    partition key-sorted with sentinel padding at the tail, so alignment is
+    a searchsorted probe over an already-ordered, cache-resident run —
+    **no per-query device sort at all**.  ``build_idx`` therefore indexes
+    the stored run directly (the single-device core needs an ``order``
+    indirection because it sorts inside the program).  Expansion is the
+    same scatter + running-max forward fill as :func:`_join_sorted`.
+    """
+    B = sk.shape[0]
+    P = pk.shape[0]
+    iota_p = jnp.arange(P)
+    left = jnp.searchsorted(sk, pk, side="left")
+    right = jnp.searchsorted(sk, pk, side="right")
+    # sentinel-padded probe rows contribute nothing (same key-domain
+    # contract as the single-device core)
+    counts = jnp.where((iota_p < n_probe) & (pk != _I64_MAX),
+                       right - left, 0)
+    ends = jnp.cumsum(counts)
+    starts = ends - counts
+    total = ends[-1]
+    slot = jnp.arange(capacity, dtype=ends.dtype)
+    seed_slots = jnp.full((capacity + 1,), -1, jnp.int64)
+    tgt = jnp.where(counts > 0, jnp.minimum(starts, capacity), capacity)
+    seeded = seed_slots.at[tgt].max(iota_p)[:capacity]
+    probe_idx = jnp.maximum(jax.lax.cummax(seeded), 0)
+    build_pos = left[probe_idx] + (slot - starts[probe_idx])
+    build_idx = jnp.clip(build_pos, 0, B - 1)
+    valid = slot < total
+    return build_idx, probe_idx, valid, total
+
+
 def _join_dense(bk, pk, n_build, n_probe, capacity, domain: int, kmin):
     """Dense-domain join core: the key IS a coordinate axis.
 
@@ -470,6 +504,117 @@ def _build_program(spec: FusedSpec, key: str, capacity: int,
 
 
 # ---------------------------------------------------------------------------
+# Sharded program: partition-parallel fragment over a device mesh
+# ---------------------------------------------------------------------------
+
+def sharded_supported(spec: FusedSpec, build: Relation,
+                      probe: Relation) -> bool:
+    """Host-side eligibility of a fragment for partition-parallel execution.
+
+    The sharded path merges per-partition results with device-side
+    combines (psum/pmin/pmax over the mesh axis), so only scalar
+    AGGREGATE roots qualify — a relation root would need a global merge
+    that re-serializes the partitions.  Bit-for-bit parity with the
+    single-device program is part of the contract, which admits exactly
+    the order-independent reductions: ``count`` always; ``min``/``max``
+    always (exact for floats too); ``sum`` only over integer columns —
+    integer addition is associative even under wraparound, while a float
+    psum of per-partition partials reassociates the single program's
+    reduction order.  Join keys must be integers (the partition hash and
+    the sentinel padding contract are int64).  A fragment's sort stage is
+    irrelevant under these aggregates and is skipped per shard.
+    """
+    if spec.agg is None:
+        return False
+    key = spec.join_key
+    for rel in (build, probe):
+        if not isinstance(rel, Relation) or key not in rel.names:
+            return False
+        if not np.issubdtype(rel[key].dtype, np.integer):
+            return False
+    col, fn = spec.agg
+    if fn == "count":
+        return True
+    # the _JoinView naming contract: build wins b_<x> collisions
+    if col.startswith("b_") and col[2:] in build.names and col[2:] != key:
+        dtype = build[col[2:]].dtype
+    elif col in probe.names:
+        dtype = probe[col].dtype
+    else:
+        return False
+    if fn in ("min", "max"):
+        return True
+    return fn == "sum" and bool(np.issubdtype(dtype, np.integer))
+
+
+def _build_sharded_program(spec: FusedSpec, key: str, num_parts: int,
+                           capacity: int):
+    """Trace-time closure for one sharded (fragment, partitions, capacity)
+    cache entry: the per-shard fragment body under ``shard_map`` over the
+    relational mesh, with device-side combines so the host still fetches
+    ONE replicated result dict per query.
+
+    ``max_part_total`` (the largest single partition's match count) rides
+    the fetch next to the psum'd total so the driver can verify its
+    optimistic per-partition capacity without a second sync.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PSpec
+
+    from ..distributed.sharding import PART_AXIS, relational_mesh
+
+    mesh = relational_mesh(num_parts)
+    col_name, fn = spec.agg
+
+    def shard_body(bcols, pcols, n_build, n_probe):
+        # each shard sees a (1, bucket) block of its partition: squeeze
+        bcols = {k: v[0] for k, v in bcols.items()}
+        pcols = {k: v[0] for k, v in pcols.items()}
+        del n_build  # build padding is sentinel-keyed; no live-row mask
+        npr = n_probe[0]
+        sk = bcols[key].astype(jnp.int64)
+        pk = pcols[key].astype(jnp.int64)
+        build_idx, probe_idx, valid, total = _join_sorted_run(
+            sk, pk, npr, capacity)
+        view = _JoinView(bcols, pcols, key, build_idx, probe_idx)
+        if spec.filter_fn is not None:
+            mask = jnp.asarray(spec.filter_fn(view), bool)
+            valid = valid & mask
+        # sort stage intentionally skipped: the supported aggregates are
+        # order-independent (see sharded_supported)
+        if fn == "count":
+            part = valid.sum().astype(jnp.int64)
+            scalar = jax.lax.psum(part, PART_AXIS)
+        else:
+            c = view[col_name]
+            is_int = jnp.issubdtype(c.dtype, jnp.integer)
+            if fn == "sum":
+                zero = jnp.asarray(0, c.dtype)
+                part = jnp.where(valid, c, zero).sum()
+                scalar = jax.lax.psum(part, PART_AXIS)
+            elif fn == "min":
+                fill = jnp.iinfo(c.dtype).max if is_int else jnp.inf
+                part = jnp.where(valid, c, fill).min()
+                scalar = jax.lax.pmin(part, PART_AXIS)
+            elif fn == "max":
+                fill = jnp.iinfo(c.dtype).min if is_int else -jnp.inf
+                part = jnp.where(valid, c, fill).max()
+                scalar = jax.lax.pmax(part, PART_AXIS)
+            else:
+                raise ValueError(fn)
+        return {"total": jax.lax.psum(total, PART_AXIS),
+                "max_part_total": jax.lax.pmax(total, PART_AXIS),
+                "scalar": scalar,
+                "agg_n": jax.lax.psum(valid.sum(), PART_AXIS)}
+
+    mapped = shard_map(shard_body, mesh=mesh,
+                       in_specs=(PSpec(PART_AXIS), PSpec(PART_AXIS),
+                                 PSpec(PART_AXIS), PSpec(PART_AXIS)),
+                       out_specs=PSpec())
+    return jax.jit(mapped)
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -515,7 +660,8 @@ def _host_plan(build: Relation, probe: Relation, key: str):
 
 
 def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
-              decision_reason: str = "", broker=None) -> Tuple[object, OpMetrics]:
+              decision_reason: str = "", broker=None,
+              shards: Optional[int] = None) -> Tuple[object, OpMetrics]:
     """Execute a fused fragment; returns (Relation | float, OpMetrics).
 
     Happy path: one compiled program launch + one batched device→host fetch.
@@ -526,10 +672,26 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
     DeviceLease` from ``broker`` (the process-wide default broker when none
     is passed — one shared queue per physical device); queued dispatches of
     the same compiled shape coalesce into one micro-batched admission group.
+
+    ``shards=N`` (N >= 2) requests partition-parallel execution over the
+    first N mesh devices: hash/radix co-partition both sides by the join
+    key, run the fragment per partition under ``shard_map``, and combine
+    per-partition aggregates on device — still ≤ 1 device→host sync.  The
+    request silently degrades to the single-device path when the fragment
+    is not :func:`sharded_supported` or fewer devices exist (metrics then
+    report ``devices=1``); dispatch holds a gang lease over one broker
+    lane per device.
     """
     if broker is None:
         from .resource_broker import default_broker
         broker = default_broker()
+    if shards is not None and int(shards) > 1:
+        from ..distributed.sharding import available_partitions
+
+        num_parts = min(int(shards), available_partitions())
+        if num_parts > 1 and sharded_supported(spec, build, probe):
+            return _run_fused_sharded(spec, build, probe, num_parts,
+                                      decision_reason, broker)
     n_build, n_probe = len(build), len(probe)
     b_bucket = capacity_bucket(n_build)
     p_bucket = capacity_bucket(n_probe)
@@ -608,5 +770,117 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         queue_wait_s=queue_wait,
         compiled=any_fresh,
         batched=batched,
+    )
+    return result, metrics
+
+
+# Verified per-partition capacities by (fragment, partitions, key-column
+# tokens): content-addressed, so a mutated table simply misses and re-plans.
+# Bounded as a backstop; overflow costs at most one extra retry per entry.
+_CAP_HINTS: Dict[tuple, int] = {}
+_CAP_HINT_LOCK = threading.Lock()
+_CAP_HINTS_CAP = 512
+
+
+def _run_fused_sharded(spec: FusedSpec, build: Relation, probe: Relation,
+                       num_parts: int, decision_reason: str,
+                       broker) -> Tuple[float, OpMetrics]:
+    """Partition-parallel driver: cached partitioned layouts in, ONE gang
+    dispatch over ``num_parts`` broker lanes, ONE replicated fetch out.
+
+    The per-partition capacity is optimistic — the critical partition's
+    probe fill times the sampled duplication factor, with skew slack — and
+    verified on device: ``max_part_total`` rides the single result fetch,
+    a wrong guess costs one retry at the exact bucket, never a wrong
+    answer (the same discipline as the single-device driver's overflow
+    and dense retries).
+    """
+    from .partition import get_partitioned_columns, partition_bucket
+    from .relation import column_token
+
+    n_build, n_probe = len(build), len(probe)
+    syncs = 0
+    queue_wait = 0.0
+    any_fresh = False
+    batched = False
+    broker.ensure_lanes(num_parts)
+    with Timer() as t:
+        stats = key_stats(build, spec.join_key)
+        bcols, counts_b_dev, counts_b, bucket_b, up_b = \
+            get_partitioned_columns(build, spec.join_key, num_parts,
+                                    sort_within=True)
+        pcols, counts_p_dev, counts_p, bucket_p, up_p = \
+            get_partitioned_columns(probe, spec.join_key, num_parts,
+                                    sort_within=False)
+        est_part_out = int(max(1, int(counts_p.max())) * stats.dup)
+        capacity = partition_bucket(int(est_part_out * 1.25))
+        # A verified-capacity hint from an earlier run of this fragment over
+        # the same data: the optimistic estimate is recomputed per call, so
+        # without the hint a query whose critical partition overflows it
+        # would pay the overflow retry (a second dispatch + fetch) on EVERY
+        # warm serving query, not just the first.
+        hint_key = (spec.cache_signature(), num_parts,
+                    column_token(build[spec.join_key]),
+                    column_token(probe[spec.join_key]))
+        with _CAP_HINT_LOCK:
+            capacity = max(capacity, _CAP_HINTS.get(hint_key, 0))
+        dtypes = tuple(sorted((k, str(v.dtype)) for k, v in bcols.items()))
+        dtypes += tuple(sorted((k, str(v.dtype)) for k, v in pcols.items()))
+        while True:
+            cache_key = ("sharded", spec.cache_signature(), num_parts,
+                         capacity, bucket_b, bucket_p, dtypes)
+            prog, fresh = _CACHE.get(
+                cache_key,
+                lambda: _build_sharded_program(spec, spec.join_key,
+                                               num_parts, capacity))
+            any_fresh = any_fresh or fresh
+            # ALWAYS under the gang lease — including the compile dispatch.
+            # A sharded launch runs collectives over every lane's device;
+            # any unleased dispatch (the old fresh-path bypass) can overlap
+            # another thread's leased launch and deadlock the host-platform
+            # collective rendezvous.
+            lease = broker.device_lease(lanes=num_parts)
+            queue_wait += lease.wait_s
+            try:
+                out = prog(bcols, pcols, counts_b_dev, counts_p_dev)
+                fetched = jax.device_get(out)  # THE host sync of the query
+            finally:
+                lease.release()
+                batched = batched or lease.batched
+            if fresh:
+                _CACHE.mark_ready(cache_key)
+            syncs += 1
+            max_part = int(fetched["max_part_total"])
+            if max_part <= capacity:
+                # remember the verified minimal bucket (max() keeps it from
+                # ever shrinking a future optimistic estimate)
+                with _CAP_HINT_LOCK:
+                    if len(_CAP_HINTS) >= _CAP_HINTS_CAP:
+                        _CAP_HINTS.clear()
+                    _CAP_HINTS[hint_key] = max(
+                        _CAP_HINTS.get(hint_key, 0),
+                        partition_bucket(max_part))
+                break
+            capacity = partition_bucket(max_part)  # rare: skewed overflow
+        if spec.agg[1] in ("min", "max") and int(fetched["agg_n"]) == 0:
+            raise ValueError(
+                f"{spec.agg[1]} over an empty result has no identity")
+        result = float(fetched["scalar"])
+    metrics = OpMetrics(
+        op="fused_pipeline",
+        path="tensor",
+        rows_in=n_build + n_probe,
+        rows_out=1,
+        wall_s=t.elapsed,
+        spill=SpillAccount(),
+        peak_working_set_bytes=num_parts * (bucket_b + bucket_p) * 8 * 3
+        + num_parts * capacity * 8 * 3,
+        decision_reason=decision_reason,
+        host_syncs=syncs,
+        h2d_bytes=up_b + up_p,
+        queue_wait_s=queue_wait,
+        compiled=any_fresh,
+        batched=batched,
+        devices=num_parts,
     )
     return result, metrics

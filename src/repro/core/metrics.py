@@ -113,6 +113,11 @@ class OpMetrics:
     # tensor path — the metrics describe the tensor run that produced the
     # result; this flag records that a preemption paid for it.
     preempted: bool = False
+    # Mesh devices this operator's dispatch spanned: 1 for the linear path
+    # and the single-device tensor path, N for a partition-parallel fused
+    # fragment (one broker lane per device; queue_wait_s then accumulates
+    # the gang acquisition's blocked time across lanes).
+    devices: int = 1
 
     def as_row(self) -> Dict[str, object]:
         return {
@@ -128,6 +133,7 @@ class OpMetrics:
             "host_syncs": self.host_syncs,
             "h2d_mb": round(self.h2d_bytes / 1e6, 3),
             "grant_mb": round(self.grant_bytes / 1e6, 3),
+            "devices": self.devices,
             "reason": self.decision_reason,
         }
 

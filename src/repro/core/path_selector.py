@@ -75,6 +75,10 @@ class Decision:
     # decision was priced without quotes — ungoverned, or queue-blind):
     mem_wait_s: float = 0.0  # expected memory-admission wait (linear path)
     dev_wait_s: float = 0.0  # expected device-queue wait (tensor path)
+    # Device lanes the chosen tensor path should fan out over: 1 for the
+    # single-device fused program, N when the sharded partition-parallel
+    # program priced cheaper (requires path == "tensor").
+    shards: int = 1
 
 
 class PathSelector:
@@ -259,9 +263,37 @@ class PathSelector:
             cache[tok] = (tokens, sel)
         return sel
 
+    def _sharded_candidate(self, spec, build, probe, max_shards: int):
+        """``(shards, skew, pending_h2d)`` for the partition-parallel fused
+        program, or ``(1, 1.0, 0)`` when it is not on the table: the caller
+        did not opt in (``max_shards <= 1``), the mesh has a single device,
+        an input is already device-resident (partitioning plans from host
+        columns), or the fragment is outside the sharded path's bit-for-bit
+        eligibility (:func:`repro.core.fused.sharded_supported`).  Skew and
+        the pending-transfer bytes come from the partition cache's memoized
+        counts — pricing stays O(1) on warm serving paths."""
+        if max_shards <= 1:
+            return 1, 1.0, 0
+        if not (isinstance(build, Relation) and isinstance(probe, Relation)):
+            return 1, 1.0, 0
+        from ..distributed.sharding import available_partitions
+        from .fused import sharded_supported
+        from .partition import (partition_counts, partition_skew,
+                                pending_partition_bytes)
+
+        shards = min(int(max_shards), available_partitions())
+        if shards <= 1 or not sharded_supported(spec, build, probe):
+            return 1, 1.0, 0
+        key = spec.join_key
+        skew = partition_skew(partition_counts(build, key, shards))
+        pend = (pending_partition_bytes(build, key, shards, True)
+                + pending_partition_bytes(probe, key, shards, False))
+        return shards, skew, pend
+
     def choose_fragment(self, spec, build: Relation, probe: Relation,
                         work_mem: Optional[int] = None,
-                        mem_quote=None, dev_quote=None) -> Decision:
+                        mem_quote=None, dev_quote=None,
+                        max_shards: int = 1) -> Decision:
         """Price a whole fusable fragment: ONE fixed dispatch, ONE host sync,
         and H2D transfer only for base-table columns not already resident in
         the device cache (warm serving queries charge 0).  Fragments arrive
@@ -270,9 +302,18 @@ class PathSelector:
         selectivity.  ``work_mem`` overrides the configured budget;
         ``mem_quote``/``dev_quote`` (broker quotes) carry the governor's
         current-grant estimate plus the expected admission/device-queue
-        waits (queue-aware pricing)."""
+        waits (queue-aware pricing).
+
+        ``max_shards > 1`` additionally prices the partition-parallel
+        sharded program (when the fragment is eligible): its estimate
+        carries the lane fan-out, the measured partition skew, and the
+        partitioned layout's own pending-transfer bytes, and its queue term
+        is the GANG wait — the max over the quote's per-lane expected waits,
+        because a gang dispatch blocks on its slowest lane."""
         if self.force:
             return Decision(self.force, "forced", 0.0, 0.0, 0)
+        import math
+
         from .tensor_engine import capacity_bucket
 
         wm = self._resolve_wm(work_mem, mem_quote)
@@ -282,34 +323,56 @@ class PathSelector:
         est_out = int(n_p * dup)
         h2d = (pending_upload_bytes(build, capacity_bucket(n_b))
                + pending_upload_bytes(probe, capacity_bucket(n_p)))
+        shards, skew, sharded_h2d = self._sharded_candidate(
+            spec, build, probe, max_shards)
         est = self.model.estimate_fragment(
             n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out,
             wm, num_sort_keys=len(spec.sort_keys),
             has_filter=spec.filter_fn is not None,
             has_agg=spec.agg is not None, h2d_bytes=h2d,
             filter_selectivity=self._filter_selectivity(spec.filter_fn,
-                                                        probe, build))
+                                                        probe, build),
+            device_count=shards, partition_skew=skew,
+            sharded_h2d_bytes=sharded_h2d)
         n = n_b + n_p
         t_lin = self.profile.blend(est.t_linear, "fragment", "linear",
                                    n) + mem_wait
         t_ten = self.profile.blend(est.t_tensor, "fragment", "tensor",
                                    n) + dev_wait
+        t_sh, gang_wait = math.inf, 0.0
+        if shards > 1 and math.isfinite(est.t_tensor_sharded):
+            lane_waits = () if dev_quote is None else dev_quote.lane_waits
+            gang_wait = max([lane_waits[i] if i < len(lane_waits) else 0.0
+                             for i in range(shards)] + [dev_wait])
+            t_sh = self.profile.blend(est.t_tensor_sharded, "fragment",
+                                      "tensor_sharded", n) + gang_wait
+        use_sharded = t_sh < t_ten
+        t_dev = min(t_ten, t_sh)
+        dec_shards = shards if use_sharded else 1
         note = self._wait_note(mem_wait, dev_wait)
+        if use_sharded:
+            note += (f"; sharded over {shards} lanes priced "
+                     f"{t_sh:.3f}s vs {t_ten:.3f}s single-device "
+                     f"(partition skew {skew:.2f}, gang wait "
+                     f"{gang_wait * 1e3:.0f}ms)")
         num_ops = 1 + (spec.filter_fn is not None) + bool(spec.sort_keys) \
             + (spec.agg is not None)
-        if est.path_fits_mem and t_lin <= t_ten:
+        if est.path_fits_mem and t_lin <= t_dev:
             return Decision(
                 "linear",
                 f"whole linear fragment fits work_mem ({wm} B) and "
-                f"T_linear={t_lin:.3f}s <= T_tensor={t_ten:.3f}s" + note,
-                t_lin, t_ten, 0, h2d,
+                f"T_linear={t_lin:.3f}s <= T_tensor={t_dev:.3f}s" + note,
+                t_lin, t_dev, 0, h2d,
                 mem_wait_s=mem_wait, dev_wait_s=dev_wait)
-        path = "tensor" if t_ten < t_lin else "linear"
+        path = "tensor" if t_dev < t_lin else "linear"
         return Decision(
             path,
-            f"fragment-level: T_linear={t_lin:.3f}s vs T_tensor={t_ten:.3f}s "
+            f"fragment-level: T_linear={t_lin:.3f}s vs T_tensor={t_dev:.3f}s "
             f"(fixed cost amortized over {num_ops} fused ops, "
-            f"{h2d / 1e6:.1f} MB pending H2D, predicted spill "
+            f"{(sharded_h2d if use_sharded else h2d) / 1e6:.1f} MB pending "
+            f"H2D, predicted spill "
             f"{est.spill_bytes / 1e6:.1f} MB, feedback-blended)" + note,
-            t_lin, t_ten, est.spill_bytes, h2d,
-            mem_wait_s=mem_wait, dev_wait_s=dev_wait)
+            t_lin, t_dev, est.spill_bytes,
+            sharded_h2d if use_sharded else h2d,
+            mem_wait_s=mem_wait, dev_wait_s=dev_wait,
+            shards=dec_shards if path == "tensor" else 1)

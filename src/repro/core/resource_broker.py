@@ -63,14 +63,15 @@ import dataclasses
 import os
 import threading
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .faults import FaultInjector, PreemptedError
 from .memory_governor import MemoryGovernor, MemoryGrant, MemoryHold
 
 __all__ = ["ResourceBroker", "ResourceRequest", "PressureQuote",
            "Reservation", "PreemptToken", "MemoryLease", "DeviceLease",
-           "DeviceQueue", "BrokerStats", "default_broker"]
+           "DeviceGangLease", "DeviceQueue", "BrokerStats",
+           "default_broker"]
 
 # EWMA smoothing for wait/hold/service observations: heavy enough that one
 # stall cannot whipsaw the pricing, light enough to track a shifting load
@@ -96,10 +97,16 @@ class ResourceRequest:
     resource: str
     need_bytes: int = 0
     batch_key: object = None
+    # Device requests only: mesh lanes a sharded dispatch would gang over
+    # (1 = the classic single-lane dispatch).  Pricing then quotes every
+    # requested lane so admission sees per-lane contention.
+    lanes: int = 1
 
     def __post_init__(self):
         if self.resource not in ("memory", "device"):
             raise ValueError(f"unknown resource {self.resource!r}")
+        if self.lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {self.lanes}")
 
 
 @dataclasses.dataclass
@@ -122,6 +129,12 @@ class PressureQuote:
     expected_wait_s: float = 0.0
     queue_depth: int = 0
     would_block: bool = False
+    # Device quotes: per-lane expected waits for the request's ``lanes``
+    # (lane 0 first; lanes the broker has not yet materialized quote 0.0).
+    # ``expected_wait_s`` is then the gang's critical path — the max over
+    # these — which for the classic single-lane request is exactly the
+    # lane-0 wait.
+    lane_waits: Tuple[float, ...] = ()
 
 
 class Reservation:
@@ -287,6 +300,52 @@ class DeviceLease:
         self._queue._release(self._ticket)
 
     def __enter__(self) -> "DeviceLease":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        if not self._released:
+            self.release()
+
+
+class DeviceGangLease:
+    """An admitted all-lane dispatch for a sharded fragment.
+
+    One :class:`DeviceLease` per mesh lane, acquired in FIXED lane order
+    (0..N-1) — every gang and every single-lane dispatch (always lane 0)
+    acquires along the same total order, so lane acquisition can never
+    deadlock — and released together.  ``wait_s`` is the acquisition's
+    total blocked time across lanes (on a serial host the gang's waits
+    accumulate; ``lane_waits`` keeps the per-lane attribution).
+    """
+
+    __slots__ = ("_leases", "wait_s", "lane_waits", "_released")
+
+    def __init__(self, leases: List[DeviceLease]):
+        self._leases = leases
+        self.lane_waits = tuple(l.wait_s for l in leases)
+        self.wait_s = sum(self.lane_waits)
+        self._released = False
+
+    @property
+    def lanes(self) -> int:
+        return len(self._leases)
+
+    @property
+    def batched(self) -> bool:
+        return any(l.batched for l in self._leases)
+
+    @property
+    def released(self) -> bool:
+        return self._released
+
+    def release(self) -> None:
+        if self._released:
+            raise RuntimeError("device gang lease released twice")
+        self._released = True
+        for lease in reversed(self._leases):
+            lease.release()
+
+    def __enter__(self) -> "DeviceGangLease":
         return self
 
     def __exit__(self, *exc) -> None:
@@ -475,6 +534,7 @@ class DeviceQueue:
     def stats(self) -> dict:
         with self._cond:
             return {
+                "depth": len(self._waiting) + len(self._active),
                 "dispatches": self._dispatches,
                 "groups": self._groups,
                 "coalesced": self._coalesced,
@@ -521,6 +581,15 @@ class BrokerStats:
                                     # waited or got a smaller grant
     preempt_registered: int = 0     # degraded linear ops that ran preemptible
     preemptions: int = 0            # tokens actually cancelled
+    # Per-lane DeviceQueue snapshots (lane 0 first — the same queue the
+    # device_* aggregate fields above describe; lanes beyond 0 exist only
+    # on brokers serving sharded dispatch).  Each entry is the lane's
+    # ``DeviceQueue.stats()`` dict: depth, peak_depth, dispatches, groups,
+    # coalesced, bypassed, wait_s_total, ewma_wait_s, ewma_service_s.
+    lanes: Tuple[Dict[str, float], ...] = ()
+
+    _LANE_COUNTERS = ("dispatches", "groups", "coalesced", "bypassed",
+                      "wait_s_total")
 
     def since(self, base: "BrokerStats") -> "BrokerStats":
         out = dataclasses.replace(self)
@@ -530,6 +599,14 @@ class BrokerStats:
                   "reservations", "decide_then_lose", "preempt_registered",
                   "preemptions"):
             setattr(out, f, getattr(self, f) - getattr(base, f))
+        lanes = []
+        for i, lane in enumerate(self.lanes):
+            lane = dict(lane)
+            if i < len(base.lanes):
+                for k in self._LANE_COUNTERS:
+                    lane[k] = lane[k] - base.lanes[i].get(k, 0)
+            lanes.append(lane)
+        out.lanes = tuple(lanes)
         return out
 
 
@@ -553,6 +630,11 @@ class ResourceBroker:
                  faults: Optional[FaultInjector] = None):
         self.governor = governor
         self.device = device_queue if device_queue is not None else DeviceQueue()
+        # Dispatch lanes for sharded fragments: lane 0 IS self.device (the
+        # classic single-device queue — all existing accounting keeps
+        # describing it); further lanes are materialized on demand by
+        # ensure_lanes() and share lane 0's max_group.
+        self._lanes: List[DeviceQueue] = [self.device]
         self.queue_pricing = bool(queue_pricing)
         # price-and-hold on/off: False is the quote-only ablation fig13
         # measures decide-then-lose incidents against
@@ -605,12 +687,52 @@ class ResourceBroker:
                 self._decide_then_lose += 1
         return MemoryLease(self, grant)
 
-    def device_lease(self, batch_key=None) -> DeviceLease:
+    @property
+    def lanes(self) -> Tuple[DeviceQueue, ...]:
+        with self._lock:
+            return tuple(self._lanes)
+
+    def ensure_lanes(self, n: int) -> None:
+        """Materialize dispatch lanes up to ``n`` (idempotent, never
+        shrinks).  New lanes inherit lane 0's ``max_group`` so sharded and
+        single-lane dispatch coalesce under the same batching policy."""
+        n = int(n)
+        with self._lock:
+            while len(self._lanes) < n:
+                self._lanes.append(DeviceQueue(max_group=self.device.max_group))
+
+    def device_lease(self, batch_key=None, lanes: int = 1):
         """Acquire a device dispatch slot (blocks per the queue discipline;
-        coalesces with queued same-``batch_key`` leases)."""
+        coalesces with queued same-``batch_key`` leases).
+
+        ``lanes=N`` (N >= 2) acquires a :class:`DeviceGangLease` over lanes
+        0..N-1 in fixed lane order — the all-device admission a sharded
+        fragment's ``shard_map`` launch needs.  Lane order is a total
+        order shared with single-lane dispatch (always lane 0), so gangs
+        can never deadlock against each other or against classic leases.
+        """
         if self.faults is not None:
             self.faults.on_device_dispatch()
-        return self.device.acquire(batch_key)
+        if lanes <= 1:
+            return self.device.acquire(batch_key)
+        self.ensure_lanes(lanes)
+        with self._lock:
+            queues = list(self._lanes[:lanes])
+        # Gangs never coalesce: a sharded launch runs cross-device
+        # collectives, and two gangs admitted as one batch_key group would
+        # interleave collective launches — on the host platform that is a
+        # rendezvous deadlock, not a slowdown.  Strict per-lane exclusion in
+        # fixed lane order serializes gangs against each other and against
+        # single-lane (lane 0) dispatch.
+        held: List[DeviceLease] = []
+        try:
+            for q in queues:
+                held.append(q.acquire(None))
+        except BaseException:
+            for lease in reversed(held):
+                lease.release()
+            raise
+        return DeviceGangLease(held)
 
     # -- reservations --------------------------------------------------------
     def reserve(self, request: ResourceRequest) -> Reservation:
@@ -676,12 +798,23 @@ class ResourceBroker:
         for ``request`` *right now*.  Cheap (lock-held reads only), never
         blocks, never reserves anything."""
         if request.resource == "device":
-            wait, depth = self.device.expected_wait(request.batch_key)
-            if not self.queue_pricing:
-                wait = 0.0
             with self._lock:
                 self._quotes += 1
-            return PressureQuote("device", 0, wait, depth, depth > 0)
+                queues = list(self._lanes[:max(1, request.lanes)])
+            lane_waits = []
+            depth = 0
+            for q in queues:
+                w, d = q.expected_wait(request.batch_key)
+                lane_waits.append(w)
+                depth = max(depth, d)
+            # lanes not yet materialized are idle: they quote 0 wait
+            lane_waits += [0.0] * (max(1, request.lanes) - len(lane_waits))
+            if not self.queue_pricing:
+                lane_waits = [0.0] * len(lane_waits)
+            # the gang's critical path; for lanes=1 exactly the lane-0 wait
+            wait = max(lane_waits)
+            return PressureQuote("device", 0, wait, depth, depth > 0,
+                                 lane_waits=tuple(lane_waits))
         gov = self.governor
         if gov is None:
             return PressureQuote("memory", max(1, int(request.need_bytes)),
@@ -720,7 +853,11 @@ class ResourceBroker:
     def stats(self) -> BrokerStats:
         dev = self.device.stats()
         with self._lock:
+            lane_queues = list(self._lanes)
+        lanes = tuple(q.stats() for q in lane_queues)
+        with self._lock:
             return BrokerStats(
+                lanes=lanes,
                 device_dispatches=dev["dispatches"],
                 device_groups=dev["groups"],
                 device_coalesced=dev["coalesced"],

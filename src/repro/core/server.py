@@ -258,6 +258,7 @@ class QueryServer:
                  reservations: Optional[bool] = None,
                  faults: Optional[FaultInjector] = None,
                  retry=None,
+                 max_shards: Optional[int] = None,
                  session: Optional[Session] = None):
         if session is not None:
             # a prebuilt session owns its broker, governor, work_mem and
@@ -270,7 +271,8 @@ class QueryServer:
                          "queue_aware": queue_aware,
                          "device_max_batch": device_max_batch,
                          "reservations": reservations,
-                         "faults": faults, "retry": retry}
+                         "faults": faults, "retry": retry,
+                         "max_shards": max_shards}
             given = [k for k, v in conflicts.items() if v is not None]
             if given:
                 raise ValueError(
@@ -292,11 +294,22 @@ class QueryServer:
                 faults=faults)
             session = Session(
                 work_mem=32 * MB if work_mem is None else work_mem,
-                policy=policy or "auto", broker=broker, retry=retry)
+                policy=policy or "auto", broker=broker, retry=retry,
+                max_shards=1 if max_shards is None else max_shards)
         self.session = session
         self.governor = session.governor
         self.broker = session.broker
         self.faults = session.executor.faults
+        # Sharded serving: pre-create the broker's device lanes at build
+        # time (capped at the mesh's actual device count), so admission
+        # quotes see per-lane waits from the first arrival instead of only
+        # after the first gang dispatch lazily grew the lane set.
+        if self.session.executor.max_shards > 1:
+            from ..distributed.sharding import available_partitions
+
+            self.broker.ensure_lanes(
+                min(self.session.executor.max_shards,
+                    available_partitions()))
         for name, rel in tables.items():
             self.session.register(name, rel)
 
@@ -564,7 +577,12 @@ class QueryServer:
         def quoted_wait(tc: TenantClass) -> float:
             """Admission-time wait estimate: ready-queue work ahead of this
             tenant (same or higher priority) plus in-flight work, spread
-            over the pool, plus the broker's memory-admission quote."""
+            over the pool, plus the broker's memory-admission quote.  A
+            sharded server (``max_shards > 1``) additionally charges the
+            device gang wait — the max over the per-lane expected waits a
+            fan-out dispatch would block on; single-lane servers skip the
+            term so their admission pricing (and fig13's shed counts) is
+            byte-for-byte the pre-sharding behavior."""
             with cond:
                 ahead = inflight[0] + sum(
                     1 for e in ready if -e[0] >= tc.priority)
@@ -573,6 +591,11 @@ class QueryServer:
                 q = self.broker.price(
                     ResourceRequest("memory", need_bytes=probe_bytes))
                 est += q.expected_wait_s
+            nlanes = self.session.executor.max_shards
+            if nlanes > 1:
+                dq = self.broker.price(
+                    ResourceRequest("device", lanes=nlanes))
+                est += dq.expected_wait_s
             return est
 
         def dispatcher() -> None:

@@ -73,7 +73,7 @@ class Session:
                  fuse: bool = True, spill_root: Optional[str] = None,
                  governor: Optional["MemoryGovernor"] = None,
                  broker: Optional["ResourceBroker"] = None,
-                 faults=None, retry=None):
+                 faults=None, retry=None, max_shards: int = 1):
         if broker is not None and governor is not None \
                 and broker.governor is not governor:
             raise ValueError(
@@ -103,7 +103,8 @@ class Session:
         self.executor = Executor(work_mem, policy=policy, selector=selector,
                                  spill_root=spill_root, fuse=fuse,
                                  governor=governor, broker=broker,
-                                 faults=faults, retry=retry)
+                                 faults=faults, retry=retry,
+                                 max_shards=max_shards)
         # the executor resolves the broker (private one per governor, the
         # process default otherwise); the session exposes it as the single
         # handle for leases, quotes and queue stats

@@ -24,11 +24,57 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 __all__ = [
     "param_specs", "batch_specs", "cache_specs", "tree_shardings",
     "DATA_AXIS", "MODEL_AXIS", "POD_AXIS", "dp_axes",
+    "PART_AXIS", "relational_mesh", "partition_sharding",
+    "available_partitions",
 ]
 
 DATA_AXIS = "data"
 MODEL_AXIS = "model"
 POD_AXIS = "pod"
+
+# ---------------------------------------------------------------------------
+# Relational partition mesh (sharded fused fragments)
+# ---------------------------------------------------------------------------
+
+PART_AXIS = "part"
+
+_MESH_CACHE: dict = {}
+
+
+def available_partitions() -> int:
+    """Device lanes a sharded fragment can fan out over — the local device
+    count (on CPU, the forced host-platform device count; see
+    ``tests/conftest.py`` / the CI ``XLA_FLAGS`` env var)."""
+    return jax.device_count()
+
+
+def relational_mesh(num_parts: int) -> Mesh:
+    """1-D mesh over the first ``num_parts`` local devices with the single
+    named axis ``"part"`` — one hash/radix partition of a fused relational
+    fragment per device.  Meshes are cached per partition count so the
+    partitioned-column cache and the compiled ``shard_map`` programs agree
+    on device placement (a mismatched mesh object would make XLA re-shard
+    every input per call)."""
+    num_parts = int(num_parts)
+    if num_parts < 1:
+        raise ValueError(f"num_parts must be >= 1, got {num_parts}")
+    devs = jax.devices()
+    if num_parts > len(devs):
+        raise ValueError(
+            f"num_parts={num_parts} exceeds the {len(devs)} local devices; "
+            f"force a larger host mesh via XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N before importing jax")
+    mesh = _MESH_CACHE.get(num_parts)
+    if mesh is None:
+        mesh = Mesh(np.array(devs[:num_parts]), (PART_AXIS,))
+        _MESH_CACHE[num_parts] = mesh
+    return mesh
+
+
+def partition_sharding(num_parts: int) -> NamedSharding:
+    """Sharding for a ``(num_parts, bucket)`` partitioned column: one row
+    block per mesh device along the ``"part"`` axis."""
+    return NamedSharding(relational_mesh(num_parts), P(PART_AXIS))
 
 
 def dp_axes(mesh: Mesh):

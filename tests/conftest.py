@@ -1,0 +1,40 @@
+"""Shared test environment: a deterministic 8-device CPU mesh.
+
+The sharded fused path (``run_fused(shards=N)``), the distributed e2e
+test, and the broker's per-lane accounting all need more than one XLA
+device.  On CPU that is spelled ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` — and it only works when set **before jax's first
+import**, which is why it lives here (pytest imports ``conftest.py``
+before any test module) instead of ad hoc inside individual tests.
+
+CI sets the same flag as a job-level env var (see
+``.github/workflows/ci.yml``); this module is the belt to that suspender
+for local runs.  An explicit user-provided device-count flag is always
+respected, and if jax was somehow imported first (e.g. by a pytest
+plugin) the flag is left untouched — tests that need the mesh then skip
+via the :func:`eight_device_mesh` fixture instead of silently running
+against a stale device topology.
+"""
+import os
+import sys
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count=8"
+
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = f"{_flags} {_FORCE_FLAG}".strip()
+
+import pytest
+
+
+@pytest.fixture
+def eight_device_mesh():
+    """The 8 forced host devices, or skip when the topology is unavailable
+    (jax imported before the flag could be set)."""
+    import jax
+
+    if jax.device_count() < 8:
+        pytest.skip("needs the forced 8-device CPU mesh "
+                    "(jax was imported before XLA_FLAGS took effect)")
+    return jax.devices()[:8]

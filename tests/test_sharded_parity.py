@@ -1,0 +1,430 @@
+"""Sharded fused execution: bit-for-bit parity, partitioning edge cases,
+gang leases, lane stats, and the sharded cost/selector terms.
+
+The partition-parallel path's contract is that ``run_fused(shards=N)``
+returns EXACTLY the single-device program's answer — same float, not just
+close — for every eligible fragment (``sharded_supported``).  These tests
+drive that contract through the adversarial partition layouts: heavy skew,
+empty partitions, row counts that don't divide the partition count, and a
+capacity-overflow retry.
+"""
+import numpy as np
+import pytest
+
+from repro.core.expr import col
+from repro.core.fused import FusedSpec, run_fused, sharded_supported
+from repro.core.relation import Relation
+
+
+def _rel(**cols) -> Relation:
+    return Relation.from_dict({k: np.asarray(v) for k, v in cols.items()})
+
+
+def _host_agg(build, probe, key, col_name, fn, filt=None):
+    """Independent numpy reference for a Join→[Filter]→Agg fragment under
+    the join naming contract (probe keeps names, build serves b_<x>)."""
+    bk = np.asarray(build[key])
+    pk = np.asarray(probe[key])
+    order = np.argsort(bk, kind="stable")
+    sbk = bk[order]
+    left = np.searchsorted(sbk, pk, "left")
+    right = np.searchsorted(sbk, pk, "right")
+    cnt = right - left
+    probe_idx = np.repeat(np.arange(len(pk)), cnt)
+    build_pos = (np.concatenate([np.arange(l, r) for l, r in
+                                 zip(left, right)])
+                 if len(pk) and cnt.sum() else np.array([], dtype=np.int64))
+    build_idx = order[build_pos.astype(np.int64)]
+    joined = {name: np.asarray(probe[name])[probe_idx]
+              for name in probe.names}
+    for name in build.names:
+        if name != key:
+            joined[f"b_{name}"] = np.asarray(build[name])[build_idx]
+    mask = (np.asarray(filt(joined), bool) if filt is not None
+            else np.ones(len(probe_idx), bool))
+    vals = joined[col_name][mask]
+    if fn == "count":
+        return float(mask.sum())
+    if fn == "sum":
+        return float(vals.sum())
+    if fn == "min":
+        return float(vals.min())
+    if fn == "max":
+        return float(vals.max())
+    raise ValueError(fn)
+
+
+AGG_CASES = [
+    ("w", "sum", None),
+    ("w", "sum", col("w") > 0),
+    ("w", "count", None),
+    ("w", "count", col("w") > 0),
+    ("w", "min", None),
+    ("w", "max", None),
+    ("b_region", "max", None),
+    ("b_region", "min", col("w") > 0),
+]
+
+
+@pytest.mark.parametrize("col_name,fn,filt", AGG_CASES)
+def test_sharded_parity_vs_single_and_host(eight_device_mesh, col_name, fn,
+                                           filt):
+    rng = np.random.default_rng(7)
+    n_b, n_p = 20_000, 30_000
+    build = _rel(uid=rng.integers(-5_000, 5_000, n_b).astype(np.int64),
+                 region=rng.integers(0, 10, n_b).astype(np.int64))
+    probe = _rel(uid=rng.integers(-5_000, 5_000, n_p).astype(np.int64),
+                 w=rng.integers(-100, 100, n_p).astype(np.int64))
+    spec = FusedSpec(join_key="uid", filter_fn=filt, sort_keys=(),
+                     agg=(col_name, fn))
+    assert sharded_supported(spec, build, probe)
+    single, m1 = run_fused(spec, build, probe)
+    sharded, m8 = run_fused(spec, build, probe, shards=8)
+    host = _host_agg(build, probe, "uid", col_name, fn, filt)
+    assert m1.devices == 1
+    assert m8.devices == 8
+    assert m8.host_syncs == 1
+    assert sharded == single  # bit-for-bit, not approx
+    assert sharded == host
+
+
+def test_sharded_parity_skewed_zipf_keys(eight_device_mesh):
+    rng = np.random.default_rng(11)
+    n = 50_000
+    keys = np.minimum(rng.zipf(1.3, n), 1 << 40).astype(np.int64)
+    build = _rel(uid=keys, region=rng.integers(0, 4, n).astype(np.int64))
+    probe = _rel(uid=np.minimum(rng.zipf(1.3, n), 1 << 40).astype(np.int64),
+                 w=rng.integers(-50, 50, n).astype(np.int64))
+    spec = FusedSpec(join_key="uid", filter_fn=col("w") > 0, sort_keys=(),
+                     agg=("w", "sum"))
+    single, _ = run_fused(spec, build, probe)
+    sharded, m8 = run_fused(spec, build, probe, shards=8)
+    assert m8.devices == 8
+    assert sharded == single
+
+
+def test_sharded_parity_empty_partitions(eight_device_mesh):
+    # a single distinct key puts EVERY row in one partition: 7 of the 8
+    # shards run over all-sentinel padding and must contribute identities
+    rng = np.random.default_rng(3)
+    n = 5_000
+    build = _rel(uid=np.full(n, 42, np.int64),
+                 region=rng.integers(0, 4, n).astype(np.int64))
+    probe = _rel(uid=np.full(n, 42, np.int64),
+                 w=rng.integers(1, 9, n).astype(np.int64))
+    for fn in ("sum", "count", "min", "max"):
+        spec = FusedSpec(join_key="uid", filter_fn=None, sort_keys=(),
+                         agg=("w", fn))
+        single, _ = run_fused(spec, build, probe)
+        sharded, m8 = run_fused(spec, build, probe, shards=8)
+        assert m8.devices == 8
+        assert sharded == single
+
+
+def test_sharded_rows_not_divisible_by_partitions(eight_device_mesh):
+    rng = np.random.default_rng(5)
+    n_b, n_p = 10_003, 7_919  # both prime: never divide 8
+    build = _rel(uid=rng.integers(0, 2_000, n_b).astype(np.int64),
+                 region=rng.integers(0, 3, n_b).astype(np.int64))
+    probe = _rel(uid=rng.integers(0, 2_000, n_p).astype(np.int64),
+                 w=rng.integers(-10, 10, n_p).astype(np.int64))
+    spec = FusedSpec(join_key="uid", filter_fn=None, sort_keys=(),
+                     agg=("w", "sum"))
+    single, _ = run_fused(spec, build, probe)
+    sharded, m8 = run_fused(spec, build, probe, shards=8)
+    assert m8.devices == 8
+    assert sharded == single
+    assert sharded == _host_agg(build, probe, "uid", "w", "sum")
+
+
+def test_sharded_empty_min_raises_like_single(eight_device_mesh):
+    # disjoint key domains: zero joined rows; min has no identity on both
+    # paths
+    build = _rel(uid=np.arange(0, 100, dtype=np.int64),
+                 region=np.zeros(100, np.int64))
+    probe = _rel(uid=np.arange(1_000, 1_100, dtype=np.int64),
+                 w=np.ones(100, np.int64))
+    spec = FusedSpec(join_key="uid", filter_fn=None, sort_keys=(),
+                     agg=("w", "min"))
+    with pytest.raises(ValueError):
+        run_fused(spec, build, probe)
+    with pytest.raises(ValueError):
+        run_fused(spec, build, probe, shards=8)
+
+
+def test_sharded_partition_cache_warm_second_query(eight_device_mesh):
+    rng = np.random.default_rng(9)
+    n = 30_000
+    build = _rel(uid=rng.integers(0, 10_000, n).astype(np.int64),
+                 region=rng.integers(0, 4, n).astype(np.int64))
+    probe = _rel(uid=rng.integers(0, 10_000, n).astype(np.int64),
+                 w=rng.integers(-5, 5, n).astype(np.int64))
+    spec = FusedSpec(join_key="uid", filter_fn=None, sort_keys=(),
+                     agg=("w", "sum"))
+    r1, m_cold = run_fused(spec, build, probe, shards=8)
+    assert m_cold.h2d_bytes > 0  # the partitioned layouts uploaded
+    r2, m_warm = run_fused(spec, build, probe, shards=8)
+    assert r2 == r1
+    assert m_warm.h2d_bytes == 0  # layouts resident: the serving contract
+    assert m_warm.host_syncs == 1
+
+
+def test_sharded_capacity_overflow_retries_once(eight_device_mesh):
+    # one hot key with 500 build-side duplicates, probe aimed entirely at
+    # it: the sampled duplication factor massively underestimates the
+    # critical partition's output, so the optimistic capacity overflows
+    # and the driver must retry at the exact bucket — and still be right
+    rng = np.random.default_rng(13)
+    build_keys = np.concatenate([
+        np.arange(1_000, 2_500, dtype=np.int64),  # 1500 singletons
+        np.full(500, 7, np.int64)])               # the hot key
+    build = _rel(uid=build_keys,
+                 region=rng.integers(0, 3, len(build_keys)).astype(np.int64))
+    probe = _rel(uid=np.full(200, 7, np.int64),
+                 w=np.ones(200, np.int64))
+    spec = FusedSpec(join_key="uid", filter_fn=None, sort_keys=(),
+                     agg=("w", "count"))
+    sharded, m8 = run_fused(spec, build, probe, shards=8)
+    assert sharded == 200.0 * 500.0
+    assert m8.devices == 8
+    assert m8.host_syncs == 2  # optimistic pass + one retry at exact bucket
+    # the verified capacity is remembered: the next query of the same
+    # fragment over the same data must NOT pay the retry again
+    again, m_again = run_fused(spec, build, probe, shards=8)
+    assert again == sharded
+    assert m_again.host_syncs == 1
+
+
+def test_sharded_supported_eligibility():
+    rng = np.random.default_rng(1)
+    n = 100
+    ints = _rel(uid=rng.integers(0, 10, n).astype(np.int64),
+                w=rng.integers(0, 10, n).astype(np.int64))
+    floats = _rel(uid=rng.integers(0, 10, n).astype(np.int64),
+                  w=rng.random(n))
+    fkey = _rel(uid=rng.random(n), w=rng.integers(0, 10, n).astype(np.int64))
+
+    def spec(agg):
+        return FusedSpec(join_key="uid", filter_fn=None, sort_keys=(),
+                         agg=agg)
+
+    assert sharded_supported(spec(("w", "sum")), ints, ints)
+    # float sum reassociates under psum: excluded from the bit-for-bit set
+    assert not sharded_supported(spec(("w", "sum")), ints, floats)
+    # min/max/count stay exact for floats
+    assert sharded_supported(spec(("w", "min")), ints, floats)
+    assert sharded_supported(spec(("w", "max")), ints, floats)
+    assert sharded_supported(spec(("w", "count")), ints, floats)
+    # non-integer join key breaks the partition-hash/sentinel contract
+    assert not sharded_supported(spec(("w", "sum")), fkey, ints)
+    # relation roots need a global merge: not sharded
+    no_agg = FusedSpec(join_key="uid", filter_fn=None, sort_keys=("w",),
+                       agg=None)
+    assert not sharded_supported(no_agg, ints, ints)
+
+
+def test_unsupported_fragment_degrades_to_single_device(eight_device_mesh):
+    rng = np.random.default_rng(2)
+    n = 5_000
+    build = _rel(uid=rng.integers(0, 100, n).astype(np.int64),
+                 region=rng.integers(0, 4, n).astype(np.int64))
+    probe = _rel(uid=rng.integers(0, 100, n).astype(np.int64),
+                 w=rng.random(n))  # float agg column
+    spec = FusedSpec(join_key="uid", filter_fn=None, sort_keys=(),
+                     agg=("w", "sum"))
+    result, m = run_fused(spec, build, probe, shards=8)
+    assert m.devices == 1  # silent degrade, not an error
+    single, _ = run_fused(spec, build, probe)
+    assert result == single
+
+
+# ---------------------------------------------------------------------------
+# Broker lanes: gang leases, ensure_lanes, per-lane stats
+# ---------------------------------------------------------------------------
+
+def test_gang_lease_acquire_release_order():
+    from repro.core.resource_broker import ResourceBroker
+
+    broker = ResourceBroker(None)
+    broker.ensure_lanes(4)
+    assert len(broker.lanes) == 4
+    broker.ensure_lanes(2)  # never shrinks
+    assert len(broker.lanes) == 4
+    broker.ensure_lanes(4)  # idempotent
+    assert len(broker.lanes) == 4
+    # lane 0 IS the single-dispatch device queue
+    assert broker.lanes[0] is broker.device
+
+    gang = broker.device_lease(lanes=4)
+    assert gang.lanes == 4
+    assert len(gang.lane_waits) == 4
+    for q in broker.lanes:
+        assert q.stats()["depth"] >= 1
+    gang.release()
+    with pytest.raises(RuntimeError):
+        gang.release()
+    for q in broker.lanes:
+        assert q.stats()["depth"] == 0
+    # single-lane requests still return a plain lease
+    lease = broker.device_lease()
+    assert not hasattr(lease, "lane_waits")
+    lease.release()
+
+
+def test_gang_lease_auto_grows_lanes():
+    from repro.core.resource_broker import ResourceBroker
+
+    broker = ResourceBroker(None)
+    with broker.device_lease(lanes=3) as gang:
+        assert gang.lanes == 3
+    assert len(broker.lanes) == 3
+
+
+def test_lane_stats_in_broker_stats_and_since():
+    from repro.core.resource_broker import ResourceBroker
+
+    broker = ResourceBroker(None)
+    broker.ensure_lanes(2)
+    base = broker.stats()
+    assert len(base.lanes) == 2
+    broker.device_lease(lanes=2).release()
+    broker.device_lease(lanes=2).release()
+    delta = broker.stats().since(base)
+    assert len(delta.lanes) == 2
+    for lane in delta.lanes:
+        assert lane["dispatches"] == 2
+        assert "ewma_wait_s" in lane
+        assert "peak_depth" in lane
+        assert "coalesced" in lane
+
+
+def test_price_quotes_per_lane_waits():
+    from repro.core.resource_broker import ResourceBroker, ResourceRequest
+
+    broker = ResourceBroker(None)
+    broker.ensure_lanes(4)
+    q1 = broker.price(ResourceRequest("device"))
+    assert len(q1.lane_waits) == 1  # single-lane request: lane 0 only
+    q4 = broker.price(ResourceRequest("device", lanes=4))
+    assert len(q4.lane_waits) == 4
+    assert q4.expected_wait_s == max(q4.lane_waits)
+    # lanes beyond the current lane set price as empty queues
+    q8 = broker.price(ResourceRequest("device", lanes=8))
+    assert len(q8.lane_waits) == 8
+    assert all(w == 0.0 for w in q8.lane_waits[4:])
+
+
+# ---------------------------------------------------------------------------
+# Cost model + selector: the sharded pricing term
+# ---------------------------------------------------------------------------
+
+def test_cost_model_sharded_term_ordering():
+    import math
+
+    from repro.core.cost_model import CostModel
+
+    model = CostModel()
+    kw = dict(n_build=1_000_000, n_probe=1_000_000, row_bytes_b=16,
+              row_bytes_p=16, est_out=1_000_000, work_mem=32 << 20,
+              has_agg=True)
+    single = model.estimate_fragment(**kw)
+    assert math.isinf(single.t_tensor_sharded)  # no fan-out requested
+    sharded = model.estimate_fragment(**kw, device_count=8)
+    assert sharded.t_tensor_sharded < sharded.t_tensor
+    skewed = model.estimate_fragment(**kw, device_count=8, partition_skew=8.0)
+    assert skewed.t_tensor_sharded > sharded.t_tensor_sharded
+    # aggregate-free fragments never price a sharded plan
+    no_agg = model.estimate_fragment(**{**kw, "has_agg": False},
+                                     device_count=8)
+    assert math.isinf(no_agg.t_tensor_sharded)
+
+
+def test_selector_prices_and_picks_sharded(eight_device_mesh):
+    from repro.core.path_selector import PathSelector
+
+    rng = np.random.default_rng(17)
+    n = 400_000
+    build = _rel(uid=rng.integers(0, 100_000, n).astype(np.int64),
+                 region=rng.integers(0, 10, n).astype(np.int64))
+    probe = _rel(uid=rng.integers(0, 100_000, n).astype(np.int64),
+                 w=rng.integers(-100, 100, n).astype(np.int64))
+    spec = FusedSpec(join_key="uid", filter_fn=col("w") > 0, sort_keys=(),
+                     agg=("w", "sum"))
+    sel = PathSelector(work_mem=4 << 20)
+    d1 = sel.choose_fragment(spec, build, probe)  # max_shards defaults to 1
+    assert d1.shards == 1
+    d8 = sel.choose_fragment(spec, build, probe, max_shards=8)
+    assert d8.path == "tensor"
+    assert d8.shards == 8
+    assert "sharded over 8 lanes" in d8.reason
+
+
+def test_selector_ineligible_fragment_stays_single(eight_device_mesh):
+    from repro.core.path_selector import PathSelector
+
+    rng = np.random.default_rng(19)
+    n = 200_000
+    build = _rel(uid=rng.integers(0, 50_000, n).astype(np.int64),
+                 region=rng.integers(0, 10, n).astype(np.int64))
+    probe = _rel(uid=rng.integers(0, 50_000, n).astype(np.int64),
+                 w=rng.random(n))  # float sum: not bit-for-bit shardable
+    spec = FusedSpec(join_key="uid", filter_fn=None, sort_keys=(),
+                     agg=("w", "sum"))
+    d = PathSelector(work_mem=4 << 20).choose_fragment(
+        spec, build, probe, max_shards=8)
+    assert d.shards == 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: session + governed serving with lanes
+# ---------------------------------------------------------------------------
+
+def test_session_sharded_end_to_end_parity(eight_device_mesh):
+    from repro.core.session import Session
+
+    rng = np.random.default_rng(23)
+    n = 400_000
+    orders = _rel(uid=rng.integers(0, 100_000, n).astype(np.int64),
+                  w=rng.integers(-100, 100, n).astype(np.int64))
+    users = _rel(uid=rng.integers(0, 100_000, n).astype(np.int64),
+                 region=rng.integers(0, 10, n).astype(np.int64))
+    results = {}
+    for shards in (1, 8):
+        sess = Session(work_mem=4 << 20, max_shards=shards)
+        sess.register("orders", orders).register("users", users)
+        q = (sess.table("orders").join("users", on="uid")
+             .filter(col("w") > 0).aggregate("w", "sum"))
+        q.collect()  # cold pass: compile + partition
+        res = q.collect()
+        results[shards] = res
+    assert results[1].scalar == results[8].scalar
+    d = results[8].decisions[-1]
+    assert d.path == "tensor" and d.shards == 8
+    assert results[8].metrics[-1].devices == 8
+    assert results[8].metrics[-1].host_syncs == 1
+
+
+def test_governed_serve_with_lanes(eight_device_mesh):
+    from repro.core.server import QueryServer
+
+    rng = np.random.default_rng(29)
+    n = 400_000
+    tables = {
+        "orders": _rel(uid=rng.integers(0, 100_000, n).astype(np.int64),
+                       w=rng.integers(-100, 100, n).astype(np.int64)),
+        "users": _rel(uid=rng.integers(0, 100_000, n).astype(np.int64),
+                      region=rng.integers(0, 10, n).astype(np.int64)),
+    }
+    server = QueryServer(tables, total_mem=64 << 20, work_mem=8 << 20,
+                         max_shards=8)
+    assert len(server.broker.lanes) == 8  # pre-created at build
+    q = (server.session.table("orders").join("users", on="uid")
+         .filter(col("w") > 0).aggregate("w", "sum"))
+    report = server.serve([q], concurrency=3, queries_per_worker=2)
+    assert report.governor.over_budget_events == 0
+    assert not report.failed
+    assert len(report.broker.lanes) == 8
+    # the sharded program fans out across every lane
+    assert all(lane["dispatches"] > 0 for lane in report.broker.lanes)
+    scalars = {rec.scalar for rec in report.queries}
+    assert len(scalars) == 1  # every serve of the same query agrees
