@@ -48,7 +48,8 @@ from .executor import (PHYSICAL_NODES, Aggregate, Executor, Filter, GroupBy,
 from .expr import Expr, col, lit
 from .faults import (DeadlineExceeded, DeviceDispatchError, FaultInjector,
                      GrantTimeout, PreemptedError, QueryRejected, RetryPolicy,
-                     SimulatedCrash, SpillIOError, TransientError)
+                     SimulatedCrash, SpillCorruptionError, SpillIOError,
+                     TransientError)
 from .fused import (FusedSpec, match_fragment, pipeline_cache_clear,
                     pipeline_cache_info, run_fused)
 from .linear_engine import HashTable, hash_join_linear, sort_linear, table_bytes_estimate
@@ -57,7 +58,7 @@ from .logical import (LAggregate, LFilter, LGroupBy, LJoin, LProject, LScan,
 from .memory_governor import (BrokerInvariantViolation, FloorGrantPolicy,
                               GovernorStats, GrantPolicy, MemoryGovernor,
                               MemoryGrant, MemoryHold,
-                              ProportionalShareGrantPolicy)
+                              ProportionalShareGrantPolicy, TieredGrant)
 from .metrics import BLOCK_BYTES, LatencyStats, OpMetrics, SpillAccount, latency_stats
 from .path_selector import Decision, PathSelector
 from .planner import Program, plan_program, prune_columns, push_filters
@@ -72,6 +73,8 @@ from .server import (FailedQuery, QueryServer, ServeReport, ServedQuery,
 from .session import Query, Session
 from .slo import ArrivalProcess, TenantClass
 from .spill import SpillManager
+from .tier import (TierConfig, TierLedger, TierManager, TierStats,
+                   decode_column, encode_column)
 from .table_cache import (KeyStats, get_device_columns, key_stats,
                           pending_upload_bytes, table_cache_clear,
                           table_cache_info)
@@ -107,13 +110,16 @@ __all__ = [
     "ResourceRequest", "RetryPolicy",
     "RuntimeProfile", "Scan", "ServeReport", "ServedQuery", "Session",
     "ShedQuery", "SimulatedCrash",
-    "Sort", "SpillAccount", "SpillIOError", "TenantClass", "TransientError",
+    "Sort", "SpillAccount", "SpillCorruptionError", "SpillIOError",
+    "TenantClass", "TierConfig", "TierLedger", "TierManager", "TierStats",
+    "TieredGrant", "TransientError",
     "SpillManager", "aligned_join_indices", "capacity_bucket", "col",
     "column_token", "default_broker", "from_physical", "get_device_columns",
     "hash_join_linear", "join_capacity", "key_stats",
     "group_aggregate_device", "group_aggregate_linear", "group_aggregate_tensor",
     "latency_stats", "lit", "match_fragment", "pending_upload_bytes",
     "pipeline_cache_clear", "pipeline_cache_info", "plan_program",
+    "decode_column", "encode_column",
     "prune_columns", "push_filters", "run_fused", "schema", "size_bucket",
     "sort_linear", "table_bytes_estimate", "table_cache_clear",
     "table_cache_info", "tensor_join", "tensor_join_aggregate",

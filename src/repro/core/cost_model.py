@@ -70,6 +70,19 @@ class CostConstants:
     # per-row discount of partition-resident work: each partition's run
     # fits a cache level the monolithic working set overflows
     shard_residency_discount: float = 0.75
+    # -- v8: spill-tier terms (the priced staircase) ------------------------
+    # seconds/byte through the compressed host-RAM tier (T0): a codec pass
+    # (dict-encode + bit-pack), not an fsync — an order of magnitude under
+    # io_byte_cost
+    t0_byte_cost: float = 1.5e-9
+    # seconds/byte through the emulated remote tier (T1): bandwidth-capped
+    # transfer + amortized latency; overridden per-quote by the hierarchy's
+    # configured service model when one is attached
+    t1_byte_cost: float = 6.0e-9
+    # fraction of T1/T2 *re-read* latency hidden by the async T2→T0
+    # prefetcher (build partitions stream back up while the probe side is
+    # still being consumed)
+    tier_prefetch_overlap: float = 0.5
 
 
 @dataclasses.dataclass
@@ -103,6 +116,10 @@ class FragmentEstimate:
     # the partition-parallel fused pipeline over device_count mesh lanes
     # (inf when the fragment is not sharded-eligible or device_count <= 1)
     t_tensor_sharded: float = math.inf
+    # the linear fragment with its spill routed through the tier staircase
+    # (T0 compressed RAM → T1 emulated remote → T2 disk) instead of the
+    # all-disk cliff (inf when no tier hierarchy is configured)
+    t_linear_tiered: float = math.inf
 
 
 class CostModel:
@@ -156,6 +173,40 @@ class CostModel:
         # write + read back: 2x the written volume crosses the I/O boundary
         return self.c.io_byte_cost * 2 * spill_bytes
 
+    def alpha_tiered(self, spill_bytes: int, tier_quotas=None,
+                     tier_byte_s=None) -> float:
+        """α with the spill volume routed through the tier staircase.
+
+        Fills the predicted volume through (T0, T1, T2) in order: each tier
+        absorbs up to its quota at its per-byte service time, the disk tier
+        is the unbounded backstop.  ``tier_quotas``/``tier_byte_s`` are the
+        (t0, t1, t2) tuples a tiered :class:`~repro.core.resource_broker.
+        PressureQuote` carries; missing entries fall back to the model's
+        ``t0_byte_cost``/``t1_byte_cost``/``io_byte_cost`` constants.  The
+        prefetcher hides ``tier_prefetch_overlap`` of the *re-read* half on
+        the I/O tiers (T1/T2); the T0 re-read is a decode, nothing to hide.
+        """
+        quotas = list(tier_quotas) if tier_quotas is not None else [None, None, None]
+        quotas += [None] * (3 - len(quotas))
+        costs = list(tier_byte_s) if tier_byte_s is not None else [None, None, None]
+        costs += [None] * (3 - len(costs))
+        defaults = (self.c.t0_byte_cost, self.c.t1_byte_cost,
+                    self.c.io_byte_cost)
+        overlap = min(1.0, max(0.0, self.c.tier_prefetch_overlap))
+        remaining = max(0, int(spill_bytes))
+        t = 0.0
+        for i in range(3):
+            if remaining <= 0:
+                break
+            cap = quotas[i]
+            take = remaining if (cap is None or i == 2) else min(remaining, int(cap))
+            cost = costs[i] if costs[i] is not None else defaults[i]
+            # write + read, with the prefetcher discounting I/O-tier re-reads
+            read_factor = 1.0 if i == 0 else (1.0 - overlap)
+            t += take * cost * (1.0 + read_factor)
+            remaining -= take
+        return t
+
     # -- operator estimates ------------------------------------------------
     def estimate_join(self, n_build: int, n_probe: int, row_bytes_b: int,
                       row_bytes_p: int, est_out: int, work_mem: int) -> JoinEstimate:
@@ -184,7 +235,9 @@ class CostModel:
                           filter_selectivity: float = 1.0,
                           device_count: int = 1,
                           partition_skew: float = 1.0,
-                          sharded_h2d_bytes: int = 0) -> FragmentEstimate:
+                          sharded_h2d_bytes: int = 0,
+                          tier_quotas=None,
+                          tier_byte_s=None) -> FragmentEstimate:
         """Cost a whole fusable fragment instead of its operators in isolation.
 
         The linear side is the sum of its per-operator costs (join + sort over
@@ -261,8 +314,19 @@ class CostModel:
                     + self.c.host_sync_cost
                     + self.c.h2d_byte_cost * sharded_h2d_bytes
                     + self.c.fused_row_cost * rows_sh)
+        # Tiered-linear: same CPU work, but the spill volume crosses the
+        # tier staircase instead of the all-disk cliff.  α is linear in
+        # bytes, so subtracting the fragment's combined disk α and adding
+        # the staircase α over the combined volume re-prices exactly the
+        # I/O term (the staircase is priced over the fragment's total spill
+        # because its operators share one grant's quotas).
+        t_tiered = math.inf
+        if tier_quotas is not None or tier_byte_s is not None:
+            t_tiered = (t_lin - self.alpha(spill)
+                        + self.alpha_tiered(spill, tier_quotas, tier_byte_s))
         return FragmentEstimate(spill == 0, int(spill), passes, t_lin, t_ten,
-                                int(h2d_bytes), t_tensor_sharded=t_sh)
+                                int(h2d_bytes), t_tensor_sharded=t_sh,
+                                t_linear_tiered=t_tiered)
 
     # -- calibration -----------------------------------------------------------
     def calibrate(self, n: int = 200_000, seed: int = 0) -> CostConstants:

@@ -42,6 +42,7 @@ from .resource_broker import (PreemptToken, PressureQuote, ResourceBroker,
                               ResourceRequest, default_broker)
 from .spill import SpillManager
 from .tensor_engine import (tensor_join_device, tensor_sort_device)
+from .tier import TierConfig, TierLedger, TierManager
 
 __all__ = ["Scan", "Filter", "Join", "Sort", "Aggregate", "GroupBy",
            "Project", "PHYSICAL_NODES", "Executor", "QueryResult"]
@@ -169,15 +170,32 @@ class Executor:
                  broker: Optional[ResourceBroker] = None,
                  faults: Optional[FaultInjector] = None,
                  retry: Optional[RetryPolicy] = None,
-                 max_shards: int = 1):
+                 max_shards: int = 1,
+                 tiers: Optional[TierConfig] = None):
         if policy not in ("auto", "linear", "tensor"):
             raise ValueError(policy)
         if int(max_shards) < 1:
             raise ValueError(f"max_shards must be >= 1, got {max_shards}")
+        # Spill-tier hierarchy: when configured, every per-query spill sink
+        # becomes a TierManager (T0 compressed host RAM → T1 emulated
+        # remote → T2 disk) instead of the flat disk SpillManager, and the
+        # selector prices the tiered-linear candidate.  ``tiers=True``
+        # enables the default hierarchy.
+        if tiers is True:
+            tiers = TierConfig()
+        self.tiers = tiers
+        # Session-lifetime balance ledger: every per-query TierManager
+        # absorbs its per-tier byte counters (and any leaked pool bytes)
+        # here at cleanup; verify_balanced() is the leak/imbalance gate.
+        self.tier_ledger = TierLedger() if tiers is not None else None
         force = None if policy == "auto" else policy
-        self.selector = selector or PathSelector(work_mem, force=force)
+        self.selector = selector or PathSelector(work_mem, force=force,
+                                                 tiers=tiers)
         if selector is not None and force is not None:
             self.selector.force = force
+        if selector is not None and tiers is not None \
+                and getattr(selector, "tiers", None) is None:
+            selector.tiers = tiers
         self.work_mem = work_mem
         self.spill_root = spill_root
         self.fuse = fuse
@@ -446,7 +464,7 @@ class Executor:
             if fused is not None:
                 return fused
 
-        with SpillManager(self.spill_root, faults=self.faults) as mgr:
+        with self._spill_manager() as mgr:
             out = self._exec(plan, metrics, decisions, mgr)
             out = self._materialize_root(out, metrics)
         result = (QueryResult(out, None, metrics, decisions)
@@ -455,6 +473,32 @@ class Executor:
         self._record_profile(metrics)
         self._record_fragment(plan, decisions, metrics)
         return result
+
+    def _spill_manager(self):
+        """Per-query spill sink: the flat disk :class:`SpillManager`, or —
+        when the session configures a tier hierarchy — a
+        :class:`TierManager` routing spilled partitions/runs through
+        compressed host RAM and the emulated remote tier before disk,
+        absorbing its byte counters into the session-lifetime ledger at
+        cleanup."""
+        if self.tiers is None:
+            return SpillManager(self.spill_root, faults=self.faults)
+        return TierManager(root=self.spill_root, config=self.tiers,
+                           faults=self.faults, retry=self.retry,
+                           ledger=self.tier_ledger)
+
+    @staticmethod
+    def _apply_tier_quota(mgr, grant) -> None:
+        """Scope a tiered grant's per-tier spill quotas onto the per-query
+        tier manager before a linear operator spills.  No-op for the flat
+        SpillManager or a plain (untiered) grant."""
+        setq = getattr(mgr, "set_op_quota", None)
+        if setq is None:
+            return
+        quotas = None if grant is None else getattr(grant, "tier_quotas",
+                                                    None)
+        if quotas is not None:
+            setq(quotas)
 
     # -- runtime feedback ---------------------------------------------------
     def _record_profile(self, metrics, verified_warm: bool = False) -> None:
@@ -509,7 +553,15 @@ class Executor:
         if frag is None:
             return
         _, build, probe = frag
-        prof.record("fragment", "linear", len(build) + len(probe),
+        # Under a configured tier hierarchy every linear spill routed
+        # through the TierManager, so a spilling walk is an observation of
+        # the TIERED linear fragment — it feeds the staircase's own profile
+        # cell.  Spill-free walks are identical on both variants.
+        spilled = any(d.predicted_spill_bytes > 0 for d in decisions) \
+            or any(m.spill.bytes_written > 0 for m in metrics)
+        frag_path = ("linear_tiered"
+                     if self.tiers is not None and spilled else "linear")
+        prof.record("fragment", frag_path, len(build) + len(probe),
                     sum(m.wall_s for m in metrics))
 
     # -- fused fragment dispatch -------------------------------------------
@@ -708,6 +760,7 @@ class Executor:
                         with self._granted(
                                 self.selector.model.hash_need_bytes(len(hb)),
                                 reservation=rsv) as (wm, grant):
+                            self._apply_tier_quota(mgr, grant)
                             token = self._preempt_token(grant)
                             try:
                                 out, m = hash_join_linear(
@@ -757,6 +810,7 @@ class Executor:
                                 self.selector.model.sort_need_bytes(
                                     len(hc), hc.row_bytes()),
                                 reservation=rsv) as (wm, grant):
+                            self._apply_tier_quota(mgr, grant)
                             token = self._preempt_token(grant)
                             try:
                                 out, m = sort_linear(hc, node.keys, wm, mgr,
@@ -813,6 +867,7 @@ class Executor:
                     n_groups = min(len(child), max(1, st.card * scale))
                     with self._granted(self.selector.model.hash_need_bytes(
                             n_groups), reservation=rsv) as (wm, grant):
+                        self._apply_tier_quota(mgr, grant)
                         out, m = group_aggregate_linear(child, node.key,
                                                         node.values, wm, mgr)
                     m.host_syncs += syncs

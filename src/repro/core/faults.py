@@ -41,8 +41,8 @@ from typing import Dict, Optional
 
 __all__ = [
     "QueryRejected", "DeadlineExceeded", "TransientError", "SpillIOError",
-    "DeviceDispatchError", "GrantTimeout", "PreemptedError",
-    "SimulatedCrash", "RetryPolicy", "FaultInjector",
+    "SpillCorruptionError", "DeviceDispatchError", "GrantTimeout",
+    "PreemptedError", "SimulatedCrash", "RetryPolicy", "FaultInjector",
 ]
 
 
@@ -68,7 +68,15 @@ class TransientError(Exception):
 
 
 class SpillIOError(TransientError, OSError):
-    """A spill-file write failed transiently (injected or real EIO)."""
+    """A spill-file read or write failed transiently (injected or real EIO)."""
+
+
+class SpillCorruptionError(TransientError):
+    """A spilled column failed its CRC32 check on read — a torn or
+    bit-flipped tier-1/2 file.  Typed (never silently wrong rows), and
+    transient on purpose: a corrupt TEMP file is recoverable — a tiered read
+    fails over to the next copy down the hierarchy, and a whole-operator
+    retry simply re-spills."""
 
 
 class DeviceDispatchError(TransientError):
@@ -150,7 +158,13 @@ class FaultInjector:
         device is survivable and must NOT error), and raises
         :class:`DeviceDispatchError` with probability ``device_fail_p``;
       * :meth:`on_memory_grant` — called on memory-lease acquisition;
-        raises :class:`GrantTimeout` with probability ``grant_timeout_p``.
+        raises :class:`GrantTimeout` with probability ``grant_timeout_p``;
+      * :meth:`on_spill_read` — called before every spill column read on an
+        I/O-backed tier; raises :class:`SpillIOError` with probability
+        ``spill_read_p`` (the tiered read path fails over down the
+        hierarchy);
+      * :meth:`on_remote_read` — emulated remote-tier slowdown: sleeps
+        ``remote_slow_s`` with probability ``remote_slow_p``.
 
     ``counts()`` reports how many faults each site actually injected — the
     chaos gate asserts they are nonzero, so "survived chaos" can never mean
@@ -159,11 +173,15 @@ class FaultInjector:
 
     def __init__(self, seed: int = 0, spill_io_p: float = 0.0,
                  device_fail_p: float = 0.0, device_slow_p: float = 0.0,
-                 device_slow_s: float = 0.02, grant_timeout_p: float = 0.0):
+                 device_slow_s: float = 0.02, grant_timeout_p: float = 0.0,
+                 spill_read_p: float = 0.0, remote_slow_p: float = 0.0,
+                 remote_slow_s: float = 0.01):
         for name, p in (("spill_io_p", spill_io_p),
                         ("device_fail_p", device_fail_p),
                         ("device_slow_p", device_slow_p),
-                        ("grant_timeout_p", grant_timeout_p)):
+                        ("grant_timeout_p", grant_timeout_p),
+                        ("spill_read_p", spill_read_p),
+                        ("remote_slow_p", remote_slow_p)):
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{name} must be in [0, 1], got {p}")
         self.spill_io_p = float(spill_io_p)
@@ -171,13 +189,18 @@ class FaultInjector:
         self.device_slow_p = float(device_slow_p)
         self.device_slow_s = float(device_slow_s)
         self.grant_timeout_p = float(grant_timeout_p)
+        self.spill_read_p = float(spill_read_p)
+        self.remote_slow_p = float(remote_slow_p)
+        self.remote_slow_s = float(remote_slow_s)
         self._lock = threading.Lock()
         self._rngs = {site: random.Random((seed, site).__hash__() & 0x7FFFFFFF)
                       for site in ("spill_io", "device_fail", "device_slow",
-                                   "grant_timeout")}
+                                   "grant_timeout", "spill_read",
+                                   "remote_slow")}
         self._counts: Dict[str, int] = {
             "spill_io": 0, "spill_kill": 0, "device_fail": 0,
-            "device_slow": 0, "grant_timeout": 0}
+            "device_slow": 0, "grant_timeout": 0, "spill_read": 0,
+            "remote_slow": 0}
         self._kill_countdown: Optional[int] = None
 
     def _roll(self, site: str, p: float) -> bool:
@@ -220,6 +243,23 @@ class FaultInjector:
     def on_memory_grant(self) -> None:
         if self._roll("grant_timeout", self.grant_timeout_p):
             raise GrantTimeout("injected memory-grant admission timeout")
+
+    def on_spill_read(self, path: str = "") -> None:
+        """Called before every spill column *read* on an I/O-backed tier
+        (disk / emulated remote); raises :class:`SpillIOError` with
+        probability ``spill_read_p``.  The tiered read path catches this,
+        retries per :class:`RetryPolicy`, and fails over down the hierarchy
+        to the next resident copy."""
+        if self._roll("spill_read", self.spill_read_p):
+            raise SpillIOError(f"injected spill read error at {path!r}")
+
+    def on_remote_read(self, nbytes: int = 0) -> None:
+        """Called on emulated remote-tier (T1) transfers; sleeps
+        ``remote_slow_s`` with probability ``remote_slow_p`` (a slow remote
+        is survivable and must NOT error — it just makes the tier's priced
+        latency show up in the tail)."""
+        if self._roll("remote_slow", self.remote_slow_p):
+            time.sleep(self.remote_slow_s)
 
     # -- observability --------------------------------------------------------
     def counts(self) -> Dict[str, int]:

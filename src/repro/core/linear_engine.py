@@ -215,17 +215,27 @@ def _grace_join(
         part_paths.append((b_path, p_path, len(b_part), len(p_part)))
     del build, probe  # the operator's working set is now on disk
 
+    prefetch = getattr(mgr, "prefetch", None)
+    if prefetch is not None:
+        # Tiered manager: stream spilled BUILD partitions back up the
+        # hierarchy (T2→T0) in the background while each earlier partition's
+        # probe side is still being consumed — overlapping re-read latency
+        # with join compute.  Promotion is best-effort: already-read or
+        # deleted paths are skipped.
+        prefetch([b for b, p, nb, npr in part_paths
+                  if b is not None and p is not None and nb and npr])
+
     results: List[Relation] = []
     for b_path, p_path, nb, npr in part_paths:
         if b_path is None or p_path is None or nb == 0 or npr == 0:
             for p in (b_path, p_path):
                 if p:
-                    mgr.delete(p)
+                    mgr.delete(p, spill)
             continue
         b_part = mgr.read_relation(b_path, spill)
         p_part = mgr.read_relation(p_path, spill)
-        mgr.delete(b_path)
-        mgr.delete(p_path)
+        mgr.delete(b_path, spill)
+        mgr.delete(p_path, spill)
         if cancel is not None:
             cancel.check()
         results.append(_grace_join(b_part, p_part, key, work_mem, mgr, spill,
@@ -357,7 +367,7 @@ def _merge_runs(
     for c in out_chunks[1:]:
         result = result.concat(c)
     for p in run_paths:
-        mgr.delete(p)
+        mgr.delete(p, spill)
     if final:
         return None, result
     path = mgr.write_relation(result, "run", spill)

@@ -57,11 +57,11 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Optional, Union
+from typing import Dict, Optional, Union
 
-__all__ = ["MemoryGovernor", "MemoryGrant", "MemoryHold", "GovernorStats",
-           "GrantPolicy", "FloorGrantPolicy", "ProportionalShareGrantPolicy",
-           "BrokerInvariantViolation"]
+__all__ = ["MemoryGovernor", "MemoryGrant", "MemoryHold", "TieredGrant",
+           "GovernorStats", "GrantPolicy", "FloorGrantPolicy",
+           "ProportionalShareGrantPolicy", "BrokerInvariantViolation"]
 
 
 class BrokerInvariantViolation(RuntimeError):
@@ -95,6 +95,30 @@ class GrantPolicy:
     def degraded_size(self, requested: int, available: int, floor: int,
                       demand_bytes: int) -> int:
         raise NotImplementedError
+
+    def tier_quotas(self, granted: int, requested: int,
+                    tiers) -> Dict[str, Optional[int]]:
+        """Per-tier SPILL quotas accompanying a :class:`TieredGrant` when
+        the governor has a spill-tier hierarchy attached (``tiers`` is a
+        :class:`~repro.core.tier.TierConfig`-shaped object).
+
+        Default sizing: the compressed T0 pool may hold up to
+        ``max(2 × grant, half the pool)`` — 2× because dictionary encoding
+        + bit packing roughly halves the footprint, and at least half the
+        pool because the operator that NEEDS the staircase is precisely
+        the floor-degraded one (a 1 MB floor grant would otherwise get a
+        2 MB T0 quota and route its whole spill to the slow tiers).  The
+        quota bounds ONE operator's claim; the pool's global capacity cap
+        still holds, so concurrent quotas may oversubscribe it safely
+        (first-come admission, exactly like an OS page cache).  T1 is
+        bounded by its configured capacity; T2 (disk) is the unbounded
+        backstop (``None``).  Policies may override to shape the staircase
+        differently.
+        """
+        cap = int(tiers.t0_capacity)
+        t0 = min(cap, max(2 * int(granted), cap // 2))
+        t1 = tiers.t1_capacity
+        return {"t0": t0, "t1": None if t1 is None else int(t1), "t2": None}
 
 
 class FloorGrantPolicy(GrantPolicy):
@@ -216,6 +240,24 @@ class MemoryGrant:
             self.release()
 
 
+@dataclasses.dataclass
+class TieredGrant(MemoryGrant):
+    """A :class:`MemoryGrant` extended with per-tier spill quotas.
+
+    ``quotas`` maps tier name (``"t0"``/``"t1"``/``"t2"``) to the byte
+    quota this operator may place there (``None`` = only the tier's own
+    capacity caps it).  Issued instead of a plain grant whenever the
+    governor has a spill-tier hierarchy attached
+    (``MemoryGovernor(tiers=...)``); sizing comes from
+    :meth:`GrantPolicy.tier_quotas`.  Release semantics are unchanged —
+    quotas are advisory caps the :class:`~repro.core.tier.TierManager`
+    enforces, not budget the governor tracks (the T0 pool's bytes are
+    bounded BY the quota, which is itself derived from the granted size).
+    """
+
+    quotas: Dict[str, Optional[int]] = dataclasses.field(default_factory=dict)
+
+
 class MemoryHold:
     """A short-TTL commitment of budget bytes placed at decision time.
 
@@ -262,7 +304,8 @@ class MemoryGovernor:
 
     def __init__(self, total_bytes: int, min_grant: int = 1 * MB,
                  full_grant_wait_s: float = 0.0,
-                 policy: Union[str, GrantPolicy, None] = None):
+                 policy: Union[str, GrantPolicy, None] = None,
+                 tiers=None):
         if total_bytes <= 0:
             raise ValueError(f"total_bytes must be positive, got {total_bytes}")
         min_grant = max(1, int(min_grant))
@@ -278,6 +321,9 @@ class MemoryGovernor:
         # smaller hash table over queueing the whole backend)
         self.full_grant_wait_s = float(full_grant_wait_s)
         self.policy = _resolve_policy(policy)
+        # optional spill-tier hierarchy (a TierConfig-shaped object): when
+        # set, every grant is a TieredGrant carrying per-tier spill quotas
+        self.tiers = tiers
         self._in_use = 0
         self._held = 0            # bytes committed to unexpired holds
         self._holds: list = []    # active MemoryHold objects
@@ -426,6 +472,13 @@ class MemoryGovernor:
             return size, avail < floor, self._waiters
 
     # -- grant lifecycle -----------------------------------------------------
+    def _make_grant(self, size: int, requested: int,
+                    wait_s: float) -> MemoryGrant:
+        if self.tiers is None:
+            return MemoryGrant(self, size, requested, wait_s)
+        quotas = self.policy.tier_quotas(size, requested, self.tiers)
+        return TieredGrant(self, size, requested, wait_s, quotas=quotas)
+
     def acquire(self, requested: int, timeout: Optional[float] = None,
                 hold: Optional["MemoryHold"] = None) -> MemoryGrant:
         """Block until at least ``min(requested, min_grant)`` bytes are free,
@@ -466,7 +519,7 @@ class MemoryGovernor:
                                               self._in_use + self._held)
                 if self._in_use + self._held > self.total_bytes:  # pragma: no cover
                     self._stats.over_budget_events += 1
-                return MemoryGrant(self, hold.size, hold.requested, 0.0)
+                return self._make_grant(hold.size, hold.requested, 0.0)
             waited = False
 
             def begin_wait():
@@ -533,7 +586,7 @@ class MemoryGovernor:
             self._stats.peak_in_use = max(self._stats.peak_in_use,
                                           self._in_use + self._held)
             wait_s = time.perf_counter() - t0 if waited else 0.0
-        return MemoryGrant(self, size, requested, wait_s)
+        return self._make_grant(size, requested, wait_s)
 
     def _release(self, size: int, requested: int) -> None:
         with self._cond:

@@ -25,14 +25,31 @@ class SpillAccount:
 
     bytes_written: int = 0
     bytes_read: int = 0
+    # Bytes of temp space released back (partition/run deletion).  Live
+    # occupancy — what tier capacity enforcement actually cares about — is
+    # ``live_bytes = written - freed``; ``bytes_written`` alone only ever
+    # grows and overstates footprint by the whole recursion history.
+    bytes_freed: int = 0
     files_created: int = 0
     partition_passes: int = 0  # recursive partitioning / merge passes
+    # High-water mark of live temp occupancy, maintained by write()/free().
+    peak_live_bytes: int = 0
 
     def write(self, nbytes: int) -> None:
         self.bytes_written += int(nbytes)
+        if self.live_bytes > self.peak_live_bytes:
+            self.peak_live_bytes = self.live_bytes
 
     def read(self, nbytes: int) -> None:
         self.bytes_read += int(nbytes)
+
+    def free(self, nbytes: int) -> None:
+        self.bytes_freed += int(nbytes)
+
+    @property
+    def live_bytes(self) -> int:
+        """Temp bytes written and not yet deleted (true current occupancy)."""
+        return max(0, self.bytes_written - self.bytes_freed)
 
     @property
     def temp_bytes(self) -> int:
@@ -49,8 +66,12 @@ class SpillAccount:
     def merge(self, other: "SpillAccount") -> None:
         self.bytes_written += other.bytes_written
         self.bytes_read += other.bytes_read
+        self.bytes_freed += other.bytes_freed
         self.files_created += other.files_created
         self.partition_passes = max(self.partition_passes, other.partition_passes)
+        # conservative: peaks of sequential operators never overlapped, so
+        # the merged peak is the max, not the sum
+        self.peak_live_bytes = max(self.peak_live_bytes, other.peak_live_bytes)
 
 
 @dataclasses.dataclass
@@ -128,6 +149,10 @@ class OpMetrics:
             "wall_s": round(self.wall_s, 6),
             "temp_mb": round(self.spill.temp_mb, 3),
             "temp_blocks": self.spill.blocks,
+            # leftover live temp space after the operator finished — nonzero
+            # means a partition/run file leaked past its pass
+            "temp_live_mb": round(self.spill.live_bytes / 1e6, 3),
+            "temp_peak_live_mb": round(self.spill.peak_live_bytes / 1e6, 3),
             "passes": self.spill.partition_passes,
             "peak_ws_mb": round(self.peak_working_set_bytes / 1e6, 3),
             "host_syncs": self.host_syncs,

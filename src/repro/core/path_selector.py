@@ -79,17 +79,28 @@ class Decision:
     # single-device fused program, N when the sharded partition-parallel
     # program priced cheaper (requires path == "tensor").
     shards: int = 1
+    # True when the linear candidate that won (or lost) was the TIERED
+    # variant: its spill priced through the T0/T1/T2 staircase instead of
+    # the all-disk cliff (requires a tier hierarchy on the session; the
+    # executor then routes the operator's spill through the TierManager).
+    tiered: bool = False
 
 
 class PathSelector:
     def __init__(self, work_mem: int, cost_model: Optional[CostModel] = None,
                  force: Optional[str] = None,
-                 profile: Optional[RuntimeProfile] = None):
+                 profile: Optional[RuntimeProfile] = None,
+                 tiers=None):
         self.work_mem = int(work_mem)
         self.model = cost_model or CostModel()
         if force not in (None, "linear", "tensor"):
             raise ValueError(force)
         self.force = force
+        # Optional spill-tier hierarchy (a TierConfig): prices the
+        # tiered-linear candidate even when a decision arrives without a
+        # broker quote (ungoverned sessions).  Quotes from a tiered
+        # governor carry fresher per-grant quotas and win when present.
+        self.tiers = tiers
         # A fresh profile per selector by default: observations from one
         # query stream never leak into another's decisions.  Pass
         # runtime_profile.DEFAULT_PROFILE to share across executors.
@@ -325,6 +336,16 @@ class PathSelector:
                + pending_upload_bytes(probe, capacity_bucket(n_p)))
         shards, skew, sharded_h2d = self._sharded_candidate(
             spec, build, probe, max_shards)
+        # tier staircase terms: a tiered governor's quote carries per-grant
+        # quotas + per-byte service times; an ungoverned tiered session
+        # derives them from the configured hierarchy
+        tq = getattr(mem_quote, "tier_quotas", None)
+        tbs = getattr(mem_quote, "tier_byte_s", None)
+        if tq is None and self.tiers is not None:
+            cap0 = int(self.tiers.t0_capacity)
+            tq = (min(cap0, max(2 * wm, cap0 // 2)),
+                  self.tiers.t1_capacity, None)
+            tbs = self.tiers.byte_costs()
         est = self.model.estimate_fragment(
             n_b, n_p, build.row_bytes(), probe.row_bytes(), est_out,
             wm, num_sort_keys=len(spec.sort_keys),
@@ -333,10 +354,27 @@ class PathSelector:
             filter_selectivity=self._filter_selectivity(spec.filter_fn,
                                                         probe, build),
             device_count=shards, partition_skew=skew,
-            sharded_h2d_bytes=sharded_h2d)
+            sharded_h2d_bytes=sharded_h2d,
+            tier_quotas=tq, tier_byte_s=tbs)
         n = n_b + n_p
         t_lin = self.profile.blend(est.t_linear, "fragment", "linear",
                                    n) + mem_wait
+        # Tiered-linear as a DISTINCT candidate with its own profile cell:
+        # same CPU work, spill routed through the priced staircase.  It
+        # competes against plain (disk-cliff) linear for the linear slot so
+        # ``auto`` lands between the cliff and the tensor path.
+        tiered = False
+        if est.spill_bytes > 0 and math.isfinite(est.t_linear_tiered):
+            t_tier = self.profile.blend(est.t_linear_tiered, "fragment",
+                                        "linear_tiered", n) + mem_wait
+            if t_tier < t_lin:
+                note_tier = (f"; tiered-linear staircase priced "
+                             f"{t_tier:.3f}s vs {t_lin:.3f}s disk-spill")
+                t_lin, tiered = t_tier, True
+            else:
+                note_tier = ""
+        else:
+            note_tier = ""
         t_ten = self.profile.blend(est.t_tensor, "fragment", "tensor",
                                    n) + dev_wait
         t_sh, gang_wait = math.inf, 0.0
@@ -349,7 +387,7 @@ class PathSelector:
         use_sharded = t_sh < t_ten
         t_dev = min(t_ten, t_sh)
         dec_shards = shards if use_sharded else 1
-        note = self._wait_note(mem_wait, dev_wait)
+        note = self._wait_note(mem_wait, dev_wait) + note_tier
         if use_sharded:
             note += (f"; sharded over {shards} lanes priced "
                      f"{t_sh:.3f}s vs {t_ten:.3f}s single-device "
@@ -363,7 +401,7 @@ class PathSelector:
                 f"whole linear fragment fits work_mem ({wm} B) and "
                 f"T_linear={t_lin:.3f}s <= T_tensor={t_dev:.3f}s" + note,
                 t_lin, t_dev, 0, h2d,
-                mem_wait_s=mem_wait, dev_wait_s=dev_wait)
+                mem_wait_s=mem_wait, dev_wait_s=dev_wait, tiered=tiered)
         path = "tensor" if t_dev < t_lin else "linear"
         return Decision(
             path,
@@ -375,4 +413,5 @@ class PathSelector:
             t_lin, t_dev, est.spill_bytes,
             sharded_h2d if use_sharded else h2d,
             mem_wait_s=mem_wait, dev_wait_s=dev_wait,
-            shards=dec_shards if path == "tensor" else 1)
+            shards=dec_shards if path == "tensor" else 1,
+            tiered=tiered if path == "linear" else False)

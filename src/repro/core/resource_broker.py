@@ -135,6 +135,14 @@ class PressureQuote:
     # these — which for the classic single-lane request is exactly the
     # lane-0 wait.
     lane_waits: Tuple[float, ...] = ()
+    # Memory quotes under a tiered governor: the per-tier spill quotas the
+    # grant would carry ((t0, t1, t2) bytes; None = unbounded) and the
+    # tiers' modeled per-byte service times ((t0, t1, t2) seconds/byte;
+    # None = use the cost model's calibrated io_byte_cost).  These are the
+    # bandwidth/latency terms the selector folds into tiered-linear spill
+    # pricing — an untiered governor quotes both as None.
+    tier_quotas: Optional[Tuple[Optional[int], ...]] = None
+    tier_byte_s: Optional[Tuple[Optional[float], ...]] = None
 
 
 class Reservation:
@@ -239,6 +247,12 @@ class MemoryLease:
     @property
     def degraded(self) -> bool:
         return self._grant.degraded
+
+    @property
+    def tier_quotas(self):
+        """Per-tier spill quotas when the underlying grant is a
+        :class:`~repro.core.memory_governor.TieredGrant`, else None."""
+        return getattr(self._grant, "quotas", None)
 
     @property
     def released(self) -> bool:
@@ -846,8 +860,20 @@ class ResourceBroker:
                     # blocking (no fresh wait observations to learn from).
                     wait = max(wait, self._mem_ewma_wait_s,
                                self._mem_ewma_hold_s * (0.5 + waiters))
+        tier_quotas = tier_byte_s = None
+        tiers = getattr(gov, "tiers", None)
+        if tiers is not None:
+            # fold the hierarchy's bandwidth/latency terms into the quote:
+            # the quotas THIS grant size would carry plus each tier's
+            # modeled per-byte service time (T1's includes its configured
+            # latency + bandwidth cap)
+            q = gov.policy.tier_quotas(size, max(1, int(request.need_bytes)),
+                                       tiers)
+            tier_quotas = (q.get("t0"), q.get("t1"), q.get("t2"))
+            tier_byte_s = tiers.byte_costs()
         return PressureQuote("memory", size, wait, waiters,
-                             would_block or waiters > 0)
+                             would_block or waiters > 0,
+                             tier_quotas=tier_quotas, tier_byte_s=tier_byte_s)
 
     # -- observability -------------------------------------------------------
     def stats(self) -> BrokerStats:

@@ -73,6 +73,7 @@ from .resource_broker import (BrokerStats, DeviceQueue, ResourceBroker,
                               ResourceRequest)
 from .session import Query, Session
 from .slo import ArrivalProcess, TenantClass
+from .tier import TierConfig
 
 __all__ = ["QueryServer", "ServeReport", "ServedQuery", "ShedQuery",
            "FailedQuery"]
@@ -158,6 +159,13 @@ class ServeReport:
     # gate asserts these are nonzero, so "survived chaos" can never mean
     # "chaos never happened"
     faults: Optional[Dict[str, int]] = None
+    # spill-tier ledger snapshot (None when the session spills straight to
+    # disk): per tier {bytes_written, bytes_read, bytes_freed, live_bytes,
+    # ...} plus pool_leaked_bytes / prefetches / managers — cumulative over
+    # the server's session lifetime, because the balance invariant
+    # (freed == written, live == 0, zero pool leak) is only meaningful at
+    # quiesce over ALL managers, warmup included
+    tiers: Optional[Dict[str, object]] = None
 
     @property
     def qps(self) -> float:
@@ -243,8 +251,12 @@ class QueryServer:
     ``reservations=False`` is the quote-only ablation — ``auto`` prices
     against non-binding quotes and fig13 counts the decide-then-lose
     incidents; ``faults`` plugs a :class:`~repro.core.faults.FaultInjector`
-    into every fault site the serving path crosses (spill writes, device
-    dispatch, memory grants) for chaos runs.
+    into every fault site the serving path crosses (spill writes and reads,
+    device dispatch, memory grants) for chaos runs; ``tiers`` (a
+    :class:`~repro.core.tier.TierConfig`, or ``True`` for the defaults)
+    routes every spill through the T0/T1/T2 hierarchy, makes grants
+    tiered, and adds the session-lifetime per-tier books to the report
+    (``report.tiers``).
     """
 
     def __init__(self, tables: Dict[str, Relation],
@@ -259,6 +271,7 @@ class QueryServer:
                  faults: Optional[FaultInjector] = None,
                  retry=None,
                  max_shards: Optional[int] = None,
+                 tiers: Optional[TierConfig] = None,
                  session: Optional[Session] = None):
         if session is not None:
             # a prebuilt session owns its broker, governor, work_mem and
@@ -272,7 +285,7 @@ class QueryServer:
                          "device_max_batch": device_max_batch,
                          "reservations": reservations,
                          "faults": faults, "retry": retry,
-                         "max_shards": max_shards}
+                         "max_shards": max_shards, "tiers": tiers}
             given = [k for k, v in conflicts.items() if v is not None]
             if given:
                 raise ValueError(
@@ -280,11 +293,16 @@ class QueryServer:
                     f"{'/'.join(given)}; an explicit session already owns "
                     f"its broker, governor, work_mem and policy")
         else:
+            # one TierConfig instance shared by governor (tiered grants +
+            # quote pricing), selector (staircase candidate) and executor
+            # (per-query TierManager construction)
+            if tiers is True:
+                tiers = TierConfig()
             governor = (MemoryGovernor(
                 total_mem,
                 min_grant=1 * MB if min_grant is None else min_grant,
                 full_grant_wait_s=full_grant_wait_s or 0.0,
-                policy=grant_policy)
+                policy=grant_policy, tiers=tiers)
                 if total_mem is not None else None)
             broker = ResourceBroker(
                 governor,
@@ -295,7 +313,8 @@ class QueryServer:
             session = Session(
                 work_mem=32 * MB if work_mem is None else work_mem,
                 policy=policy or "auto", broker=broker, retry=retry,
-                max_shards=1 if max_shards is None else max_shards)
+                max_shards=1 if max_shards is None else max_shards,
+                tiers=tiers)
         self.session = session
         self.governor = session.governor
         self.broker = session.broker
@@ -357,7 +376,10 @@ class QueryServer:
             concurrency=concurrency,
             broker=self.broker.stats().since(base_broker),
             shed=shed, failed=failed, submitted=submitted,
-            faults=fault_counts)
+            faults=fault_counts,
+            tiers=(self.session.tier_ledger.snapshot()
+                   if getattr(self.session, "tier_ledger", None) is not None
+                   else None))
 
     def _served_record(self, res: QueryResult, *, worker: int, seq: int,
                        idx: int, wall_s: float, keep: bool,

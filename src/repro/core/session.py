@@ -73,7 +73,8 @@ class Session:
                  fuse: bool = True, spill_root: Optional[str] = None,
                  governor: Optional["MemoryGovernor"] = None,
                  broker: Optional["ResourceBroker"] = None,
-                 faults=None, retry=None, max_shards: int = 1):
+                 faults=None, retry=None, max_shards: int = 1,
+                 tiers=None):
         if broker is not None and governor is not None \
                 and broker.governor is not governor:
             raise ValueError(
@@ -85,7 +86,8 @@ class Session:
         if selector is None:
             force = None if policy == "auto" else policy
             selector = PathSelector(work_mem, force=force,
-                                    profile=profile or RuntimeProfile())
+                                    profile=profile or RuntimeProfile(),
+                                    tiers=None if tiers is True else tiers)
         elif profile is not None and profile is not selector.profile:
             raise ValueError(
                 "pass either selector or profile: an explicit selector "
@@ -104,7 +106,11 @@ class Session:
                                  spill_root=spill_root, fuse=fuse,
                                  governor=governor, broker=broker,
                                  faults=faults, retry=retry,
-                                 max_shards=max_shards)
+                                 max_shards=max_shards, tiers=tiers)
+        # the executor normalizes tiers (True -> default TierConfig) and
+        # back-fills selector.tiers; expose the resolved config + ledger
+        self.tiers = self.executor.tiers
+        self.tier_ledger = self.executor.tier_ledger
         # the executor resolves the broker (private one per governor, the
         # process default otherwise); the session exposes it as the single
         # handle for leases, quotes and queue stats

@@ -8,18 +8,54 @@ spill regime, rather than simulating them.
 """
 from __future__ import annotations
 
+import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Dict, Optional
 
 import numpy as np
 
-from .faults import FaultInjector, SimulatedCrash
+from .faults import FaultInjector, SimulatedCrash, SpillCorruptionError
 from .metrics import SpillAccount
 from .relation import Relation
 
-__all__ = ["SpillManager"]
+__all__ = ["SpillManager", "RunReader", "column_crc32", "CHECKSUM_FILE"]
+
+# Per-column CRC32 manifest written alongside the .npy files (not itself a
+# column: readers iterate *.npy only).  Extends the PR 6 crash-consistency
+# story to READS: the atomic rename guarantees a complete directory, the
+# manifest guarantees the bytes inside it are the bytes that were written.
+CHECKSUM_FILE = "checksums.json"
+
+
+def column_crc32(arr: np.ndarray) -> int:
+    """CRC32 over a column's raw little-endian bytes (layout-independent)."""
+    return zlib.crc32(np.ascontiguousarray(arr).data) & 0xFFFFFFFF
+
+
+def verify_column(arr: np.ndarray, name: str, base: str,
+                  manifest: Optional[Dict[str, int]]) -> None:
+    """Raise :class:`SpillCorruptionError` when ``arr`` fails its recorded
+    CRC.  A missing manifest (foreign/legacy spill dir) is accepted."""
+    if manifest is None or name not in manifest:
+        return
+    got = column_crc32(arr)
+    if got != manifest[name]:
+        raise SpillCorruptionError(
+            f"spill column {name!r} at {base!r} failed CRC32 "
+            f"(expected {manifest[name]:#010x}, got {got:#010x}) — torn or "
+            f"bit-flipped file")
+
+
+def load_manifest(base: str) -> Optional[Dict[str, int]]:
+    path = os.path.join(base, CHECKSUM_FILE)
+    try:
+        with open(path, "r") as f:
+            return {str(k): int(v) for k, v in json.load(f).items()}
+    except (OSError, ValueError):
+        return None
 
 
 class SpillManager:
@@ -37,10 +73,14 @@ class SpillManager:
         self.dir = tempfile.mkdtemp(prefix="repro_spill_", dir=root)
         self.faults = faults
         self._counter = 0
+        # logical bytes per live base path, so delete() can return the exact
+        # footprint to the account (true live-occupancy tracking)
+        self._sizes: Dict[str, int] = {}
 
     # -- lifecycle -----------------------------------------------------------
     def cleanup(self) -> None:
         shutil.rmtree(self.dir, ignore_errors=True)
+        self._sizes.clear()
 
     def __enter__(self) -> "SpillManager":
         return self
@@ -71,6 +111,8 @@ class SpillManager:
         base = self._next_path(tag)
         tmp = base + ".tmp"
         os.makedirs(tmp, exist_ok=True)
+        total = 0
+        manifest: Dict[str, int] = {}
         try:
             for name, col in rel.columns.items():
                 path = os.path.join(tmp, name + ".npy")
@@ -79,7 +121,14 @@ class SpillManager:
                 np.save(path, col, allow_pickle=False)
                 with open(path, "rb") as f:
                     os.fsync(f.fileno())
+                manifest[name] = column_crc32(col)
                 account.write(col.nbytes)
+                total += col.nbytes
+            mpath = os.path.join(tmp, CHECKSUM_FILE)
+            with open(mpath, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
             dfd = os.open(tmp, os.O_RDONLY)
             try:
                 os.fsync(dfd)
@@ -92,36 +141,55 @@ class SpillManager:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
         account.files_created += len(rel.columns)
+        self._sizes[base] = total
         return base
 
     def read_relation(self, base: str, account: SpillAccount) -> Relation:
+        manifest = load_manifest(base)
         cols: Dict[str, np.ndarray] = {}
         for fname in sorted(os.listdir(base)):
             if not fname.endswith(".npy"):
                 continue
-            arr = np.load(os.path.join(base, fname), allow_pickle=False)
+            path = os.path.join(base, fname)
+            if self.faults is not None:
+                self.faults.on_spill_read(path)
+            arr = np.load(path, allow_pickle=False)
+            verify_column(arr, fname[:-4], base, manifest)
             cols[fname[:-4]] = arr
             account.read(arr.nbytes)
         return Relation(cols)
 
     def open_run_reader(self, base: str, account: SpillAccount) -> "RunReader":
-        return RunReader(base, account)
+        return RunReader(base, account, faults=self.faults)
 
-    def delete(self, base: str) -> None:
+    def delete(self, base: str, account: Optional[SpillAccount] = None) -> None:
+        """Remove a spill dir and, when an account is given, return its
+        logical bytes to the account's live-occupancy counter."""
+        freed = self._sizes.pop(base, None)
+        if account is not None and freed is not None:
+            account.free(freed)
         shutil.rmtree(base, ignore_errors=True)
 
 
 class RunReader:
     """Chunked reader over a spilled relation (memory-mapped, counts bytes read)."""
 
-    def __init__(self, base: str, account: SpillAccount):
+    def __init__(self, base: str, account: SpillAccount,
+                 faults: Optional[FaultInjector] = None):
         self.account = account
         self.cols: Dict[str, np.ndarray] = {}
+        manifest = load_manifest(base)
         for fname in sorted(os.listdir(base)):
             if fname.endswith(".npy"):
-                self.cols[fname[:-4]] = np.load(
-                    os.path.join(base, fname), mmap_mode="r", allow_pickle=False
-                )
+                path = os.path.join(base, fname)
+                if faults is not None:
+                    faults.on_spill_read(path)
+                arr = np.load(path, mmap_mode="r", allow_pickle=False)
+                # CRC verification at open touches every page once — it is
+                # the integrity gate for the whole merge pass; subsequent
+                # read_rows() slices stay lazy via the mmap
+                verify_column(arr, fname[:-4], base, manifest)
+                self.cols[fname[:-4]] = arr
         if not self.cols:
             # a spill dir with no column files (zero-column relation, wrong
             # path, or a cleaned-up partial write) must fail loudly here —

@@ -1,0 +1,460 @@
+"""Tiered spill hierarchy: codec round-trips, CRC integrity, tier placement
+and failover, prefetch overlap, grant quotas, and the balance invariant.
+
+The fig16 benchmark asserts the serving-level gates; these tests pin the
+mechanisms underneath them — a codec that is exact on every dtype corner,
+reads that fail over DOWN the hierarchy on corruption/faults, promotions
+that never race deletes, and books that balance to the byte.
+"""
+import dataclasses
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Relation, Session, SpillCorruptionError, SpillManager,
+                        TierConfig, TierLedger, TierManager)
+from repro.core.faults import FaultInjector, RetryPolicy, SpillIOError
+from repro.core.metrics import SpillAccount
+from repro.core.tier import decode_column, encode_column
+
+MB = 1 << 20
+
+
+def _fast_tiers(**kw):
+    """A hierarchy whose emulated remote tier is effectively free, so tests
+    exercise placement/failover logic without sleeping."""
+    kw.setdefault("t1_latency_s", 0.0)
+    kw.setdefault("t1_gbps", 1000.0)
+    return TierConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Codec: property-style round trips
+# ---------------------------------------------------------------------------
+
+CODEC_CASES = [
+    np.arange(1000, dtype=np.int64),                       # pack-friendly
+    np.array([-5, -5, -5, 7, 7], dtype=np.int64),          # negative + dict
+    np.array([np.iinfo(np.int64).min, np.iinfo(np.int64).max], np.int64),
+    np.repeat(np.int64(42), 4096),                          # single value
+    np.array([], dtype=np.int64),                           # empty
+    np.array([], dtype=np.float64),
+    np.array([0.0, -0.0, np.nan, np.inf, -np.inf], np.float64),
+    np.random.default_rng(7).random(2048),                  # incompressible-ish
+    np.random.default_rng(7).integers(0, 3, 5000).astype(np.int32),
+    np.arange(100, dtype=np.uint64) + np.uint64(2**63),     # high uint range
+    np.array([1.5], dtype=np.float32),
+]
+
+
+@pytest.mark.parametrize("arr", CODEC_CASES,
+                         ids=[f"case{i}" for i in range(len(CODEC_CASES))])
+def test_codec_roundtrip_exact(arr):
+    enc = encode_column(arr)
+    out = decode_column(enc)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    # bit-pattern equality: NaN payloads and signed zeros must round-trip,
+    # which `==` cannot check
+    assert np.array_equal(arr.view(f"u{arr.dtype.itemsize}"),
+                          out.view(f"u{out.dtype.itemsize}"))
+
+
+def test_codec_compresses_low_cardinality():
+    arr = np.random.default_rng(0).integers(0, 16, 100_000).astype(np.int64)
+    enc = encode_column(arr)
+    assert enc.kind in ("dict", "pack")
+    assert enc.nbytes < arr.nbytes / 4  # 4 bits/row vs 64
+
+
+def test_codec_corruption_raises_typed_error():
+    arr = np.arange(256, dtype=np.int64)
+    enc = encode_column(arr)
+    bad = dataclasses.replace(enc, crc=enc.crc ^ 0xDEAD)
+    with pytest.raises(SpillCorruptionError):
+        decode_column(bad)
+
+
+# ---------------------------------------------------------------------------
+# Disk CRC manifests (satellite: torn files must fail loudly)
+# ---------------------------------------------------------------------------
+
+def _flip_byte(base):
+    npy = sorted(f for f in os.listdir(base) if f.endswith(".npy"))[0]
+    path = os.path.join(base, npy)
+    with open(path, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def test_disk_read_detects_bit_flip():
+    rel = Relation({"a": np.arange(100, dtype=np.int64)})
+    with SpillManager() as mgr:
+        base = mgr.write_relation(rel, "p", SpillAccount())
+        _flip_byte(base)
+        with pytest.raises(SpillCorruptionError, match="CRC32"):
+            mgr.read_relation(base, SpillAccount())
+        with pytest.raises(SpillCorruptionError, match="CRC32"):
+            mgr.open_run_reader(base, SpillAccount())
+
+
+def test_disk_read_without_manifest_still_works():
+    """Foreign/legacy spill dirs (no checksums.json) stay readable."""
+    rel = Relation({"a": np.arange(10, dtype=np.int64)})
+    with SpillManager() as mgr:
+        base = mgr.write_relation(rel, "p", SpillAccount())
+        os.remove(os.path.join(base, "checksums.json"))
+        assert mgr.read_relation(base, SpillAccount()).equals(rel)
+
+
+# ---------------------------------------------------------------------------
+# Live temp-space tracking (satellite: delete must decrement)
+# ---------------------------------------------------------------------------
+
+def test_spill_account_live_bytes_tracks_delete():
+    rel = Relation({"a": np.arange(1000, dtype=np.int64)})
+    with SpillManager() as mgr:
+        acct = SpillAccount()
+        b1 = mgr.write_relation(rel, "p", acct)
+        b2 = mgr.write_relation(rel, "p", acct)
+        assert acct.live_bytes == 2 * rel["a"].nbytes
+        assert acct.peak_live_bytes == 2 * rel["a"].nbytes
+        mgr.delete(b1, acct)
+        assert acct.live_bytes == rel["a"].nbytes
+        mgr.delete(b2, acct)
+        assert acct.live_bytes == 0
+        assert acct.peak_live_bytes == 2 * rel["a"].nbytes  # peak sticks
+    from repro.core import OpMetrics
+    m = OpMetrics(op="x", path="linear", rows_in=0, rows_out=0, wall_s=0.0,
+                  spill=acct)
+    r = m.as_row()
+    assert r["temp_live_mb"] == 0.0
+    assert r["temp_peak_live_mb"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# TierManager placement, reads, deletes, balance
+# ---------------------------------------------------------------------------
+
+def _rel(n=1000, seed=0):
+    rng = np.random.default_rng(seed)
+    return Relation({"k": rng.integers(0, 50, n).astype(np.int64),
+                     "v": rng.random(n)})
+
+
+def test_placement_t0_then_t1_then_t2():
+    rel = _rel(4096)  # 64 KB logical
+    led = TierLedger()
+    cfg = _fast_tiers(t0_capacity=80 * 1024, t1_capacity=80 * 1024)
+    with TierManager(config=cfg, ledger=led) as mgr:
+        acct = SpillAccount()
+        bases = [mgr.write_relation(rel, "p", acct) for _ in range(6)]
+        homes = [mgr._home[b] for b in bases]
+        # compressed T0 fills first, then T1, then disk backstop
+        assert homes[0] == "t0"
+        assert "t1" in homes and "t2" in homes
+        assert homes == sorted(homes)  # monotone down the hierarchy
+        for b in bases:
+            assert mgr.read_relation(b, acct).equals(rel)
+            mgr.delete(b, acct)
+        assert acct.live_bytes == 0
+        assert mgr.pool_bytes == 0
+    led.verify_balanced()
+    snap = led.snapshot()
+    for t in ("t0", "t1", "t2"):
+        assert snap[t]["bytes_written"] == snap[t]["bytes_freed"]
+
+
+def test_run_reader_from_memory_tiers_matches_disk_contract():
+    rel = _rel(500)
+    with TierManager(config=_fast_tiers(t0_capacity=4 * MB)) as mgr:
+        acct = SpillAccount()
+        base = mgr.write_relation(rel, "run", acct)
+        assert mgr._home[base] == "t0"
+        reader = mgr.open_run_reader(base, acct)
+        chunks = []
+        while not reader.exhausted:
+            chunks.append(reader.read_rows(123))
+        out = chunks[0]
+        for c in chunks[1:]:
+            out = out.concat(c)
+        assert out.equals(rel)
+        assert acct.bytes_read >= sum(c.nbytes for c in rel.columns.values())
+
+
+def test_op_quota_caps_t0_admission():
+    rel = _rel(4096)
+    with TierManager(config=_fast_tiers(t0_capacity=32 * MB)) as mgr:
+        mgr.set_op_quota({"t0": 0, "t1": None})
+        acct = SpillAccount()
+        base = mgr.write_relation(rel, "p", acct)
+        assert mgr._home[base] == "t1"  # quota, not capacity, kept it out
+        mgr.set_op_quota(None)
+        base2 = mgr.write_relation(rel, "p", acct)
+        assert mgr._home[base2] == "t0"
+        mgr.delete(base, acct)
+        mgr.delete(base2, acct)
+        assert acct.live_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Failover + fault injection on the read path
+# ---------------------------------------------------------------------------
+
+class _FlakyReads(FaultInjector):
+    """Deterministic variant: fail the first N spill reads, then heal."""
+
+    def __init__(self, fail_times):
+        super().__init__()
+        self.remaining = fail_times
+
+    def on_spill_read(self, path=""):
+        if self.remaining > 0:
+            self.remaining -= 1
+            raise SpillIOError(f"injected flaky read at {path!r}")
+
+
+def test_transient_read_faults_retry_then_succeed():
+    rel = _rel(512)
+    faults = _FlakyReads(2)
+    retry = RetryPolicy(max_attempts=4, base_s=1e-4, cap_s=1e-3)
+    cfg = _fast_tiers(t0_capacity=0)  # force T1 home (the injected tier)
+    with TierManager(config=cfg, faults=faults, retry=retry) as mgr:
+        acct = SpillAccount()
+        base = mgr.write_relation(rel, "p", acct)
+        assert mgr._home[base] == "t1"
+        assert mgr.read_relation(base, acct).equals(rel)
+        assert mgr.tier_stats()["t1"]["read_faults"] == 2
+
+
+def test_exhausted_retries_raise_after_failover():
+    rel = _rel(512)
+    faults = FaultInjector(spill_read_p=1.0)
+    retry = RetryPolicy(max_attempts=3, base_s=1e-4, cap_s=1e-3)
+    cfg = _fast_tiers(t0_capacity=0)
+    with TierManager(config=cfg, faults=faults, retry=retry) as mgr:
+        acct = SpillAccount()
+        base = mgr.write_relation(rel, "p", acct)
+        with pytest.raises(SpillIOError):
+            mgr.read_relation(base, acct)
+        assert mgr.tier_stats()["t1"]["read_faults"] == 3
+        assert faults.counts()["spill_read"] >= 3
+        mgr.delete(base, acct)
+
+
+def test_corrupt_t0_copy_fails_over_to_authoritative_tier():
+    rel = _rel(512)
+    cfg = _fast_tiers(t0_capacity=4 * MB)
+    with TierManager(config=cfg) as mgr:
+        acct = SpillAccount()
+        mgr.set_op_quota({"t0": 0, "t1": None})
+        base = mgr.write_relation(rel, "p", acct)   # home = t1
+        mgr.set_op_quota(None)
+        mgr.prefetch([base])
+        mgr.drain_prefetch()
+        assert base in mgr._t0 and mgr.prefetches == 1
+        # poison the promoted pool copy; the authoritative T1 copy survives
+        name, enc = next(iter(mgr._t0[base].items()))
+        mgr._t0[base][name] = dataclasses.replace(enc, crc=enc.crc ^ 1)
+        out = mgr.read_relation(base, acct)
+        assert out.equals(rel)
+        assert mgr.tier_stats()["t0"]["corruptions"] == 1
+        assert base not in mgr._t0  # damaged copy dropped
+        mgr.delete(base, acct)
+        assert mgr.pool_bytes == 0
+
+
+def test_remote_slowdown_injection_is_counted():
+    rel = _rel(256)
+    faults = FaultInjector(remote_slow_p=1.0, remote_slow_s=0.02)
+    cfg = _fast_tiers(t0_capacity=0)
+    with TierManager(config=cfg, faults=faults) as mgr:
+        acct = SpillAccount()
+        base = mgr.write_relation(rel, "p", acct)
+        t0 = time.perf_counter()
+        mgr.read_relation(base, acct)
+        assert time.perf_counter() - t0 >= 0.02
+        assert faults.counts()["remote_slow"] >= 1
+        mgr.delete(base, acct)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch: background promotion overlaps the foreground
+# ---------------------------------------------------------------------------
+
+def test_prefetch_promotes_and_serves_from_t0():
+    rel = _rel(2048)
+    cfg = _fast_tiers(t0_capacity=8 * MB, t1_capacity=0)
+    with TierManager(config=cfg) as mgr:
+        acct = SpillAccount()
+        mgr.set_op_quota({"t0": 0, "t1": 0})  # force the write to disk
+        base = mgr.write_relation(rel, "p", acct)
+        assert mgr._home[base] == "t2"
+        mgr.set_op_quota(None)
+        mgr.prefetch([base])
+        mgr.drain_prefetch()
+        assert mgr.prefetches == 1 and base in mgr._t0
+        mgr.read_relation(base, acct).equals(rel)
+        stats = mgr.tier_stats()
+        assert stats["t0"]["bytes_read"] > 0          # served from the pool
+        assert stats["t0"]["bytes_promoted"] > 0
+        mgr.delete(base, acct)
+        assert mgr.pool_bytes == 0  # promoted copy dropped with the base
+
+
+def test_prefetch_delete_race_leaks_nothing():
+    """A promotion in flight when its base is deleted must not publish into
+    the pool afterwards (the promote-after-delete leak window)."""
+    cfg = _fast_tiers(t0_capacity=8 * MB, t1_capacity=0)
+    led = TierLedger()
+    with TierManager(config=cfg, ledger=led) as mgr:
+        acct = SpillAccount()
+        for seed in range(8):
+            base = mgr.write_relation(_rel(2048, seed), "p", acct)
+            mgr.prefetch([base])
+            mgr.delete(base, acct)  # often beats the promoter
+        mgr.drain_prefetch()
+        assert mgr.pool_bytes == 0
+    led.verify_balanced()
+
+
+def test_prefetch_disabled_is_noop():
+    cfg = _fast_tiers(t0_capacity=8 * MB, t1_capacity=0, prefetch=False)
+    with TierManager(config=cfg) as mgr:
+        acct = SpillAccount()
+        mgr.set_op_quota({"t0": 0, "t1": 0})  # force the write to disk
+        base = mgr.write_relation(_rel(), "p", acct)
+        mgr.set_op_quota(None)
+        mgr.prefetch([base])
+        mgr.drain_prefetch()
+        assert mgr.prefetches == 0 and base not in mgr._t0
+        mgr.delete(base, acct)
+
+
+# ---------------------------------------------------------------------------
+# Tiered grants + pricing
+# ---------------------------------------------------------------------------
+
+def test_governor_hands_out_tiered_grants():
+    from repro.core import MemoryGovernor, TieredGrant
+
+    cfg = _fast_tiers(t0_capacity=4 * MB)
+    gov = MemoryGovernor(16 * MB, tiers=cfg)
+    g = gov.acquire(2 * MB)
+    try:
+        assert isinstance(g, TieredGrant)
+        # t0 quota: capacity-capped max(2x grant, half the pool)
+        assert g.quotas["t0"] == min(4 * MB, max(2 * g.size, 2 * MB))
+        assert g.quotas["t2"] is None  # disk backstop is unbounded
+    finally:
+        g.release()
+
+
+def test_broker_quote_carries_tier_terms():
+    from repro.core import (MemoryGovernor, ResourceBroker, ResourceRequest)
+
+    cfg = _fast_tiers(t0_capacity=4 * MB)
+    gov = MemoryGovernor(16 * MB, tiers=cfg)
+    broker = ResourceBroker(gov)
+    q = broker.price(ResourceRequest("memory", need_bytes=2 * MB))
+    assert q.tier_quotas is not None and len(q.tier_quotas) == 3
+    assert q.tier_byte_s == cfg.byte_costs()
+    # an untiered governor quotes no staircase
+    q2 = ResourceBroker(MemoryGovernor(16 * MB)).price(
+        ResourceRequest("memory", need_bytes=2 * MB))
+    assert q2.tier_quotas is None and q2.tier_byte_s is None
+
+
+def test_cost_model_staircase_beats_disk_cliff():
+    from repro.core import CostModel
+
+    model = CostModel()
+    spill = 64 * MB
+    cheap = model.alpha_tiered(spill, tier_quotas=(spill, None, None),
+                               tier_byte_s=None)
+    disk = model.alpha(spill)
+    assert cheap < disk  # all-T0 staircase undercuts the all-disk cliff
+    est = model.estimate_fragment(
+        500_000, 500_000, 16, 16, 500_000, 1 * MB,
+        tier_quotas=(32 * MB, 256 * MB, None))
+    assert est.spill_bytes > 0
+    assert est.t_linear_tiered < est.t_linear
+    est_plain = model.estimate_fragment(
+        500_000, 500_000, 16, 16, 500_000, 1 * MB)
+    assert est_plain.t_linear_tiered == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: tiered session produces identical results
+# ---------------------------------------------------------------------------
+
+def _star_tables(n=60_000, seed=3):
+    rng = np.random.default_rng(seed)
+    fact = Relation({"k": rng.integers(0, 400, n).astype(np.int64),
+                     "w": rng.random(n)})
+    dim = Relation({"k": np.arange(400, dtype=np.int64),
+                    "v": rng.random(400)})
+    return fact, dim
+
+
+def test_tiered_session_equals_plain_session():
+    fact, dim = _star_tables()
+    kw = dict(work_mem=1 * MB, policy="linear", fuse=False)
+
+    def run(**extra):
+        s = Session(**kw, **extra)
+        s.register("fact", fact).register("dim", dim)
+        q = (s.table("fact").join("dim", on="k").sort("k", "w")
+             .aggregate("b_v", "sum"))
+        return s, q.collect()
+
+    s_plain, plain = run()
+    s_tier, tiered = run(tiers=_fast_tiers(t0_capacity=2 * MB,
+                                           t1_capacity=8 * MB))
+    assert plain.scalar == pytest.approx(tiered.scalar)
+    # the tiny budget genuinely spilled, and it spilled through the tiers
+    assert any(m.spill.bytes_written > 0 for m in tiered.metrics)
+    snap = s_tier.tier_ledger.snapshot()
+    assert sum(snap[t]["bytes_written"] for t in ("t0", "t1", "t2")) > 0
+    s_tier.tier_ledger.verify_balanced()
+
+
+def test_tiered_sort_spill_matches_plain():
+    fact, _ = _star_tables(40_000)
+    kw = dict(work_mem=256 * 1024, policy="linear", fuse=False)
+
+    def run(**extra):
+        s = Session(**kw, **extra)
+        s.register("fact", fact)
+        return s, s.table("fact").sort("k", "w").collect()
+
+    _, plain = run()
+    s_tier, tiered = run(tiers=_fast_tiers(t0_capacity=1 * MB))
+    assert plain.relation.equals(tiered.relation)
+    s_tier.tier_ledger.verify_balanced()
+
+
+# ---------------------------------------------------------------------------
+# Nightly sweep: tier capacities x budgets (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("t0_mb", [0, 2, 16])
+@pytest.mark.parametrize("budget_mb", [6, 24])
+def test_tier_sweep_balances_under_concurrency(t0_mb, budget_mb):
+    from repro.core import QueryServer
+
+    fact, dim = _star_tables(120_000)
+    srv = QueryServer(
+        {"fact": fact, "dim": dim}, total_mem=budget_mb * MB,
+        work_mem=8 * MB, min_grant=1 * MB, policy="linear",
+        tiers=_fast_tiers(t0_capacity=t0_mb * MB, t1_capacity=64 * MB))
+    q = (srv.session.table("fact").join("dim", on="k").sort("k", "w")
+         .aggregate("b_v", "sum"))
+    rep = srv.serve([q], concurrency=4, queries_per_worker=3)
+    assert rep.counts["failed"] == 0
+    assert rep.governor.over_budget_events == 0
+    srv.session.tier_ledger.verify_balanced()
