@@ -83,6 +83,20 @@ class CostConstants:
     # prefetcher (build partitions stream back up while the probe side is
     # still being consumed)
     tier_prefetch_overlap: float = 0.5
+    # -- v9: execution-time guard terms (mid-query re-planning) -------------
+    # relative drift an ExecutionGuard tolerates before it even considers
+    # switching: observed wall / spill may exceed the decision's estimate by
+    # this fraction without firing.  Wide enough that ordinary estimate
+    # noise (the runtime profile's own residual) stays inside the band.
+    guard_band: float = 0.35
+    # margin the priced tensor takeover must win by before a SwitchPoint is
+    # taken: switch only when t_switch * guard_hysteresis < t_remaining.
+    # >1 makes a borderline operator stay put — combined with the guard's
+    # fire-once disarm, the decision can never flip twice.
+    guard_hysteresis: float = 1.25
+    # fixed overhead of abandoning a linear operator mid-query (tearing
+    # down its partial state, re-entering the executor's tensor path)
+    switch_fixed_cost: float = 2.0e-3
 
 
 @dataclasses.dataclass
@@ -327,6 +341,41 @@ class CostModel:
         return FragmentEstimate(spill == 0, int(spill), passes, t_lin, t_ten,
                                 int(h2d_bytes), t_tensor_sharded=t_sh,
                                 t_linear_tiered=t_tiered)
+
+    # -- execution-time guard pricing ---------------------------------------
+    def price_switch(self, rows_pending: int, pending_bytes: int,
+                     pairs: int) -> tuple:
+        """Price finishing a drifted linear operator vs. a tensor takeover.
+
+        Called from an :class:`~repro.core.guards.ExecutionGuard` checkpoint
+        with *observed* remaining work: ``rows_pending`` rows across
+        ``pairs`` still-spilled partition pairs occupying ``pending_bytes``
+        of live temp space.  Returns ``(t_remaining_linear, t_switch)``.
+
+        The linear remainder must at least read the pending bytes back and
+        hash/probe the pending rows; partitions that recurse further pay
+        more, so this is a *lower bound* on the linear side — conservative
+        in exactly the safe direction (the guard under-fires, never
+        over-fires).  The takeover concatenates every reused pair and runs
+        ONE gang tensor join (partitions are key-disjoint, so the result
+        is byte-identical to per-pair joins), so it pays the fixed switch
+        cost, a single dispatch (+2 syncs), per-row tensor work, and the
+        H2D transfer of the pending bytes — ``pairs`` does NOT multiply
+        the dispatch cost; per-pair takeovers were priced out because
+        their fixed cost rivals the linear loop's per-pair work.  The
+        read-back is priced at the H2D rate alone: ``io_byte_cost`` is
+        fitted on the partition pass (hash + scatter + bookkeeping per
+        byte) and overprices a plain sequential spill read by an order
+        of magnitude, which would make every takeover look unaffordable.
+        """
+        c = self.c
+        t_rem = (c.linear_row_cost * max(0, int(rows_pending))
+                 + c.io_byte_cost * max(0, int(pending_bytes)))
+        t_switch = (c.switch_fixed_cost
+                    + c.tensor_fixed_cost + 2 * c.host_sync_cost
+                    + c.tensor_row_cost * max(0, int(rows_pending))
+                    + c.h2d_byte_cost * max(0, int(pending_bytes)))
+        return t_rem, t_switch
 
     # -- calibration -----------------------------------------------------------
     def calibrate(self, n: int = 200_000, seed: int = 0) -> CostConstants:

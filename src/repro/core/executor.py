@@ -33,6 +33,7 @@ import numpy as np
 from .device_relation import DeviceRelation
 from .faults import (DeviceDispatchError, FaultInjector, PreemptedError,
                      RetryPolicy, TransientError)
+from .guards import SwitchPoint
 from .linear_engine import hash_join_linear, sort_linear
 from .memory_governor import MemoryGovernor
 from .metrics import OpMetrics, SpillAccount, Timer
@@ -171,7 +172,8 @@ class Executor:
                  faults: Optional[FaultInjector] = None,
                  retry: Optional[RetryPolicy] = None,
                  max_shards: int = 1,
-                 tiers: Optional[TierConfig] = None):
+                 tiers: Optional[TierConfig] = None,
+                 guards: bool = True):
         if policy not in ("auto", "linear", "tensor"):
             raise ValueError(policy)
         if int(max_shards) < 1:
@@ -242,6 +244,13 @@ class Executor:
         # actual device count at decision time) and run_fused fan out over N
         # broker lanes when it wins.
         self.max_shards = int(max_shards)
+        # Execution-time guards (mid-query adaptive re-planning): when on,
+        # every costed LINEAR join/sort runs under an ExecutionGuard that
+        # re-checks the decision at partition boundaries and can abandon a
+        # mispriced operator for the tensor path mid-query, reusing its
+        # already-spilled partitions.  ``guards=False`` is the static-
+        # decision ablation the fig14 robustness map measures against.
+        self.guards = bool(guards)
         self._tls = _threading.local()
 
     # -- memory grants -------------------------------------------------------
@@ -334,6 +343,121 @@ class Executor:
     def _drop_token(self, token: Optional[PreemptToken]) -> None:
         if token is not None:
             self.broker.unregister_preemptible(token)
+
+    # -- execution-time guards (mid-query re-planning) -----------------------
+    def _guard(self, decision: Decision, op: str, rows_in: int, token):
+        """Cancel token for one linear operator: the selector's
+        ExecutionGuard when guards are on (wrapping the preempt token so
+        broker preemption keeps working through it), else the bare token."""
+        return self.selector.make_guard(decision, op, rows_in, token=token,
+                                        enabled=self.guards)
+
+    @staticmethod
+    def _stamp_switch(m: OpMetrics, sp: SwitchPoint, pre_path: str) -> None:
+        """Account a mid-query switch on the metrics of the run that
+        finished the operator: the abandoned attempt's wall joins wall_s
+        (end-to-end honesty) but is held in pre_switch_wall_s under
+        pre_switch_path so profile feedback attributes each half to the
+        path that actually burned it."""
+        m.switched = True
+        m.pre_switch_wall_s = sp.elapsed_s
+        m.pre_switch_path = pre_path
+        m.wall_s += sp.elapsed_s
+        m.decision_reason = sp.reason
+
+    def _complete_join_switch(self, sp: SwitchPoint, key: str, mgr,
+                              rows_in: int, pre_path: str):
+        """Finish a guard-abandoned Grace join on the tensor path WITHOUT
+        losing the linear prefix's work.
+
+        ``sp.done`` partitions are already joined and kept as-is;
+        ``sp.pending`` pairs are read back from the spill/tier manager
+        (byte-accounted on the operator's own SpillAccount, so the tier
+        books stay balanced), deleted, concatenated, and joined by ONE
+        :func:`~repro.core.tensor_engine.tensor_join_device` gang
+        dispatch.  One dispatch instead of per-pair calls is what makes
+        the switch profitable at all: the per-pair fixed cost (~dispatch
+        + 2 syncs) is on the order of the linear loop's per-pair work,
+        so a pairwise takeover would only break even.  The output stays
+        device-resident (like the normal tensor walk) whenever there is
+        no host prefix to splice in front of it — materializing the
+        joined output to host costs more than the join itself.
+        Concatenation is safe AND byte-identical to per-pair joins:
+        Grace hash-partitions by key, so every build row for a key lives
+        in exactly one partition, the concatenated probe preserves
+        (partition, within-partition) order, and the join's stable build
+        ordering makes each probe row's match list independent of the
+        other partitions' rows."""
+        from .tensor_engine import tensor_join, tensor_join_device
+
+        spill = sp.spill if sp.spill is not None else SpillAccount()
+        results = list(sp.done)
+        reused = 0
+        h2d = 0
+        live = [(b, p, nb, npr) for b, p, nb, npr in sp.pending
+                if b is not None and p is not None and nb and npr]
+        sig = ("switch_join", key, sum(x[2] for x in live),
+               sum(x[3] for x in live))
+        syncs = 0
+        with self._device_leased(sig) as lease:
+            with Timer() as t:
+                for b_path, p_path, nb, npr in sp.pending:
+                    if (b_path is None or p_path is None
+                            or nb == 0 or npr == 0):
+                        for p in (b_path, p_path):
+                            if p:
+                                mgr.delete(p, spill)
+                        continue
+                builds, probes = [], []
+                for b_path, p_path, nb, npr in live:
+                    b_part = mgr.read_relation(b_path, spill)
+                    p_part = mgr.read_relation(p_path, spill)
+                    reused += b_part.nbytes() + p_part.nbytes()
+                    mgr.delete(b_path, spill)
+                    mgr.delete(p_path, spill)
+                    builds.append(b_part)
+                    probes.append(p_part)
+                gang = None
+                if builds:
+                    b_all = builds[0]
+                    for b in builds[1:]:
+                        b_all = b_all.concat(b)
+                    p_all = probes[0]
+                    for p in probes[1:]:
+                        p_all = p_all.concat(p)
+                    dev_b, up_b = self._to_device(b_all)
+                    dev_p, up_p = self._to_device(p_all)
+                    h2d += up_b + up_p
+                    gang, pm = tensor_join_device(dev_b, dev_p, key)
+                    syncs += pm.host_syncs
+                if not results and gang is not None:
+                    # no host prefix: hand the takeover result downstream
+                    # device-resident, exactly like the tensor walk would
+                    out = gang
+                elif gang is None and not results:
+                    # all partitions empty: schema-correct empty result
+                    b_schema, p_schema = sp.schema_hint
+                    empty_b = Relation(
+                        {k: v[:0] for k, v in b_schema.items()})
+                    empty_p = Relation(
+                        {k: v[:0] for k, v in p_schema.items()})
+                    out, pm = tensor_join(empty_b, empty_p, key)
+                    syncs += pm.host_syncs
+                else:
+                    if gang is not None:
+                        results.append(gang.to_host())
+                        syncs += 1
+                    out = results[0]
+                    for r in results[1:]:
+                        out = out.concat(r)
+        m = OpMetrics(op="hash_join", path="tensor", rows_in=rows_in,
+                      rows_out=len(out), wall_s=t.elapsed, spill=spill,
+                      host_syncs=syncs, reused_spill_bytes=reused)
+        m.h2d_bytes += h2d
+        self._stamp_lease(m, lease)
+        self._stamp_switch(m, sp, pre_path)
+        self.broker.note_switch()
+        return out, m
 
     # -- transient-fault handling --------------------------------------------
     def _forced_linear(self) -> bool:
@@ -458,6 +582,7 @@ class Executor:
         decisions: List[Decision] = []
 
         # fused device-resident fast path for recognized fragments
+        self._tls.fragment_switch = None
         if (self.fuse and self.selector.force != "linear"
                 and not self._forced_linear()):
             fused = self._try_fused(plan, metrics, decisions)
@@ -470,6 +595,20 @@ class Executor:
         result = (QueryResult(out, None, metrics, decisions)
                   if isinstance(out, Relation)
                   else QueryResult(None, float(out), metrics, decisions))
+        sw = getattr(self._tls, "fragment_switch", None)
+        if sw is not None and metrics:
+            # a fragment guard abandoned the fused tensor attempt before
+            # this walk: stamp the abandoned wall on the root-most metric so
+            # end-to-end accounting (and ServedQuery.switched) see it
+            self._tls.fragment_switch = None
+            pre_wall, reason = sw
+            m0 = metrics[-1]
+            m0.switched = True
+            m0.pre_switch_wall_s = pre_wall
+            m0.pre_switch_path = "tensor"
+            m0.wall_s += pre_wall
+            m0.decision_reason = (m0.decision_reason + "; " + reason
+                                  if m0.decision_reason else reason)
         self._record_profile(metrics)
         self._record_fragment(plan, decisions, metrics)
         return result
@@ -525,7 +664,20 @@ class Executor:
             # the pressure drains
             if m.grant_degraded:
                 continue
-            prof.record(m.op, m.path, m.rows_in, m.wall_s - m.queue_wait_s,
+            if m.switched:
+                # a guard-switched operator is a HYBRID: part linear prefix,
+                # part tensor completion over the reused partitions.  Its
+                # wall describes neither pure path — splitting it at the
+                # switch boundary still records a partial attempt against
+                # cells that price FULL runs, so the sample is dropped
+                # entirely (the pre-PR behavior charged the whole mixed wall
+                # to the final path's cell, poisoning its estimate).
+                continue
+            # the abandoned pre-switch attempt's wall (preemption requeue)
+            # is excluded the same way: only the finishing run's own cost
+            # enters its path's cell
+            prof.record(m.op, m.path, m.rows_in,
+                        m.wall_s - m.queue_wait_s - m.pre_switch_wall_s,
                         warmup_discard=(m.path == "tensor"
                                         and not verified_warm))
 
@@ -544,6 +696,13 @@ class Executor:
             return
         if any(m.grant_degraded for m in metrics):
             return  # squeezed-grant spill wall: load, not fragment cost
+        if any(m.preempted or m.switched for m in metrics):
+            # the walk did NOT run all-linear even though the decisions say
+            # so: a preemption or guard switch finished part of it on the
+            # tensor path, and recording that wall against the linear
+            # fragment cell is exactly the cross-path pollution this guard
+            # exists to stop (regression-tested)
+            return
         prof = getattr(self.selector, "profile", None)
         if prof is None:
             return
@@ -586,17 +745,43 @@ class Executor:
             if decision.path != "tensor":
                 return None  # generic walk re-quotes (and re-reserves) itself
             decisions.append(decision)
+            frag_guard = None
+            if self.guards:
+                from .guards import ExecutionGuard
+
+                # fragment guard: observes the fused program's capacity
+                # overflows (actual join fan-out vs. the optimistic bucket)
+                # and can abandon the retry loop when the re-priced linear
+                # fragment beats re-running at the exact bucket
+                frag_guard = ExecutionGuard(
+                    self.selector.model, op="fused_pipeline",
+                    t_linear=max(0.0,
+                                 decision.t_linear - decision.mem_wait_s),
+                    t_tensor=decision.t_tensor, predicted_spill_bytes=0,
+                    rows_in=len(build) + len(probe))
+            t_pre = time.perf_counter()
             try:
                 result, m = run_fused(spec, build, probe,
                                       decision_reason=decision.reason,
                                       broker=self.broker,
-                                      shards=decision.shards)
+                                      shards=decision.shards,
+                                      guard=frag_guard)
             except TransientError:
                 # an injected/real infrastructure fault is NOT a fallback
                 # case: it must reach the retry loop (and the device-failure
                 # counter), not silently reroute onto the generic walk
                 decisions.pop()
                 raise
+            except SwitchPoint as sp:
+                # the fragment guard reversed the decision on observed
+                # fan-out: hand the plan to the generic walk, which
+                # re-quotes with its own (now wiser) decisions; the
+                # abandoned wall is stamped after the walk completes
+                decisions.pop()
+                self._tls.fragment_switch = (time.perf_counter() - t_pre,
+                                             sp.reason)
+                self.broker.note_switch()
+                return None
             except Exception:
                 # e.g. a predicate that cannot trace (np.nonzero & friends):
                 # fall back to the generic walk, which evaluates it on host
@@ -756,15 +941,19 @@ class Executor:
                     out, m = join_tensor()
                 else:
                     hb, hp, syncs = self._lower_for_linear(build, probe)
+                    pre_path = "linear_tiered" if decision.tiered else "linear"
+                    t_pre = time.perf_counter()
                     try:
                         with self._granted(
                                 self.selector.model.hash_need_bytes(len(hb)),
                                 reservation=rsv) as (wm, grant):
                             self._apply_tier_quota(mgr, grant)
                             token = self._preempt_token(grant)
+                            guard = self._guard(decision, "hash_join",
+                                                len(hb) + len(hp), token)
                             try:
                                 out, m = hash_join_linear(
-                                    hb, hp, node.key, wm, mgr, cancel=token)
+                                    hb, hp, node.key, wm, mgr, cancel=guard)
                             finally:
                                 self._drop_token(token)
                         m.host_syncs += syncs
@@ -772,13 +961,45 @@ class Executor:
                     except PreemptedError:
                         # the broker cancelled this floor-degraded spill:
                         # requeue on the tensor path (the grant is already
-                        # released by the _granted exit)
+                        # released by the _granted exit).  The abandoned
+                        # attempt's wall is kept under pre_switch_* so
+                        # end-to-end accounting stays honest without
+                        # polluting the tensor profile cell.
+                        pre_wall = time.perf_counter() - t_pre
                         out, m = join_tensor()
                         m.preempted = True
+                        m.wall_s += pre_wall
+                        m.pre_switch_wall_s = pre_wall
+                        m.pre_switch_path = pre_path
+                    except SwitchPoint as sp:
+                        # the guard reversed the decision mid-spill: finish
+                        # on the tensor path, reusing the already-spilled
+                        # partitions (the grant is released; mgr is alive)
+                        if sp.restart:
+                            # fired mid-partition-pass: no reusable prefix
+                            # yet — drop the partial spill files (keeping
+                            # the books balanced) and re-run the whole
+                            # join from the base relations, which hit the
+                            # device column cache
+                            spill = sp.spill if sp.spill is not None \
+                                else SpillAccount()
+                            for p in sp.pending:
+                                if p:
+                                    mgr.delete(p, spill)
+                            out, m = join_tensor()
+                            m.spill = spill
+                            self._stamp_switch(m, sp, pre_path)
+                            self.broker.note_switch()
+                        else:
+                            out, m = self._complete_join_switch(
+                                sp, node.key, mgr, len(hb) + len(hp),
+                                pre_path)
+                        m.host_syncs += syncs
             finally:
                 if rsv is not None:
                     rsv.cancel()  # idempotent; no-op after conversion
-            m.decision_reason = decision.reason
+            if not m.switched:
+                m.decision_reason = decision.reason
             metrics.append(m)
             return out
         if isinstance(node, Sort):
@@ -805,6 +1026,8 @@ class Executor:
                     out, m = sort_tensor()
                 else:
                     hc, syncs = self._lower_for_linear(child)
+                    pre_path = "linear_tiered" if decision.tiered else "linear"
+                    t_pre = time.perf_counter()
                     try:
                         with self._granted(
                                 self.selector.model.sort_need_bytes(
@@ -812,20 +1035,40 @@ class Executor:
                                 reservation=rsv) as (wm, grant):
                             self._apply_tier_quota(mgr, grant)
                             token = self._preempt_token(grant)
+                            guard = self._guard(decision, "sort", len(hc),
+                                                token)
                             try:
                                 out, m = sort_linear(hc, node.keys, wm, mgr,
-                                                     cancel=token)
+                                                     cancel=guard)
                             finally:
                                 self._drop_token(token)
                         m.host_syncs += syncs
                         self._stamp_grant(m, grant)
                     except PreemptedError:
+                        pre_wall = time.perf_counter() - t_pre
                         out, m = sort_tensor()
                         m.preempted = True
+                        m.wall_s += pre_wall
+                        m.pre_switch_wall_s = pre_wall
+                        m.pre_switch_path = pre_path
+                    except SwitchPoint as sp:
+                        # sort has no cross-path partial order to reuse:
+                        # drop the abandoned runs (balancing the spill
+                        # books) and re-run from the base relation on device
+                        spill = sp.spill if sp.spill is not None \
+                            else SpillAccount()
+                        for p in sp.pending:
+                            if p:
+                                mgr.delete(p, spill)
+                        out, m = sort_tensor()
+                        m.spill = spill
+                        self._stamp_switch(m, sp, pre_path)
+                        self.broker.note_switch()
             finally:
                 if rsv is not None:
                     rsv.cancel()
-            m.decision_reason = decision.reason
+            if not m.switched:
+                m.decision_reason = decision.reason
             metrics.append(m)
             return out
         if isinstance(node, GroupBy):

@@ -661,7 +661,8 @@ def _host_plan(build: Relation, probe: Relation, key: str):
 
 def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
               decision_reason: str = "", broker=None,
-              shards: Optional[int] = None) -> Tuple[object, OpMetrics]:
+              shards: Optional[int] = None,
+              guard=None) -> Tuple[object, OpMetrics]:
     """Execute a fused fragment; returns (Relation | float, OpMetrics).
 
     Happy path: one compiled program launch + one batched device→host fetch.
@@ -681,6 +682,13 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
     is not :func:`sharded_supported` or fewer devices exist (metrics then
     report ``devices=1``); dispatch holds a gang lease over one broker
     lane per device.
+
+    ``guard`` is an optional :class:`~repro.core.guards.ExecutionGuard`:
+    a capacity overflow — the device reporting the ACTUAL join fan-out —
+    is fed to ``guard.observe_fragment`` before the retry, which may raise
+    :class:`~repro.core.guards.SwitchPoint` to abandon the retry loop when
+    the re-priced linear fragment beats a second dispatch at the exact
+    bucket (the executor's generic walk then re-plans with ground truth).
     """
     if broker is None:
         from .resource_broker import default_broker
@@ -743,6 +751,11 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
                 continue
             if total <= capacity:
                 break
+            if guard is not None:
+                # the overflow IS the observed fan-out: let the execution-
+                # time guard re-check the fragment decision before paying
+                # the retry dispatch (raises SwitchPoint to abandon)
+                guard.observe_fragment(total, capacity)
             capacity = capacity_bucket(total)  # rare: bucket overflowed
         if spec.agg is not None:
             if spec.agg[1] in ("min", "max") and int(fetched["agg_n"]) == 0:

@@ -201,15 +201,33 @@ def _grace_join(
     probe_schema = {k: v for k, v in probe.columns.items()}
     fanout = int(min(MAX_FANOUT, max(2, _next_pow2(int(math.ceil(est / work_mem))))))
     spill.partition_passes = max(spill.partition_passes, depth + 1)
+    observe = getattr(cancel, "observe_fanout", None)
+    if observe is not None:
+        # execution-time guard: record the partition geometry actually chosen
+        observe(est, fanout, depth)
     bh = (_splitmix64(build[key].astype(np.int64), salt=100 + depth) % np.uint64(fanout)).astype(np.int64)
     ph = (_splitmix64(probe[key].astype(np.int64), salt=100 + depth) % np.uint64(fanout)).astype(np.int64)
 
+    # Intra-pass restart checkpoints: by the first pair boundary the whole
+    # partitioning pass is sunk cost, so a badly mispriced decision is most
+    # profitably abandoned *here*.  Mid-pass there is no reusable prefix —
+    # the guard fires a restart SwitchPoint carrying the partial spill
+    # files for deletion and the executor re-runs from the base relations.
+    part_cp = getattr(cancel, "checkpoint_partition", None) if depth == 0 else None
+    rows_total = len(build) + len(probe)
+    rows_done = 0
     part_paths = []
     for f in range(fanout):
         if cancel is not None:
             cancel.check()  # per-partition poll: bounded preemption latency
+        if part_cp is not None:
+            part_cp(rows_done=rows_done, rows_total=rows_total,
+                    files=[p for bp, pp, *_ in part_paths
+                           for p in (bp, pp) if p],
+                    spill=spill)
         b_part = build.take(np.nonzero(bh == f)[0])
         p_part = probe.take(np.nonzero(ph == f)[0])
+        rows_done += len(b_part) + len(p_part)
         b_path = mgr.write_relation(b_part, f"jb{depth}", spill) if len(b_part) else None
         p_path = mgr.write_relation(p_part, f"jp{depth}", spill) if len(p_part) else None
         part_paths.append((b_path, p_path, len(b_part), len(p_part)))
@@ -225,8 +243,17 @@ def _grace_join(
         prefetch([b for b, p, nb, npr in part_paths
                   if b is not None and p is not None and nb and npr])
 
+    # Execution-time guard checkpoints fire only at depth 0, where partial
+    # state is a clean prefix: ``results`` holds fully-joined partitions and
+    # ``part_paths[i:]`` are untouched spilled pairs a tensor takeover can
+    # reuse through the same spill manager.  Inside the recursion a pair is
+    # half-consumed and a switch would lose work.
+    checkpoint = getattr(cancel, "checkpoint", None) if depth == 0 else None
     results: List[Relation] = []
-    for b_path, p_path, nb, npr in part_paths:
+    for i, (b_path, p_path, nb, npr) in enumerate(part_paths):
+        if checkpoint is not None:
+            checkpoint(done=results, pending=part_paths[i:], spill=spill,
+                       schema_hint=(build_schema, probe_schema))
         if b_path is None or p_path is None or nb == 0 or npr == 0:
             for p in (b_path, p_path):
                 if p:
@@ -399,9 +426,17 @@ def sort_linear(
                 row_bytes = rel.row_bytes()
                 rows_per_run = max(64, work_mem // max(1, row_bytes))
                 run_paths: List[str] = []
+                # mid-pass restart checkpoint: sorted runs carry no
+                # reusable cross-path state, so abandoning during run
+                # formation (before the sunk cost grows) just deletes the
+                # runs written so far and re-runs the tensor sort
+                part_cp = getattr(cancel, "checkpoint_partition", None)
                 for start in range(0, len(rel), rows_per_run):
                     if cancel is not None:
                         cancel.check()  # per-run poll
+                    if part_cp is not None:
+                        part_cp(rows_done=start, rows_total=len(rel),
+                                files=list(run_paths), spill=spill)
                     chunk = Relation(
                         {k: v[start : start + rows_per_run] for k, v in rel.columns.items()}
                     )
@@ -411,10 +446,17 @@ def sort_linear(
                 peak = 2 * rows_per_run * row_bytes
                 # multi-pass merge limited by work_mem-funded buffers
                 fan_in = max(2, work_mem // MERGE_BUFFER_BYTES - 1)
+                # execution-time guard checkpoints at merge-pass boundaries:
+                # sort has no reusable cross-path partial order, so a fired
+                # guard hands the still-live run paths back for deletion and
+                # the tensor sort re-runs from the base relation.
+                checkpoint = getattr(cancel, "checkpoint_sort", None)
                 out = None
                 while True:
                     if cancel is not None:
                         cancel.check()  # per-merge-pass poll
+                    if checkpoint is not None:
+                        checkpoint(pending=run_paths, spill=spill)
                     spill.partition_passes += 1
                     if len(run_paths) <= fan_in:
                         _, out = _merge_runs(run_paths, keys, mgr, spill, row_bytes, final=True)

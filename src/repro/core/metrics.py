@@ -139,6 +139,23 @@ class OpMetrics:
     # fragment (one broker lane per device; queue_wait_s then accumulates
     # the gang acquisition's blocked time across lanes).
     devices: int = 1
+    # True when an ExecutionGuard abandoned this operator's first path
+    # mid-query and the tensor path finished it (a SwitchPoint, distinct
+    # from broker preemption: the operator itself decided its decision was
+    # mispriced).  ``path`` then names the path that produced the result;
+    # the abandoned attempt is described by the pre_switch_* fields.
+    switched: bool = False
+    # Wall seconds the abandoned pre-switch (or pre-preemption) attempt
+    # burned before the switch point.  Included in wall_s so end-to-end
+    # query accounting stays honest, but attributed to pre_switch_path —
+    # never to the final path's runtime-profile cell.
+    pre_switch_wall_s: float = 0.0
+    pre_switch_path: str = ""
+    # Logical bytes of already-spilled partitions the switch completion
+    # read back through the spill/tier manager instead of rebuilding from
+    # the base relations (the loss-free reuse the guard contract promises;
+    # also counted in spill.bytes_read, so books stay balanced).
+    reused_spill_bytes: int = 0
 
     def as_row(self) -> Dict[str, object]:
         return {
@@ -159,6 +176,7 @@ class OpMetrics:
             "h2d_mb": round(self.h2d_bytes / 1e6, 3),
             "grant_mb": round(self.grant_bytes / 1e6, 3),
             "devices": self.devices,
+            "switched": self.switched,
             "reason": self.decision_reason,
         }
 

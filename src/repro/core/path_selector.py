@@ -150,6 +150,36 @@ class PathSelector:
             return 1.0
         return key_stats(build, key).dup
 
+    # -- execution-time guards (PR 9) ---------------------------------------
+    def make_guard(self, decision: Decision, op: str, rows_in: int,
+                   token=None, enabled: bool = True):
+        """An :class:`~repro.core.guards.ExecutionGuard` re-checking this
+        decision while the chosen linear operator runs.
+
+        The selector owns re-decision policy for the same reason it owns the
+        initial decision: the guard band, hysteresis margin, and switch
+        pricing all come from the same :class:`CostModel` that priced the
+        path in the first place, so a switch only fires when the model —
+        fed *observed* drift instead of estimates — reverses its own
+        verdict.  Forced decisions are never guarded (a forced path is the
+        experiment's control, not a costed choice); neither are non-linear
+        paths (the guard's escape hatch IS the tensor takeover).  Returns
+        ``token`` unchanged when no guard applies, so the caller can pass
+        the result straight through as the operator's cancel token.
+        """
+        if not enabled or self.force is not None or decision.path != "linear":
+            return token
+        from .guards import ExecutionGuard
+
+        # the guard clocks execution wall AFTER admission; strip the folded
+        # queue-wait term so drift is measured against execution cost only
+        return ExecutionGuard(
+            self.model, op=op,
+            t_linear=max(0.0, decision.t_linear - decision.mem_wait_s),
+            t_tensor=decision.t_tensor,
+            predicted_spill_bytes=decision.predicted_spill_bytes,
+            rows_in=rows_in, token=token)
+
     # -- join ---------------------------------------------------------------
     def choose_join(self, build: Relation, probe: Relation, key: str,
                     work_mem: Optional[int] = None,

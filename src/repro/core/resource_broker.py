@@ -595,6 +595,7 @@ class BrokerStats:
                                     # waited or got a smaller grant
     preempt_registered: int = 0     # degraded linear ops that ran preemptible
     preemptions: int = 0            # tokens actually cancelled
+    switches: int = 0               # guard-initiated mid-query path switches
     # Per-lane DeviceQueue snapshots (lane 0 first — the same queue the
     # device_* aggregate fields above describe; lanes beyond 0 exist only
     # on brokers serving sharded dispatch).  Each entry is the lane's
@@ -611,7 +612,7 @@ class BrokerStats:
                   "device_bypassed", "device_wait_s_total", "mem_leases",
                   "mem_wait_s_total", "quotes", "quotes_blocking",
                   "reservations", "decide_then_lose", "preempt_registered",
-                  "preemptions"):
+                  "preemptions", "switches"):
             setattr(out, f, getattr(self, f) - getattr(base, f))
         lanes = []
         for i, lane in enumerate(self.lanes):
@@ -667,6 +668,7 @@ class ResourceBroker:
         self._preemptible: List[PreemptToken] = []
         self._preempt_registered = 0
         self._preemptions = 0
+        self._switches = 0
 
     # -- leases --------------------------------------------------------------
     def memory_lease(self, need_bytes: int, timeout: Optional[float] = None,
@@ -802,6 +804,14 @@ class ResourceBroker:
             t.cancel()
         return len(victims)
 
+    def note_switch(self) -> None:
+        """Count a guard-initiated mid-query path switch (executor calls
+        this when a SwitchPoint is taken).  Observability only — switching
+        consumes no broker resource; the takeover path acquires its own
+        leases through the normal sites."""
+        with self._lock:
+            self._switches += 1
+
     def _record_mem_hold(self, hold_s: float) -> None:
         with self._lock:
             self._mem_ewma_hold_s = _ewma(self._mem_ewma_hold_s, hold_s)
@@ -902,6 +912,7 @@ class ResourceBroker:
                 decide_then_lose=self._decide_then_lose,
                 preempt_registered=self._preempt_registered,
                 preemptions=self._preemptions,
+                switches=self._switches,
             )
 
 

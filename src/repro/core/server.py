@@ -104,6 +104,9 @@ class ServedQuery:
     service_s: float = 0.0     # open loop: execution time excl. queueing
     slo_ok: bool = True        # open loop: sojourn <= tenant deadline
     preempted: bool = False    # any operator was preempted → tensor re-run
+    switched: bool = False     # any operator took a guard SwitchPoint:
+                               # abandoned its mispriced path mid-query and
+                               # finished on the tensor path (partition reuse)
 
 
 @dataclasses.dataclass
@@ -272,6 +275,7 @@ class QueryServer:
                  retry=None,
                  max_shards: Optional[int] = None,
                  tiers: Optional[TierConfig] = None,
+                 guards: Optional[bool] = None,
                  session: Optional[Session] = None):
         if session is not None:
             # a prebuilt session owns its broker, governor, work_mem and
@@ -285,7 +289,8 @@ class QueryServer:
                          "device_max_batch": device_max_batch,
                          "reservations": reservations,
                          "faults": faults, "retry": retry,
-                         "max_shards": max_shards, "tiers": tiers}
+                         "max_shards": max_shards, "tiers": tiers,
+                         "guards": guards}
             given = [k for k, v in conflicts.items() if v is not None]
             if given:
                 raise ValueError(
@@ -314,7 +319,8 @@ class QueryServer:
                 work_mem=32 * MB if work_mem is None else work_mem,
                 policy=policy or "auto", broker=broker, retry=retry,
                 max_shards=1 if max_shards is None else max_shards,
-                tiers=tiers)
+                tiers=tiers,
+                guards=True if guards is None else guards)
         self.session = session
         self.governor = session.governor
         self.broker = session.broker
@@ -397,7 +403,8 @@ class QueryServer:
             batched=any(m.batched for m in res.metrics),
             tenant=tenant, arrival_s=arrival_s,
             service_s=service_s or wall_s, slo_ok=slo_ok,
-            preempted=any(m.preempted for m in res.metrics))
+            preempted=any(m.preempted for m in res.metrics),
+            switched=any(m.switched for m in res.metrics))
 
     # -- closed-loop stream --------------------------------------------------
     def serve(self, workload: Sequence, concurrency: int,

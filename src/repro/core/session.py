@@ -74,7 +74,7 @@ class Session:
                  governor: Optional["MemoryGovernor"] = None,
                  broker: Optional["ResourceBroker"] = None,
                  faults=None, retry=None, max_shards: int = 1,
-                 tiers=None):
+                 tiers=None, guards: bool = True):
         if broker is not None and governor is not None \
                 and broker.governor is not governor:
             raise ValueError(
@@ -102,11 +102,15 @@ class Session:
         self.selector = selector
         self.profile = selector.profile
         self.governor = governor
+        # ``guards`` toggles mid-query adaptive re-planning (execution-time
+        # guards on costed linear operators); off is the static-decision
+        # ablation the fig14 robustness map measures against
         self.executor = Executor(work_mem, policy=policy, selector=selector,
                                  spill_root=spill_root, fuse=fuse,
                                  governor=governor, broker=broker,
                                  faults=faults, retry=retry,
-                                 max_shards=max_shards, tiers=tiers)
+                                 max_shards=max_shards, tiers=tiers,
+                                 guards=guards)
         # the executor normalizes tiers (True -> default TierConfig) and
         # back-fills selector.tiers; expose the resolved config + ledger
         self.tiers = self.executor.tiers

@@ -1,0 +1,297 @@
+"""Mid-query adaptive re-planning: execution-time guards and switches.
+
+Covers the PR-9 tentpole contracts: guard-band hysteresis (a borderline
+operator switches at most once, never oscillates), loss-free takeovers
+(bit-for-bit results, balanced spill/tier books, reused partitions
+byte-accounted), profile hygiene (a switched hybrid run never pollutes a
+pure path's runtime-profile cell), and the chaos hammer — switches under
+concurrent governed serving with fault injection keep every ledger
+invariant."""
+import numpy as np
+import pytest
+
+from repro.core import (FaultInjector, Relation, Session, TierConfig,
+                        QueryServer)
+from repro.core.cost_model import CostModel
+from repro.core.guards import ExecutionGuard, SwitchPoint
+
+MB = 1 << 20
+STALE = 0.02  # fig14's mis-calibration: linear priced ~50x too cheap
+
+
+def star_tables(n=250_000, seed=14):
+    rng = np.random.default_rng(seed)
+    build = Relation({"k": rng.permutation(n).astype(np.int64),
+                      "v": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    probe = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                      "w": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    return build, probe
+
+
+def stale_session(wm=256 * 1024, guards=True, **kw):
+    """An auto session whose one-shot decision is mispriced toward the
+    linear spill cliff — the premature lock-in the guards exist to undo."""
+    s = Session(work_mem=wm, policy="auto", guards=guards, **kw)
+    s.selector.model.c.linear_row_cost *= STALE
+    s.selector.model.c.io_byte_cost *= STALE
+    return s
+
+
+def run_join(s, build, probe):
+    s.register("b", build).register("p", probe)
+    return (s.table("p").join("b", on="k").aggregate("b_v", "sum")).collect()
+
+
+# ---------------------------------------------------------------------------
+# Guard-band hysteresis: unit level
+# ---------------------------------------------------------------------------
+
+class _Spill:
+    def __init__(self, written=0, live=0):
+        self.bytes_written = written
+        self.live_bytes = live
+
+
+def _guard(**kw):
+    kw.setdefault("op", "hash_join")
+    kw.setdefault("t_linear", 1e-6)   # everything drifts immediately
+    kw.setdefault("t_tensor", 1e-3)
+    kw.setdefault("predicted_spill_bytes", 0)
+    kw.setdefault("rows_in", 1 << 20)
+    return ExecutionGuard(CostModel(), **kw)
+
+
+def test_borderline_guard_never_fires():
+    """Inside the hysteresis margin the guard stays put — the operator
+    drifted (unpredicted spill) but the tiny remaining work can never pay
+    the fixed switch cost, so 50 consecutive checkpoints all decline."""
+    g = _guard(t_linear=10.0)  # wall never crosses the band; the spill does
+    spill = _Spill(written=1 << 20, live=1 << 10)
+    for _ in range(50):
+        g.checkpoint(done=[], pending=[("b", "p", 4, 4)], spill=spill,
+                     schema_hint=None)
+    assert g.checkpoints == 50 and not g.fired
+
+
+def test_profitable_guard_fires_exactly_once():
+    g = _guard()
+    spill = _Spill(written=64 * MB, live=64 * MB)
+    pending = [("b", "p", 200_000, 200_000)] * 8
+    with pytest.raises(SwitchPoint) as si:
+        for _ in range(50):
+            g.checkpoint(done=[], pending=pending, spill=spill,
+                         schema_hint=None)
+    assert g.checkpoints == 1 and g.fired
+    assert si.value.op == "hash_join" and not si.value.restart
+    # disarmed: the same drifted state can never fire a second switch
+    for _ in range(50):
+        g.checkpoint(done=[], pending=pending, spill=spill,
+                     schema_hint=None)
+    assert not any(m for m in [])  # no exception escaped the loop above
+
+
+def test_restart_checkpoint_respects_allow_restart():
+    g = _guard(allow_restart=False)
+    spill = _Spill(written=64 * MB, live=64 * MB)
+    for _ in range(20):
+        g.checkpoint_partition(rows_done=100_000, rows_total=1 << 21,
+                               files=["a", "b"], spill=spill)
+    assert not g.fired
+    g2 = _guard()
+    with pytest.raises(SwitchPoint) as si:
+        for _ in range(20):
+            g2.checkpoint_partition(rows_done=100_000, rows_total=1 << 21,
+                                    files=["a", "b"], spill=spill)
+    assert si.value.restart and si.value.pending == ["a", "b"]
+
+
+def test_disabled_guard_is_a_plain_token():
+    g = _guard(enabled=False)
+    spill = _Spill(written=64 * MB, live=64 * MB)
+    g.checkpoint(done=[], pending=[("b", "p", 10 ** 6, 10 ** 6)] * 8,
+                 spill=spill, schema_hint=None)
+    g.checkpoint_partition(rows_done=1, rows_total=1 << 21, files=[],
+                           spill=spill)
+    g.checkpoint_sort(pending=["r"] * 8, spill=spill)
+    g.check()  # PreemptToken protocol with no wrapped token: no-op
+    assert not g.fired
+
+
+# ---------------------------------------------------------------------------
+# Loss-free switches: end to end
+# ---------------------------------------------------------------------------
+
+def _switched_metrics(res):
+    return [m for m in res.metrics if m.switched]
+
+
+def test_restart_switch_is_bit_for_bit():
+    build, probe = star_tables(120_000)
+    ref = run_join(Session(work_mem=64 * MB, policy="linear"), build, probe)
+    res = run_join(stale_session(), build, probe)
+    sw = _switched_metrics(res)
+    assert len(sw) == 1, [m.op for m in res.metrics]
+    m = sw[0]
+    assert res.scalar == ref.scalar
+    assert m.path == "tensor" and m.pre_switch_path == "linear"
+    assert m.pre_switch_wall_s > 0
+    assert m.wall_s >= m.pre_switch_wall_s
+    # mid-partition restart reuses nothing; the partial spill is deleted
+    # and the books balance
+    assert m.spill.live_bytes == 0
+    assert m.spill.bytes_written == m.spill.bytes_freed
+
+
+def test_pair_boundary_switch_reuses_spilled_partitions():
+    """With restarts disabled the guard can only fire at a pair boundary,
+    where the takeover reads the already-spilled partitions back instead
+    of re-partitioning — and those bytes are accounted as reused."""
+    build, probe = star_tables(250_000)
+    ref = run_join(Session(work_mem=64 * MB, policy="linear"), build, probe)
+    s = stale_session()
+    # eager hysteresis: whether a pair-boundary switch is *profitable* is
+    # machine-dependent (page-cache warmth moves the observed per-pair
+    # rate across the gate); this test pins the reuse ACCOUNTING, so take
+    # the switch whenever the guard band is crossed
+    s.selector.model.c.guard_hysteresis = 0.25
+    orig = s.selector.make_guard
+
+    def no_restart_guard(*a, **kw):
+        g = orig(*a, **kw)
+        if g is not None and hasattr(g, "allow_restart"):
+            g.allow_restart = False
+        return g
+
+    s.selector.make_guard = no_restart_guard
+    res = run_join(s, build, probe)
+    sw = _switched_metrics(res)
+    assert len(sw) == 1, [m.op for m in res.metrics]
+    m = sw[0]
+    assert res.scalar == ref.scalar
+    assert m.reused_spill_bytes > 0
+    # every reused byte went through the spill reader on the same account
+    assert m.spill.bytes_read >= m.reused_spill_bytes
+    # all temp files released: nothing leaks past the switch
+    assert m.spill.live_bytes == 0
+    assert m.spill.bytes_written == m.spill.bytes_freed
+
+
+def test_sort_switch_is_loss_free():
+    n = 200_000
+    rng = np.random.default_rng(3)
+    rel = Relation({"k": rng.integers(0, n, n).astype(np.int64),
+                    "w": rng.integers(0, 1 << 30, n).astype(np.int64)})
+    ref = Session(work_mem=64 * MB, policy="linear")
+    ref.register("t", rel)
+    want = ref.table("t").sort("k", "w").collect().relation
+    s = stale_session(wm=128 * 1024)
+    s.register("t", rel)
+    res = s.table("t").sort("k", "w").collect()
+    sw = _switched_metrics(res)
+    assert len(sw) == 1, [m.op for m in res.metrics]
+    assert sw[0].op == "sort"
+    assert sw[0].spill.live_bytes == 0
+    assert res.relation.equals(want)
+
+
+def test_guards_off_never_switches():
+    build, probe = star_tables(120_000)
+    res = run_join(stale_session(guards=False), build, probe)
+    assert not _switched_metrics(res)
+    assert any(m.path in ("linear", "linear_tiered") and m.op == "hash_join"
+               for m in res.metrics)
+
+
+# ---------------------------------------------------------------------------
+# Profile hygiene: a hybrid run enters no pure path's cell
+# ---------------------------------------------------------------------------
+
+def test_switched_run_does_not_pollute_profile():
+    build, probe = star_tables(120_000)
+    s = stale_session()
+    res = run_join(s, build, probe)
+    assert _switched_metrics(res), "scenario stopped switching; retune"
+    prof = s.selector.profile
+    polluted = [key for key in prof.snapshot() if key[0] == "hash_join"]
+    assert not polluted, (
+        f"switched hash_join recorded into profile cells {polluted}: a "
+        f"part-linear part-tensor wall describes neither pure path")
+
+
+# ---------------------------------------------------------------------------
+# Chaos hammer: switches under governed concurrent serving + faults
+# ---------------------------------------------------------------------------
+
+def test_chaos_switch_hammer():
+    """FaultInjector + memory pressure (preemption) + mid-query switches
+    under an 8-worker closed-loop serve: every query is exactly one of
+    served/failed, no grant ever exceeds the budget, the tier books
+    balance, and every served result is bit-for-bit the ungoverned
+    serial reference."""
+    n = 60_000
+    build, probe = star_tables(n)
+    ref_sess = Session(work_mem=64 * MB)
+    ref_sess.register("b", build).register("p", probe)
+    expect = (ref_sess.table("p").join("b", on="k")
+              .aggregate("b_v", "sum").scalar())
+
+    srv = QueryServer(
+        {"b": build, "p": probe}, total_mem=24 * MB, work_mem=512 * 1024,
+        min_grant=256 * 1024, tiers=TierConfig(t1_latency_s=0.0,
+                                               t1_gbps=1000.0),
+        faults=FaultInjector(seed=7, spill_io_p=0.01, device_slow_p=0.05,
+                             device_slow_s=0.002, grant_timeout_p=0.01,
+                             spill_read_p=0.01))
+    c = srv.session.selector.model.c
+    c.linear_row_cost *= STALE
+    c.io_byte_cost *= STALE
+    c.guard_hysteresis = 0.5  # take borderline switches eagerly: the
+    #                           ledger invariants must hold regardless
+    q = (srv.session.table("p").join("b", on="k")
+         .aggregate("b_v", "sum"))
+    rep = srv.serve([q], concurrency=8, queries_per_worker=4, warmup=1)
+
+    total = rep.counts["served"] + rep.counts["failed"]
+    assert total == 8 * 4, rep.counts
+    assert rep.counts["served"] > 0
+    for sq in rep.queries:
+        assert sq.scalar == expect  # bit-for-bit under chaos + switches
+    assert rep.governor.over_budget_events == 0
+    srv.session.tier_ledger.verify_balanced()
+    assert sum(srv.faults.counts().values()) > 0, (
+        "chaos run injected no faults; the gate would be vacuous")
+    assert srv.broker.stats().switches >= 1, (
+        "hammer stopped exercising mid-query switches; retune")
+
+
+# ---------------------------------------------------------------------------
+# Nightly: guards cost nothing when the model is right
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n", [40_000, 120_000, 250_000])
+def test_selector_regret_with_guards_stays_small(n):
+    """fig9's contract, with guards armed: on a WELL-calibrated system
+    the guards must be free — the auto policy makes the same decisions,
+    never fires a switch, and the checkpoint polling costs no more than
+    10% + fixed jitter over the identical guard-less session."""
+    import time
+
+    build, probe = star_tables(n)
+    walls = {}
+    for guards in (False, True):
+        # one session per mode, like fig9: warm reps converge the
+        # compile cache, device column cache and runtime profile
+        s = Session(work_mem=8 * MB, policy="auto", guards=guards)
+        s.register("b", build).register("p", probe)
+        ts = []
+        for rep in range(6):
+            t0 = time.perf_counter()
+            res = (s.table("p").join("b", on="k")
+                   .aggregate("b_v", "sum")).collect()
+            if rep >= 2:  # first reps absorb compiles and feedback lag
+                ts.append(time.perf_counter() - t0)
+            assert not any(m.switched for m in res.metrics), (
+                "guard fired on a well-calibrated decision")
+        walls[guards] = sorted(ts)[len(ts) // 2]
+    assert walls[True] <= walls[False] * 1.10 + 0.010, walls

@@ -1,0 +1,238 @@
+"""Cross-path differential fuzzing against a numpy oracle.
+
+Every execution path — host linear, device tensor, tiered linear and the
+sharded auto configuration — must produce the SAME multiset of rows for
+the same logical plan.  The paper's whole premise (one deferred decision
+point, many physical routes) only holds if the routes are semantically
+interchangeable, so this harness generates random plans over random
+tables (duplicate-heavy keys, empty inputs, negative values) and checks
+each configuration bit-for-bit against an independent oracle written in
+plain numpy/dict Python that shares no code with the engines.
+
+The generator is seeded ``numpy.random`` — no external fuzzing
+dependency — so the tier-1 profile is deterministic and fast.  When
+``hypothesis`` IS available (it is not baked into the CI image; the test
+importorskips) a property-based variant drives the same differential
+check from minimized counterexamples.  The ``slow`` variant widens the
+case count, sizes and value domains for the nightly run.
+"""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import Relation, Session, TierConfig
+
+MB = 1 << 20
+AGGS = ("sum", "count", "min", "max")
+
+
+# ---------------------------------------------------------------------------
+# Case generation
+# ---------------------------------------------------------------------------
+
+class Case:
+    """One generated plan: join -> optional filter -> optional root op."""
+
+    def __init__(self, rng, max_rows=800, neg_keys=False):
+        n1 = int(rng.integers(0, max_rows))
+        n2 = int(rng.integers(0, max_rows))
+        # duplicate-heavy but bounded fan-out: kmax >= n2/8 keeps the
+        # joined row count within ~8x the probe side
+        lo = -max(1, n2 // 16) if neg_keys else 0
+        kmax = max(lo + 1, int(rng.integers(max(1, n2 // 8),
+                                            max(2, 2 * max(n1, n2) + 2))))
+        self.probe = {
+            "k": rng.integers(lo, kmax, n1).astype(np.int64),
+            "w": rng.integers(-1000, 1000, n1).astype(np.int64)}
+        self.build = {
+            "k": rng.integers(lo, kmax, n2).astype(np.int64),
+            "v": rng.integers(-1000, 1000, n2).astype(np.int64)}
+        self.filter_thr = (int(rng.integers(-500, 500))
+                          if rng.random() < 0.6 else None)
+        self.root = str(rng.choice(["none", "sort", "group", "agg"]))
+        # aggregate over a maybe-empty join: only sum/count are total
+        self.fn = str(rng.choice(AGGS[:2] if self.root == "agg" else AGGS))
+
+    def describe(self):
+        return (f"n_probe={len(self.probe['k'])} "
+                f"n_build={len(self.build['k'])} "
+                f"filter={self.filter_thr} root={self.root} fn={self.fn}")
+
+
+def run_case(sess: Session, case: Case):
+    """Build and run the case's plan through one session configuration."""
+    from repro.core.expr import col
+
+    sess.register("p", Relation(dict(case.probe)))
+    sess.register("b", Relation(dict(case.build)))
+    q = sess.table("p").join("b", on="k")
+    if case.filter_thr is not None:
+        q = q.filter(col("w") > case.filter_thr)
+    if case.root == "sort":
+        q = q.sort("k", "w")
+    elif case.root == "group":
+        q = q.group_by("k", {"b_v": case.fn})
+    elif case.root == "agg":
+        q = q.aggregate("b_v", case.fn)
+    res = q.collect()
+    return res.scalar if case.root == "agg" else res.relation
+
+
+# ---------------------------------------------------------------------------
+# Oracle: plain numpy/dicts, no engine code
+# ---------------------------------------------------------------------------
+
+def oracle(case: Case):
+    p, b = case.probe, case.build
+    by_key = collections.defaultdict(list)
+    for j, k in enumerate(b["k"].tolist()):
+        by_key[k].append(j)
+    pi, bi = [], []
+    for i, k in enumerate(p["k"].tolist()):
+        for j in by_key.get(k, ()):
+            pi.append(i)
+            bi.append(j)
+    pi = np.asarray(pi, dtype=np.int64)
+    bi = np.asarray(bi, dtype=np.int64)
+    cols = {"k": p["k"][pi], "w": p["w"][pi], "b_v": b["v"][bi]}
+    if case.filter_thr is not None:
+        keep = cols["w"] > case.filter_thr
+        cols = {name: c[keep] for name, c in cols.items()}
+    if case.root == "agg":
+        v = cols["b_v"].astype(np.float64)
+        return float(v.sum()) if case.fn == "sum" else float(len(v))
+    if case.root == "group":
+        uniq, inv = np.unique(cols["k"], return_inverse=True)
+        v = cols["b_v"].astype(np.float64)
+        if case.fn == "sum":
+            agg = np.bincount(inv, weights=v, minlength=len(uniq))
+        elif case.fn == "count":
+            agg = np.bincount(inv, minlength=len(uniq)).astype(np.float64)
+        else:
+            fill = np.inf if case.fn == "min" else -np.inf
+            agg = np.full(len(uniq), fill)
+            (np.minimum if case.fn == "min" else np.maximum).at(agg, inv, v)
+        return {"k": uniq, f"{case.fn}_b_v": agg}
+    return cols  # "none" and "sort" share a multiset; sortedness is
+    #              asserted separately on the engine output
+
+
+# ---------------------------------------------------------------------------
+# Comparison: canonical row order, exact values
+# ---------------------------------------------------------------------------
+
+def canon(cols):
+    """Rows sorted lexicographically over all columns, column-name order
+    fixed — a canonical form under which multiset equality is array
+    equality.  All values are exact (int64, or float64 sums far below
+    2**53), so no tolerance is needed."""
+    names = sorted(cols)
+    arrs = [np.asarray(cols[n]) for n in names]
+    if len(arrs[0]) == 0:
+        return names, arrs
+    order = np.lexsort(arrs[::-1])
+    return names, [a[order] for a in arrs]
+
+
+def assert_same(got, want, ctx):
+    if isinstance(want, float):
+        assert float(got) == want, ctx
+        return
+    got_cols = {n: got[n] for n in got.names}
+    assert set(got_cols) == set(want), (ctx, sorted(got_cols), sorted(want))
+    gn, ga = canon(got_cols)
+    wn, wa = canon(want)
+    for name, g, w in zip(gn, ga, wa):
+        np.testing.assert_array_equal(g, w, err_msg=f"{ctx} col={name}")
+
+
+def assert_sorted(rel, keys):
+    cols = [np.asarray(rel[k]) for k in keys]
+    if len(cols[0]) < 2:
+        return
+    for i in range(len(cols[0]) - 1):
+        a = tuple(c[i] for c in cols)
+        b = tuple(c[i + 1] for c in cols)
+        assert a <= b, f"row {i} out of order: {a} > {b}"
+
+
+# ---------------------------------------------------------------------------
+# Session configurations under test
+# ---------------------------------------------------------------------------
+
+def configurations(tier_wm=32 * 1024):
+    return {
+        "linear": Session(work_mem=64 * MB, policy="linear", fuse=False),
+        "tensor": Session(work_mem=64 * MB, policy="tensor"),
+        "tiered": Session(work_mem=tier_wm, policy="linear",
+                          tiers=TierConfig(t1_latency_s=0.0, t1_gbps=1000.0),
+                          fuse=False),
+        "sharded": Session(work_mem=64 * MB, policy="auto", max_shards=4),
+    }
+
+
+def check_case(case: Case, tier_wm=32 * 1024):
+    want = oracle(case)
+    for name, sess in configurations(tier_wm).items():
+        got = run_case(sess, case)
+        assert_same(got, want, f"[{name}] {case.describe()}")
+        if case.root == "sort":
+            assert_sorted(got, ("k", "w"))
+        if name == "tiered":
+            sess.tier_ledger.verify_balanced()
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 quick profile: deterministic seeded sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_differential_fuzz_quick(seed):
+    case = Case(np.random.default_rng(1000 + seed))
+    check_case(case)
+
+
+def test_differential_fuzz_pinned_edges():
+    """Edges the random sweep may miss: empty sides, single rows, one
+    hot key on every row (maximal duplication)."""
+    rng = np.random.default_rng(7)
+    for n1, n2, kmax in [(0, 40, 5), (40, 0, 5), (0, 0, 1),
+                         (1, 1, 1), (200, 150, 1)]:
+        case = Case(rng)
+        case.probe = {"k": rng.integers(0, kmax, n1).astype(np.int64),
+                      "w": rng.integers(-1000, 1000, n1).astype(np.int64)}
+        case.build = {"k": rng.integers(0, kmax, n2).astype(np.int64),
+                      "v": rng.integers(-1000, 1000, n2).astype(np.int64)}
+        case.filter_thr = None
+        case.root = "group"
+        case.fn = "sum"
+        check_case(case)
+
+
+def test_differential_fuzz_hypothesis():
+    """Property-based variant; runs only where hypothesis is installed
+    (it is not part of the baked CI image)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+    def prop(seed):
+        check_case(Case(np.random.default_rng(seed), max_rows=300))
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Nightly deep profile
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(40))
+def test_differential_fuzz_deep(seed):
+    rng = np.random.default_rng(50_000 + seed)
+    case = Case(rng, max_rows=12_000, neg_keys=True)
+    # a work_mem small enough that the bigger draws genuinely spill
+    # through the tier staircase
+    check_case(case, tier_wm=16 * 1024)
