@@ -1697,6 +1697,206 @@ def fig16_tiered_spill(reps: int = 6) -> Dict:
     return out
 
 
+# -- Fig 17: compressed device-resident column layouts -------------------------
+
+def fig17_compressed_layouts(reps: int = 7) -> Dict:
+    """Packed device layouts (PR 10): dictionary / frame-of-reference codes
+    uploaded instead of logical 8-byte columns, joins and group-bys running
+    in the code domain, decode deferred to the single result fetch.
+
+    Three cells, each run twice — ``REPRO_DEVICE_COMPRESS=1`` (packed, the
+    default) vs ``=0`` (raw) — over FRESH relation instances so every mode
+    starts with a cold device cache:
+
+      * **serving** — the fig9 shape (PK-FK join → sort → aggregate, cold
+        first query then warm repeats) with compressible domains: dense key
+        space and narrow payload ranges.  Gates: bit-for-bit equal scalars,
+        warm H2D == 0 in BOTH modes (packed residency preserves the serving
+        contract), cold H2D bytes shrink >= 2x, and warm HBM footprint
+        (device-cache resident bytes) shrinks >= 2x;
+      * **star** — the fig10 shape (3-table star join through the rewrite
+        pipeline) so chained fused fragments + projection pruning compose
+        with packed uploads; gated on scalar equality and H2D shrink >= 2x;
+      * **governed** — the serving workload through a QueryServer under a
+        constrained shared memory budget with compression on: packed
+        uploads must not let any linear grant slip past the governor
+        (``over_budget_events == 0``).
+
+    The shrink ratios are returned as ``*_speedup`` leaves (higher is
+    better) so the CI baseline comparison gates them like any other
+    performance number."""
+    import os
+
+    from repro.core import QueryServer, Session, col
+    from repro.core.table_cache import device_cache_resident_bytes
+
+    n = 200_000
+
+    def serving_tables(seed=0):
+        rng = np.random.default_rng(seed)
+        build = Relation({
+            "k": rng.permutation(n).astype(np.int64),
+            "v": rng.integers(0, 200, n).astype(np.int64),
+        })
+        probe = Relation({
+            "k": rng.integers(0, n, n).astype(np.int64),
+            "w": rng.integers(0, 1000, n).astype(np.int64),
+        })
+        return build, probe
+
+    def star_tables(seed=0):
+        n_orders, n_users, n_parts = 300_000, 10_000, 2_000
+        rng = np.random.default_rng(seed)
+        orders = Relation({
+            "uid": rng.integers(0, n_users, n_orders).astype(np.int64),
+            "pid": rng.integers(0, n_parts, n_orders).astype(np.int64),
+            "w": rng.integers(-50, 50, n_orders).astype(np.int64),
+        })
+        users = Relation({
+            "uid": np.arange(n_users, dtype=np.int64),
+            "region": rng.integers(0, 4, n_users).astype(np.int64),
+        })
+        parts = Relation({
+            "pid": np.arange(n_parts, dtype=np.int64),
+            "price": rng.integers(1, 9, n_parts).astype(np.int64),
+        })
+        return orders, users, parts
+
+    out: Dict = {}
+    saved = os.environ.get("REPRO_DEVICE_COMPRESS")
+    try:
+        # -- serving cell (fig9 shape), packed vs raw ----------------------
+        cell: Dict = {}
+        for mode in ("packed", "raw"):
+            os.environ["REPRO_DEVICE_COMPRESS"] = "1" if mode == "packed" else "0"
+            build, probe = serving_tables()
+            plan = lambda: Aggregate(Sort(Join(Scan(build), Scan(probe), "k"),
+                                          ["k", "w"]), "b_v", "sum")
+            sel = PathSelector(1 * MB, profile=RuntimeProfile())
+            ex = Executor(work_mem=1 * MB, policy="auto", selector=sel)
+            q = ex.execute(plan())
+            cold_wall, cold_h2d = q.total_wall_s, q.total_h2d_bytes
+            cold_h2d_logical = q.total_h2d_bytes_logical
+            scalar = q.scalar
+            walls, warm_h2d = [], 0
+            for _ in range(reps):
+                q = ex.execute(plan())
+                walls.append(q.total_wall_s)
+                warm_h2d = max(warm_h2d, q.total_h2d_bytes)
+                if q.scalar != scalar:
+                    raise RuntimeError(f"{mode} warm result diverged")
+            s = latency_stats(walls)
+            hbm = (device_cache_resident_bytes(build)
+                   + device_cache_resident_bytes(probe))
+            if warm_h2d != 0:
+                raise RuntimeError(
+                    f"{mode} warm queries transferred {warm_h2d} H2D bytes: "
+                    f"device residency does not survive compression")
+            emit(f"fig17/serving_{mode}", s.p50 * 1e6,
+                 {"cold_h2d_mb": round(cold_h2d / 1e6, 2),
+                  "cold_h2d_logical_mb": round(cold_h2d_logical / 1e6, 2),
+                  "hbm_resident_mb": round(hbm / 1e6, 2),
+                  "cold_wall_s": round(cold_wall, 4)})
+            cell[mode] = {"scalar": scalar, "cold_h2d": cold_h2d,
+                          "hbm": hbm, "p50": s.p50, "cold_wall": cold_wall}
+        if cell["packed"]["scalar"] != cell["raw"]["scalar"]:
+            raise RuntimeError(
+                f"packed serving result diverged from raw: "
+                f"{cell['packed']['scalar']} != {cell['raw']['scalar']}")
+        h2d_shrink = cell["raw"]["cold_h2d"] / max(1, cell["packed"]["cold_h2d"])
+        hbm_shrink = cell["raw"]["hbm"] / max(1, cell["packed"]["hbm"])
+        if h2d_shrink < 2.0:
+            raise RuntimeError(
+                f"cold H2D shrink {h2d_shrink:.2f}x < 2x: packed uploads "
+                f"are not materially smaller")
+        if hbm_shrink < 2.0:
+            raise RuntimeError(
+                f"warm HBM shrink {hbm_shrink:.2f}x < 2x: packed residency "
+                f"is not materially smaller")
+        emit("fig17/serving_shrink", 0.0,
+             {"h2d_shrink": round(h2d_shrink, 2),
+              "hbm_shrink": round(hbm_shrink, 2)})
+        out["serving"] = {
+            "h2d_shrink_speedup": h2d_shrink,
+            "hbm_shrink_speedup": hbm_shrink,
+            "packed_cold_h2d_mb": cell["packed"]["cold_h2d"] / 1e6,
+            "raw_cold_h2d_mb": cell["raw"]["cold_h2d"] / 1e6,
+            "packed_hbm_mb": cell["packed"]["hbm"] / 1e6,
+            "raw_hbm_mb": cell["raw"]["hbm"] / 1e6,
+        }
+
+        # -- star-join cell (fig10 shape through the rewrite pipeline) -----
+        star: Dict = {}
+        for mode in ("packed", "raw"):
+            os.environ["REPRO_DEVICE_COMPRESS"] = "1" if mode == "packed" else "0"
+            orders, users, parts = star_tables()
+            sess = Session(work_mem=1 * MB, policy="tensor")
+            for name, rel in (("orders", orders), ("users", users),
+                              ("parts", parts)):
+                sess.register(name, rel)
+            run = lambda sess=sess: (
+                sess.table("orders")
+                .join(sess.table("users"), on="uid")
+                .join(sess.table("parts"), on="pid")
+                .filter((col("w") > 0) & (col("b_region") <= 2))
+                .sort("uid").aggregate("w", "sum").collect())
+            cold = run()
+            q = cold
+            for _ in range(max(2, reps // 2)):
+                q = run()
+                if q.scalar != cold.scalar:
+                    raise RuntimeError(f"star {mode} diverged across repeats")
+            star[mode] = {"scalar": cold.scalar,
+                          "cold_h2d": cold.total_h2d_bytes,
+                          "warm_h2d": q.total_h2d_bytes}
+            emit(f"fig17/star_{mode}", 0.0,
+                 {"cold_h2d_mb": round(cold.total_h2d_bytes / 1e6, 2),
+                  "warm_h2d_mb": round(q.total_h2d_bytes / 1e6, 2)})
+        if star["packed"]["scalar"] != star["raw"]["scalar"]:
+            raise RuntimeError(
+                f"packed star join diverged from raw: "
+                f"{star['packed']['scalar']} != {star['raw']['scalar']}")
+        star_shrink = (star["raw"]["cold_h2d"]
+                       / max(1, star["packed"]["cold_h2d"]))
+        if star_shrink < 2.0:
+            raise RuntimeError(
+                f"star-join cold H2D shrink {star_shrink:.2f}x < 2x")
+        out["star"] = {"h2d_shrink_speedup": star_shrink,
+                       "packed_cold_h2d_mb": star["packed"]["cold_h2d"] / 1e6,
+                       "raw_cold_h2d_mb": star["raw"]["cold_h2d"] / 1e6}
+
+        # -- governed cell: compression must not leak past the governor ----
+        os.environ["REPRO_DEVICE_COMPRESS"] = "1"
+        build, probe = serving_tables(seed=3)
+        server = QueryServer(
+            {"build": build, "probe": probe},
+            total_mem=24 * MB, work_mem=32 * MB, policy="auto",
+            min_grant=2 * MB)
+        query = (server.session.table("probe").join("build", on="k")
+                 .sort("k", "w").aggregate("b_v", "sum"))
+        rep = server.serve([query], concurrency=4,
+                           queries_per_worker=max(3, reps // 2), warmup=1)
+        if len({r.scalar for r in rep.queries}) != 1:
+            raise RuntimeError("governed packed serving diverged")
+        if rep.governor.over_budget_events:
+            raise RuntimeError(
+                f"governor over-granted under packed layouts: {rep.governor}")
+        emit("fig17/governed", rep.latency.p50 * 1e6,
+             {"p99_s": round(rep.latency.p99, 4),
+              "over_budget": rep.governor.over_budget_events,
+              "h2d_mb": round(rep.total_h2d_bytes / 1e6, 2),
+              "h2d_logical_mb": round(rep.total_h2d_bytes_logical / 1e6, 2)})
+        out["governed"] = {"over_budget": rep.governor.over_budget_events,
+                           "h2d_mb": rep.total_h2d_bytes / 1e6,
+                           "h2d_logical_mb": rep.total_h2d_bytes_logical / 1e6}
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_DEVICE_COMPRESS", None)
+        else:
+            os.environ["REPRO_DEVICE_COMPRESS"] = saved
+    return out
+
+
 ALL = {
     "fig1": fig1_scalability,
     "fig3": fig3_hashtable_growth,
@@ -1713,6 +1913,7 @@ ALL = {
     "fig14": fig14_robustness_map,
     "fig15": fig15_sharded_scaling,
     "fig16": fig16_tiered_spill,
+    "fig17": fig17_compressed_layouts,
     "headline": headline,
     "selector": selector_analysis,
     "regime": regime_model,

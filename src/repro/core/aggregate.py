@@ -185,14 +185,26 @@ def group_aggregate_device(rel, key: str, values: Dict[str, str],
 
     cols_in = tuple(rel.col(c) for c in values)
     fns = tuple(values.values())
-    keys_dev = rel.col(key)
-    if not jnp.issubdtype(keys_dev.dtype, jnp.integer):
-        # seed-compatible coercion: non-integer group keys truncate to int64
-        # (the segment machinery needs an integer coordinate axis)
-        keys_dev = keys_dev.astype(jnp.int64)
+    key_col = rel.columns[key]
+    key_decode = None
+    if key_col.decode is not None:
+        # packed key column: factorize in the CODE domain.  Both codecs are
+        # order-preserving (FOR is value−min, dict codes are sorted-unique
+        # ranks), so sorting codes sorts values and segment boundaries are
+        # identical — only the per-group representative needs decoding, one
+        # O(groups) device op after the reduce instead of an O(rows) decode
+        # before it.
+        keys_dev = key_col.force_codes()
+        key_decode = key_col.decode
+    else:
+        keys_dev = rel.col(key)
+        if not jnp.issubdtype(keys_dev.dtype, jnp.integer):
+            # seed-compatible coercion: non-integer group keys truncate to
+            # int64 (the segment machinery needs an integer coordinate axis)
+            keys_dev = keys_dev.astype(jnp.int64)
     n = rel.num_physical_rows
     if n == 0:
-        out_cols = {key: keys_dev}
+        out_cols = {key: rel.col(key)}
         for col, agg in values.items():
             out_cols[f"{agg}_{col}"] = jnp.zeros((0,), jnp.float64)
         return (DeviceRelation.from_arrays(out_cols),
@@ -204,6 +216,11 @@ def group_aggregate_device(rel, key: str, values: Dict[str, str],
         fn = _group_reduce_jit()
         uniq, results, valid_out = fn(keys_dev, rel.valid, cols_in, fns, n,
                                       use_kernel)
+        if key_decode is not None:
+            # decode-at-fetch for the group axis: garbage codes in invalid
+            # segments decode to arbitrary (clipped) values, masked by the
+            # valid_out prefix exactly like every other padded output
+            uniq = key_decode(uniq)
         out_cols = {key: uniq}
         for (col, agg), r in zip(values.items(), results):
             out_cols[f"{agg}_{col}"] = r

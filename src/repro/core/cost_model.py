@@ -126,7 +126,12 @@ class FragmentEstimate:
     passes: int
     t_linear: float
     t_tensor: float       # the FUSED device-resident pipeline
-    h2d_bytes: int        # pending host→device bytes charged to the tensor path
+    # pending host→device bytes charged to the tensor path — PHYSICAL bytes:
+    # under packed device layouts (core/codec_device) the caller's
+    # pending_upload_bytes/pending_partition_bytes price codes +
+    # dictionaries, so a compressible table makes the tensor candidate
+    # cheaper by exactly the bytes the bus is spared
+    h2d_bytes: int
     # the partition-parallel fused pipeline over device_count mesh lanes
     # (inf when the fragment is not sharded-eligible or device_count <= 1)
     t_tensor_sharded: float = math.inf

@@ -35,25 +35,41 @@ __all__ = ["DeviceColumn", "DeviceRelation"]
 
 @dataclasses.dataclass(frozen=True)
 class DeviceColumn:
-    """A device array plus an optional pending gather index.
+    """A device array plus an optional pending gather index and decode hook.
 
-    The logical column is ``base[gather]`` (or ``base`` when ``gather`` is
-    None), but the gather is deferred until :meth:`force` — composing two
-    takes costs one index gather, never a payload gather.
+    The logical column is ``decode(base[gather])`` (gather/decode optional),
+    but both are deferred until :meth:`force` — composing two takes costs
+    one index gather, never a payload gather, and a packed column
+    (:mod:`repro.core.codec_device`) stays narrow codes through every lazy
+    composition: the decode to logical width runs on device only when a
+    consumer actually reads values (the decode-at-fetch rule).
     """
 
     base: jnp.ndarray
     gather: Optional[jnp.ndarray] = None
+    # device-side decode applied after the gather (packed codes → logical
+    # values); None for plain columns.  ``out_dtype`` is the decoded dtype.
+    decode: Optional[object] = None
+    out_dtype: Optional[object] = None
 
     def force(self) -> jnp.ndarray:
+        arr = self.force_codes()
+        if self.decode is not None:
+            arr = self.decode(arr)
+        return arr
+
+    def force_codes(self) -> jnp.ndarray:
+        """The physical (still-packed) column — code-domain consumers
+        (group-by factorization) skip the decode entirely."""
         if self.gather is None:
             return self.base
         return jnp.take(self.base, self.gather, axis=0)
 
     def take_lazy(self, idx: jnp.ndarray) -> "DeviceColumn":
         if self.gather is None:
-            return DeviceColumn(self.base, idx)
-        return DeviceColumn(self.base, jnp.take(self.gather, idx, axis=0))
+            return DeviceColumn(self.base, idx, self.decode, self.out_dtype)
+        return DeviceColumn(self.base, jnp.take(self.gather, idx, axis=0),
+                            self.decode, self.out_dtype)
 
     @property
     def num_rows(self) -> int:
@@ -62,6 +78,8 @@ class DeviceColumn:
 
     @property
     def dtype(self):
+        if self.decode is not None and self.out_dtype is not None:
+            return jnp.dtype(self.out_dtype)
         return self.base.dtype
 
 
@@ -89,6 +107,21 @@ class DeviceRelation:
                     valid: Optional[jnp.ndarray] = None) -> "DeviceRelation":
         return DeviceRelation({k: DeviceColumn(v) for k, v in cols.items()},
                               valid=valid)
+
+    @staticmethod
+    def from_codes(cols: Mapping[str, object]) -> "DeviceRelation":
+        """Lift packed device columns (:class:`~repro.core.codec_device.
+        DeviceCodes`) into a relation of decode-deferred columns: storage
+        stays at code width, the decode hook runs at :meth:`DeviceColumn.
+        force` — i.e. only for columns a consumer actually touches."""
+        out: Dict[str, DeviceColumn] = {}
+        for k, dc in cols.items():
+            if dc.encoding == "raw":
+                out[k] = DeviceColumn(dc.codes)
+            else:
+                out[k] = DeviceColumn(dc.codes, decode=dc.decode,
+                                      out_dtype=dc.layout.logical_dtype)
+        return DeviceRelation(out)
 
     # -- properties --------------------------------------------------------
     @property
@@ -125,12 +158,13 @@ class DeviceRelation:
         out: Dict[str, DeviceColumn] = {}
         for k, c in self.columns.items():
             if c.gather is None:
-                out[k] = DeviceColumn(c.base, idx)
+                out[k] = DeviceColumn(c.base, idx, c.decode, c.out_dtype)
                 continue
             key = id(c.gather)
             if key not in composed:
                 composed[key] = jnp.take(c.gather, idx, axis=0)
-            out[k] = DeviceColumn(c.base, composed[key])
+            out[k] = DeviceColumn(c.base, composed[key], c.decode,
+                                  c.out_dtype)
         new_valid = valid
         if new_valid is None and self.valid is not None:
             new_valid = jnp.take(self.valid, idx, axis=0)

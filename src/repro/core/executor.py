@@ -155,9 +155,17 @@ class QueryResult:
 
     @property
     def total_h2d_bytes(self) -> int:
-        """Host→device bytes this query transferred (0 when every base table
-        was already resident in the device column cache)."""
+        """Host→device bytes this query PHYSICALLY transferred (0 when every
+        base table was already resident in the device column cache; packed
+        codes + dictionaries when compressed layouts are on)."""
         return sum(m.h2d_bytes for m in self.metrics)
+
+    @property
+    def total_h2d_bytes_logical(self) -> int:
+        """The same transfers priced at logical column width — the upload
+        cost without packed device layouts.  physical/logical is the
+        query's effective H2D compression ratio."""
+        return sum(m.h2d_bytes_logical for m in self.metrics)
 
 
 class Executor:
@@ -394,6 +402,7 @@ class Executor:
         results = list(sp.done)
         reused = 0
         h2d = 0
+        h2d_log = 0
         live = [(b, p, nb, npr) for b, p, nb, npr in sp.pending
                 if b is not None and p is not None and nb and npr]
         sig = ("switch_join", key, sum(x[2] for x in live),
@@ -425,9 +434,10 @@ class Executor:
                     p_all = probes[0]
                     for p in probes[1:]:
                         p_all = p_all.concat(p)
-                    dev_b, up_b = self._to_device(b_all)
-                    dev_p, up_p = self._to_device(p_all)
+                    dev_b, up_b, log_b = self._to_device(b_all)
+                    dev_p, up_p, log_p = self._to_device(p_all)
                     h2d += up_b + up_p
+                    h2d_log += log_b + log_p
                     gang, pm = tensor_join_device(dev_b, dev_p, key)
                     syncs += pm.host_syncs
                 if not results and gang is not None:
@@ -454,6 +464,7 @@ class Executor:
                       rows_out=len(out), wall_s=t.elapsed, spill=spill,
                       host_syncs=syncs, reused_spill_bytes=reused)
         m.h2d_bytes += h2d
+        m.h2d_bytes_logical += h2d_log
         self._stamp_lease(m, lease)
         self._stamp_switch(m, sp, pre_path)
         self.broker.note_switch()
@@ -874,15 +885,18 @@ class Executor:
     def _to_device(rel):
         """Device residency for a tensor-path operator input.  Host base
         tables go through the device column cache (exact shapes), so
-        repeated queries pay zero re-upload; returns the relation plus the
-        H2D bytes this call actually transferred, which the caller charges
-        to the operator that demanded the transfer."""
+        repeated queries pay zero re-upload; packed layouts
+        (core/codec_device) upload narrow codes and defer the decode to
+        first consumption.  Returns the relation plus the PHYSICAL H2D
+        bytes this call transferred and the same transfer priced at
+        logical width, which the caller charges to the operator that
+        demanded the transfer."""
         if isinstance(rel, DeviceRelation):
-            return rel, 0
-        from .table_cache import get_device_columns
+            return rel, 0, 0
+        from .table_cache import get_device_layouts
 
-        cols, uploaded = get_device_columns(rel, bucket=None)
-        return DeviceRelation.from_arrays(cols), uploaded
+        cols, uploaded, logical = get_device_layouts(rel, bucket=None)
+        return DeviceRelation.from_codes(cols), uploaded, logical
 
     # -- node dispatch -----------------------------------------------------
     def _exec(self, node, metrics, decisions, mgr):
@@ -923,14 +937,15 @@ class Executor:
                 self.selector.model.hash_need_bytes(len(build)))
 
             def join_tensor():
-                dev_b, up_b = self._to_device(build)
-                dev_p, up_p = self._to_device(probe)
+                dev_b, up_b, log_b = self._to_device(build)
+                dev_p, up_p, log_p = self._to_device(probe)
                 sig = ("join", dev_b.num_physical_rows,
                        dev_p.num_physical_rows, node.key)
                 with self._device_leased(sig) as lease:
                     out, m = tensor_join_device(dev_b, dev_p, node.key)
                 self._stamp_lease(m, lease)
                 m.h2d_bytes += up_b + up_p
+                m.h2d_bytes_logical += log_b + log_p
                 return out, m
 
             try:
@@ -1009,13 +1024,14 @@ class Executor:
                     len(child), child.row_bytes()))
 
             def sort_tensor():
-                dev_c, up_c = self._to_device(child)
+                dev_c, up_c, log_c = self._to_device(child)
                 sig = ("sort", dev_c.num_physical_rows, tuple(node.keys),
                        dev_c.valid is None)
                 with self._device_leased(sig) as lease:
                     out, m = tensor_sort_device(dev_c, node.keys)
                 self._stamp_lease(m, lease)
                 m.h2d_bytes += up_c
+                m.h2d_bytes_logical += log_c
                 return out, m
 
             try:
@@ -1088,7 +1104,7 @@ class Executor:
                     child, [node.key], mem_quote=mem_q, dev_quote=dev_q))
                 decisions.append(decision)
                 if decision.path == "tensor":
-                    dev_c, up_c = self._to_device(child)
+                    dev_c, up_c, log_c = self._to_device(child)
                     sig = ("group", dev_c.num_physical_rows,
                            tuple(node.values.items()), dev_c.valid is None)
                     with self._device_leased(sig) as lease:
@@ -1096,6 +1112,7 @@ class Executor:
                                                         node.values)
                     self._stamp_lease(m, lease)
                     m.h2d_bytes += up_c
+                    m.h2d_bytes_logical += log_c
                 else:
                     child, syncs = self._lower_for_linear(child)
                     # grant sized by estimated DISTINCT groups (the group

@@ -34,10 +34,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .codec_device import decode_device, dict_bucket
 from .metrics import OpMetrics, SpillAccount, Timer
 from .relation import Relation
-from .table_cache import get_device_columns, key_stats
-from .tensor_engine import capacity_bucket
+from .table_cache import get_device_layouts, key_stats
+from .tensor_engine import (capacity_bucket, radix_hash_probe_dispatch,
+                            use_pallas)
 
 __all__ = ["FusedSpec", "match_fragment", "run_fused", "sharded_supported",
            "pipeline_cache_info", "pipeline_cache_clear"]
@@ -190,20 +192,45 @@ def match_fragment(plan):
 # Column view: late materialization inside the traced program
 # ---------------------------------------------------------------------------
 
+def _decoders(sigs, dicts, refs):
+    """Per-column device decode closures from static layout signatures plus
+    the runtime dictionary/reference-point inputs.  ``None`` marks a plain
+    (raw-layout) column — no decode work is ever traced for it."""
+    out = {}
+    for name, (enc, _cdt, ldt) in sigs:
+        if enc == "raw":
+            out[name] = None
+        elif enc == "for":
+            out[name] = (lambda a, _l=ldt, _r=refs[name]:
+                         decode_device(a, "for", _l, ref=_r))
+        else:
+            out[name] = (lambda a, _l=ldt, _d=dicts[name]:
+                         decode_device(a, "dict", _l, dict_values=_d))
+    return out
+
+
 class _JoinView:
     """Column access over the joined index space; gathers on first touch only.
 
     Presents the joined schema (probe columns under their own names, build
     columns as ``b_<name>``, probe's key column under the join key).  Filter
     predicates receive this view — numpy-style expressions trace through it.
+
+    Packed columns are stored as narrow codes: the gather moves code-width
+    bytes and the decode to logical values runs *after* it, so the expensive
+    data movement inside the program happens at packed width and consumers
+    of the view still see exact logical values (the decode-at-fetch rule).
     """
 
-    def __init__(self, bcols, pcols, key, build_idx, probe_idx):
+    def __init__(self, bcols, pcols, key, build_idx, probe_idx,
+                 bdec=None, pdec=None):
         self._bcols = bcols
         self._pcols = pcols
         self._key = key
         self._bidx = build_idx
         self._pidx = probe_idx
+        self._bdec = bdec or {}
+        self._pdec = pdec or {}
         self._cache: Dict[str, jnp.ndarray] = {}
 
     def names(self):
@@ -220,11 +247,14 @@ class _JoinView:
             # BUILD column under that name — the view must agree
             if (name.startswith("b_") and name[2:] in self._bcols
                     and name[2:] != self._key):
-                self._cache[name] = jnp.take(self._bcols[name[2:]], self._bidx)
+                col = jnp.take(self._bcols[name[2:]], self._bidx)
+                dec = self._bdec.get(name[2:])
             elif name in self._pcols:
-                self._cache[name] = jnp.take(self._pcols[name], self._pidx)
+                col = jnp.take(self._pcols[name], self._pidx)
+                dec = self._pdec.get(name)
             else:
                 raise KeyError(name)
+            self._cache[name] = col if dec is None else dec(col)
         return self._cache[name]
 
 
@@ -376,7 +406,8 @@ def _join_sorted_run(sk, pk, n_probe, capacity):
     return build_idx, probe_idx, valid, total
 
 
-def _join_dense(bk, pk, n_build, n_probe, capacity, domain: int, kmin):
+def _join_dense(bk, pk, n_build, n_probe, capacity, domain: int, kmin,
+                use_kernel: bool = False):
     """Dense-domain join core: the key IS a coordinate axis.
 
     When the build key domain is dense enough to materialize as an axis of
@@ -387,6 +418,14 @@ def _join_dense(bk, pk, n_build, n_probe, capacity, domain: int, kmin):
     driver re-runs on the sorted core if the optimistic choice was wrong.
     Slot ``domain`` of every scatter target is the spill-over slot for rows
     that must not write (bucket padding / out-of-domain keys).
+
+    ``use_kernel`` (static) routes the table build + probe through the
+    Pallas radix-join kernels (:mod:`repro.kernels.segment_join`) via
+    :func:`~repro.core.tensor_engine.radix_hash_probe_dispatch` — the
+    in-domain codes ``bk0c``/``pk0c`` are exactly the int32 code-domain
+    contract those kernels tile over, and the dead slot ``domain`` is
+    their padding slot.  Results are bit-for-bit the jnp scatter path's
+    (kernel parity is regression-tested in tests/test_kernels.py).
     """
     B = bk.shape[0]
     P = pk.shape[0]
@@ -395,12 +434,27 @@ def _join_dense(bk, pk, n_build, n_probe, capacity, domain: int, kmin):
     bk0 = bk - kmin
     b_live = iota_b < n_build
     bk0c = jnp.where(b_live & (bk0 >= 0) & (bk0 < domain), bk0, domain)
-    cnt = jnp.zeros((domain + 1,), jnp.int32).at[bk0c].add(1)
-    has_dup = cnt[:domain].max() > 1
-    inv = jnp.zeros((domain + 1,), jnp.int64).at[bk0c].set(iota_b)
     pk0 = pk - kmin
     p_live = (iota_p < n_probe) & (pk0 >= 0) & (pk0 < domain)
     pk0c = jnp.where(p_live, pk0, domain)
+    if use_kernel:
+        cnt_p, brow, has_dup = radix_hash_probe_dispatch(
+            bk0c.astype(jnp.int32), pk0c.astype(jnp.int32), domain, True)
+        matched = p_live & (cnt_p > 0)
+        ends = jnp.cumsum(matched.astype(jnp.int64))
+        total = ends[-1]
+        slot = jnp.arange(capacity, dtype=jnp.int64)
+        pos = jnp.where(matched, jnp.minimum(ends - 1, capacity - 1),
+                        capacity)
+        probe_idx = jnp.zeros((capacity + 1,),
+                              jnp.int64).at[pos].max(iota_p)[:capacity]
+        build_idx = jnp.take(jnp.maximum(brow, 0).astype(jnp.int64),
+                             probe_idx)
+        valid = slot < total
+        return build_idx, probe_idx, valid, total, has_dup
+    cnt = jnp.zeros((domain + 1,), jnp.int32).at[bk0c].add(1)
+    has_dup = cnt[:domain].max() > 1
+    inv = jnp.zeros((domain + 1,), jnp.int64).at[bk0c].set(iota_b)
     matched = p_live & (cnt[pk0c] > 0)
     ends = jnp.cumsum(matched.astype(jnp.int64))
     total = ends[-1]
@@ -413,29 +467,69 @@ def _join_dense(bk, pk, n_build, n_probe, capacity, domain: int, kmin):
 
 
 def _build_program(spec: FusedSpec, key: str, capacity: int,
-                   dense_domain: Optional[int] = None):
+                   dense_domain: Optional[int] = None,
+                   key_mode: str = "value", use_kernel: bool = False,
+                   bsig: Tuple = (), psig: Tuple = ()):
     """Trace-time closure for one (fragment, capacity, bucket) cache entry.
 
     ``dense_domain`` (a static power-of-two bucket) selects the sort-free
     coordinate join core; the domain offset ``kmin`` stays a traced scalar so
     drifting key ranges reuse the compiled program.
+
+    ``bsig``/``psig`` are the static per-column layout signatures
+    (:meth:`~repro.core.codec_device.DeviceColumnLayout.signature`) of the
+    packed inputs — the program closes over the codec *shape*; dictionaries
+    and reference points stay runtime inputs so data refreshes never
+    recompile.  ``key_mode`` selects the join coordinate domain:
+
+      * ``"value"`` — the key decodes to int64 values in-program (an
+        elementwise op; the H2D transfer already happened at packed width)
+        and the join cores run exactly as before;
+      * ``"dict"``  — the build key is dictionary-encoded and the join runs
+        *directly in the code domain*: build codes are the coordinates,
+        probe values remap into the build dictionary with one device
+        ``searchsorted`` (misses land on the dead slot), and the dense core
+        operates over ``dense_domain ==`` the padded dictionary bucket.
+        The key axis never widens to int64 coordinates at all.
     """
 
     def program(bcols: Dict[str, jnp.ndarray], pcols: Dict[str, jnp.ndarray],
-                n_build, n_probe, kmin):
-        # join coordinates are int64 (same coercion as tensor_join); the
-        # view/output below serves the ORIGINAL key column — dtype and
-        # values of result columns never depend on fusion
-        bk = bcols[key].astype(jnp.int64)
-        pk = pcols[key].astype(jnp.int64)
+                bdicts, pdicts, brefs, prefs, n_build, n_probe, kmin):
+        bdec = _decoders(bsig, bdicts, brefs)
+        pdec = _decoders(psig, pdicts, prefs)
+        if key_mode == "dict":
+            # code-domain join: build codes ARE the coordinates; the probe
+            # side remaps its logical key values into the build dictionary
+            # (padded with repeats of the last value — searchsorted-left
+            # still returns the true first occurrence; see pad_dictionary)
+            bk = bcols[key].astype(jnp.int64)
+            pk_raw = pcols[key]
+            pk_vals = (pk_raw if pdec.get(key) is None
+                       else pdec[key](pk_raw)).astype(jnp.int64)
+            bdict = bdicts[key].astype(jnp.int64)
+            dbkt = bdict.shape[0]
+            pos = jnp.searchsorted(bdict, pk_vals, side="left")
+            posc = jnp.clip(pos, 0, dbkt - 1)
+            hit = jnp.take(bdict, posc) == pk_vals
+            pk = jnp.where(hit, posc, dense_domain).astype(jnp.int64)
+        else:
+            # join coordinates are int64 (same coercion as tensor_join); the
+            # view/output below serves the ORIGINAL key column — dtype and
+            # values of result columns never depend on fusion
+            bk_raw, pk_raw = bcols[key], pcols[key]
+            bk = (bk_raw if bdec.get(key) is None
+                  else bdec[key](bk_raw)).astype(jnp.int64)
+            pk = (pk_raw if pdec.get(key) is None
+                  else pdec[key](pk_raw)).astype(jnp.int64)
         if dense_domain is not None:
             build_idx, probe_idx, valid, total, has_dup = _join_dense(
-                bk, pk, n_build, n_probe, capacity, dense_domain, kmin)
+                bk, pk, n_build, n_probe, capacity, dense_domain, kmin,
+                use_kernel=use_kernel)
         else:
             build_idx, probe_idx, valid, total, has_dup = _join_sorted(
                 bk, pk, n_build, n_probe, capacity)
 
-        view = _JoinView(bcols, pcols, key, build_idx, probe_idx)
+        view = _JoinView(bcols, pcols, key, build_idx, probe_idx, bdec, pdec)
         if spec.filter_fn is not None:
             mask = jnp.asarray(spec.filter_fn(view), bool)
             valid = valid & mask
@@ -548,7 +642,8 @@ def sharded_supported(spec: FusedSpec, build: Relation,
 
 
 def _build_sharded_program(spec: FusedSpec, key: str, num_parts: int,
-                           capacity: int):
+                           capacity: int, bsig: Tuple = (),
+                           psig: Tuple = ()):
     """Trace-time closure for one sharded (fragment, partitions, capacity)
     cache entry: the per-shard fragment body under ``shard_map`` over the
     relational mesh, with device-side combines so the host still fetches
@@ -557,6 +652,12 @@ def _build_sharded_program(spec: FusedSpec, key: str, num_parts: int,
     ``max_part_total`` (the largest single partition's match count) rides
     the fetch next to the psum'd total so the driver can verify its
     optimistic per-partition capacity without a second sync.
+
+    Payload columns arrive as packed codes (``bsig``/``psig`` carry the
+    static layout signatures); dictionaries and reference points are
+    REPLICATED runtime inputs — every shard decodes at gather against the
+    full dictionary, and a data refresh never recompiles.  The join key
+    stays logical int64 (the sentinel-padding contract).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as PSpec
@@ -566,17 +667,21 @@ def _build_sharded_program(spec: FusedSpec, key: str, num_parts: int,
     mesh = relational_mesh(num_parts)
     col_name, fn = spec.agg
 
-    def shard_body(bcols, pcols, n_build, n_probe):
+    def shard_body(bcols, pcols, bdicts, pdicts, brefs, prefs,
+                   n_build, n_probe):
         # each shard sees a (1, bucket) block of its partition: squeeze
         bcols = {k: v[0] for k, v in bcols.items()}
         pcols = {k: v[0] for k, v in pcols.items()}
+        bdec = _decoders(bsig, bdicts, brefs)
+        pdec = _decoders(psig, pdicts, prefs)
         del n_build  # build padding is sentinel-keyed; no live-row mask
         npr = n_probe[0]
         sk = bcols[key].astype(jnp.int64)
         pk = pcols[key].astype(jnp.int64)
         build_idx, probe_idx, valid, total = _join_sorted_run(
             sk, pk, npr, capacity)
-        view = _JoinView(bcols, pcols, key, build_idx, probe_idx)
+        view = _JoinView(bcols, pcols, key, build_idx, probe_idx,
+                         bdec, pdec)
         if spec.filter_fn is not None:
             mask = jnp.asarray(spec.filter_fn(view), bool)
             valid = valid & mask
@@ -609,6 +714,7 @@ def _build_sharded_program(spec: FusedSpec, key: str, num_parts: int,
 
     mapped = shard_map(shard_body, mesh=mesh,
                        in_specs=(PSpec(PART_AXIS), PSpec(PART_AXIS),
+                                 PSpec(), PSpec(), PSpec(), PSpec(),
                                  PSpec(PART_AXIS), PSpec(PART_AXIS)),
                        out_specs=PSpec())
     return jax.jit(mapped)
@@ -711,17 +817,46 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         # host planning is part of the query's wall time (the per-op
         # baseline pays for its planning inside its timers too)
         capacity, dense_domain, kmin = _host_plan(build, probe, spec.join_key)
-        bcols, up_b = get_device_columns(build, b_bucket)
-        pcols, up_p = get_device_columns(probe, p_bucket)
-        dtypes = tuple(sorted((k, str(v.dtype)) for k, v in bcols.items()))
-        dtypes += tuple(sorted((k, str(v.dtype)) for k, v in pcols.items()))
+        layouts_b, up_b, log_b = get_device_layouts(build, b_bucket)
+        layouts_p, up_p, log_p = get_device_layouts(probe, p_bucket)
+        bcols = {k: dc.codes for k, dc in layouts_b.items()}
+        pcols = {k: dc.codes for k, dc in layouts_p.items()}
+        bdicts = {k: dc.dict_values for k, dc in layouts_b.items()
+                  if dc.dict_values is not None}
+        pdicts = {k: dc.dict_values for k, dc in layouts_p.items()
+                  if dc.dict_values is not None}
+        brefs = {k: dc.layout.ref for k, dc in layouts_b.items()
+                 if dc.encoding == "for"}
+        prefs = {k: dc.layout.ref for k, dc in layouts_p.items()
+                 if dc.encoding == "for"}
+        bsig = tuple(sorted((k, dc.layout.signature())
+                            for k, dc in layouts_b.items()))
+        psig = tuple(sorted((k, dc.layout.signature())
+                            for k, dc in layouts_p.items()))
+        # Dictionary-encoded build key + sampled-unique keys: join in the
+        # code domain — the dense core over the padded dictionary bucket,
+        # even when the VALUE domain is far too wide/sparse for it.  A
+        # wrong uniqueness guess is caught on device (has_dup) and retried
+        # on the sorted value core, same as the value-dense path.
+        key_mode = "value"
+        bkey = layouts_b[spec.join_key]
+        if bkey.encoding == "dict":
+            stats = key_stats(build, spec.join_key)
+            if stats.dup == 1.0 and stats.n:
+                key_mode = "dict"
+                dense_domain = dict_bucket(bkey.layout.card)
+                kmin = 0
         while True:
+            use_kernel = (use_pallas(dense_domain)
+                          if dense_domain is not None else False)
             cache_key = (spec.cache_signature(), capacity, b_bucket,
-                         p_bucket, dense_domain, dtypes)
+                         p_bucket, dense_domain, key_mode, use_kernel,
+                         bsig, psig)
             prog, fresh = _CACHE.get(
                 cache_key,
                 lambda: _build_program(spec, spec.join_key, capacity,
-                                       dense_domain))
+                                       dense_domain, key_mode, use_kernel,
+                                       bsig, psig))
             # a FRESH program's first call pays multi-second XLA
             # compilation; running it outside the queue keeps one novel
             # shape from stalling every other query's device phase (its
@@ -733,7 +868,8 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
                 lease = broker.device_lease(batch_key=("fused", cache_key))
                 queue_wait += lease.wait_s
             try:
-                out = prog(bcols, pcols, n_build, n_probe, kmin)
+                out = prog(bcols, pcols, bdicts, pdicts, brefs, prefs,
+                           n_build, n_probe, kmin)
                 fetched = jax.device_get(out)  # THE host sync of the query
             finally:
                 if lease is not None:
@@ -747,7 +883,12 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
             syncs += 1
             total = int(fetched["total"])
             if dense_domain is not None and bool(fetched["has_dup"]):
-                dense_domain = None  # optimistic unique-key guess was wrong
+                # optimistic unique-key guess was wrong: fall back to the
+                # sorted core over decoded int64 values (code-domain joins
+                # included — the sorted core's sentinel contract is int64)
+                dense_domain = None
+                key_mode = "value"
+                kmin = 0
                 continue
             if total <= capacity:
                 break
@@ -780,6 +921,7 @@ def run_fused(spec: FusedSpec, build: Relation, probe: Relation,
         decision_reason=decision_reason,
         host_syncs=syncs,
         h2d_bytes=up_b + up_p,
+        h2d_bytes_logical=log_b + log_p,
         queue_wait_s=queue_wait,
         compiled=any_fresh,
         batched=batched,
@@ -819,12 +961,18 @@ def _run_fused_sharded(spec: FusedSpec, build: Relation, probe: Relation,
     broker.ensure_lanes(num_parts)
     with Timer() as t:
         stats = key_stats(build, spec.join_key)
-        bcols, counts_b_dev, counts_b, bucket_b, up_b = \
-            get_partitioned_columns(build, spec.join_key, num_parts,
-                                    sort_within=True)
-        pcols, counts_p_dev, counts_p, bucket_p, up_p = \
-            get_partitioned_columns(probe, spec.join_key, num_parts,
-                                    sort_within=False)
+        (bcols, counts_b_dev, counts_b, bucket_b, up_b, log_b, b_lay,
+         bdicts) = get_partitioned_columns(build, spec.join_key, num_parts,
+                                           sort_within=True)
+        (pcols, counts_p_dev, counts_p, bucket_p, up_p, log_p, p_lay,
+         pdicts) = get_partitioned_columns(probe, spec.join_key, num_parts,
+                                           sort_within=False)
+        brefs = {k: lay.ref for k, lay in b_lay.items()
+                 if lay.encoding == "for"}
+        prefs = {k: lay.ref for k, lay in p_lay.items()
+                 if lay.encoding == "for"}
+        bsig = tuple(sorted((k, lay.signature()) for k, lay in b_lay.items()))
+        psig = tuple(sorted((k, lay.signature()) for k, lay in p_lay.items()))
         est_part_out = int(max(1, int(counts_p.max())) * stats.dup)
         capacity = partition_bucket(int(est_part_out * 1.25))
         # A verified-capacity hint from an earlier run of this fragment over
@@ -837,15 +985,14 @@ def _run_fused_sharded(spec: FusedSpec, build: Relation, probe: Relation,
                     column_token(probe[spec.join_key]))
         with _CAP_HINT_LOCK:
             capacity = max(capacity, _CAP_HINTS.get(hint_key, 0))
-        dtypes = tuple(sorted((k, str(v.dtype)) for k, v in bcols.items()))
-        dtypes += tuple(sorted((k, str(v.dtype)) for k, v in pcols.items()))
         while True:
             cache_key = ("sharded", spec.cache_signature(), num_parts,
-                         capacity, bucket_b, bucket_p, dtypes)
+                         capacity, bucket_b, bucket_p, bsig, psig)
             prog, fresh = _CACHE.get(
                 cache_key,
                 lambda: _build_sharded_program(spec, spec.join_key,
-                                               num_parts, capacity))
+                                               num_parts, capacity,
+                                               bsig, psig))
             any_fresh = any_fresh or fresh
             # ALWAYS under the gang lease — including the compile dispatch.
             # A sharded launch runs collectives over every lane's device;
@@ -855,7 +1002,8 @@ def _run_fused_sharded(spec: FusedSpec, build: Relation, probe: Relation,
             lease = broker.device_lease(lanes=num_parts)
             queue_wait += lease.wait_s
             try:
-                out = prog(bcols, pcols, counts_b_dev, counts_p_dev)
+                out = prog(bcols, pcols, bdicts, pdicts, brefs, prefs,
+                           counts_b_dev, counts_p_dev)
                 fetched = jax.device_get(out)  # THE host sync of the query
             finally:
                 lease.release()
@@ -891,6 +1039,7 @@ def _run_fused_sharded(spec: FusedSpec, build: Relation, probe: Relation,
         decision_reason=decision_reason,
         host_syncs=syncs,
         h2d_bytes=up_b + up_p,
+        h2d_bytes_logical=log_b + log_p,
         queue_wait_s=queue_wait,
         compiled=any_fresh,
         batched=batched,

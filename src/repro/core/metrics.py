@@ -91,10 +91,17 @@ class OpMetrics:
     # path is host-native and reports 0; the per-operator tensor path pays
     # 1-2 per operator; the fused device-resident path pays 1 per *query*.
     host_syncs: int = 0
-    # Host→device bytes actually transferred for this operator's inputs.
-    # Warm queries over device-cached base tables report 0 — the serving-path
-    # contract the fig9 benchmark measures.
+    # Host→device bytes actually transferred for this operator's inputs —
+    # PHYSICAL bytes: with packed device layouts (core/codec_device) this is
+    # the codes + dictionaries that really crossed the bus, not the logical
+    # column width.  Warm queries over device-cached base tables report 0 —
+    # the serving-path contract the fig9 benchmark measures (and packed
+    # residency keeps satisfying: a resident column in either form is warm).
     h2d_bytes: int = 0
+    # The same transfers priced at LOGICAL column width — what the upload
+    # would have cost without packed layouts.  physical/logical is the
+    # per-operator compression ratio fig17 reports; 0 when nothing moved.
+    h2d_bytes_logical: int = 0
     # Memory grant this linear operator ran under (0 when ungoverned or on
     # the tensor path).  Under a shared MemoryGovernor this is the budget
     # slice actually received — smaller than the configured work_mem when
@@ -157,6 +164,11 @@ class OpMetrics:
     # also counted in spill.bytes_read, so books stay balanced).
     reused_spill_bytes: int = 0
 
+    @property
+    def h2d_bytes_physical(self) -> int:
+        """Alias for :attr:`h2d_bytes` — the bytes that really moved."""
+        return self.h2d_bytes
+
     def as_row(self) -> Dict[str, object]:
         return {
             "op": self.op,
@@ -174,6 +186,7 @@ class OpMetrics:
             "peak_ws_mb": round(self.peak_working_set_bytes / 1e6, 3),
             "host_syncs": self.host_syncs,
             "h2d_mb": round(self.h2d_bytes / 1e6, 3),
+            "h2d_logical_mb": round(self.h2d_bytes_logical / 1e6, 3),
             "grant_mb": round(self.grant_bytes / 1e6, 3),
             "devices": self.devices,
             "switched": self.switched,

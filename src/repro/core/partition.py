@@ -34,6 +34,15 @@ documented key-domain exclusion the fused path already relies on), which
 also sorts past every real key so sorted runs stay sorted through their
 padding; payload columns pad with zeros and are never read (validity is
 masked by the per-partition row counts).
+
+Packed payloads: the join KEY column always stays logical int64 — the
+sentinel padding and cross-relation co-partitioning contracts live in the
+value domain — but payload columns store *packed codes* per their cached
+:func:`~repro.core.table_cache.column_layout` (dictionary / frame-of-
+reference; :mod:`repro.core.codec_device`), so warm sharded queries keep
+packed bytes resident and cold ones upload packed bytes.  Dictionaries
+ride next to the partitioned columns (replicated, not sharded) and the
+shard program decodes at gather, same as the single-device fused path.
 """
 from __future__ import annotations
 
@@ -42,6 +51,8 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from .codec_device import (DeviceColumnLayout, compress_enabled, dict_bucket,
+                           encode_host, pad_dictionary)
 from .relation import Relation, column_token
 
 __all__ = [
@@ -155,10 +166,15 @@ def _build_partitions(rel: Relation, key: str, num_parts: int,
                       sort_within: bool):
     """One partitioning pass over the host columns.
 
-    Returns ``(host_cols, counts, bucket)`` where each host column is a
-    ``(num_parts, bucket)`` array with partition ``p``'s rows in its first
-    ``counts[p]`` slots.  ``sort_within`` additionally orders each
-    partition's rows by the join key (the build-side sorted-run layout)."""
+    Returns ``(host_cols, counts, bucket, layouts, dicts_host)`` where each
+    host column is a ``(num_parts, bucket)`` array with partition ``p``'s
+    rows in its first ``counts[p]`` slots.  ``sort_within`` additionally
+    orders each partition's rows by the join key (the build-side sorted-run
+    layout).  Payload columns are stored as packed codes per ``layouts``;
+    ``dicts_host`` holds the bucket-padded dictionaries of ``dict``-encoded
+    payloads (the key column is always logical int64 — sentinel contract)."""
+    from .table_cache import column_layout
+
     keys = np.asarray(rel[key])
     part = partition_of(keys, num_parts)
     if sort_within:
@@ -170,6 +186,8 @@ def _build_partitions(rel: Relation, key: str, num_parts: int,
     offsets = np.zeros(num_parts + 1, dtype=np.int64)
     np.cumsum(counts, out=offsets[1:])
     host_cols = {}
+    layouts: Dict[str, DeviceColumnLayout] = {}
+    dicts_host = {}
     for name in rel.names:
         col = np.asarray(rel[name])[order]
         if name == key and not np.issubdtype(col.dtype, np.integer):
@@ -177,18 +195,29 @@ def _build_partitions(rel: Relation, key: str, num_parts: int,
         if name == key:
             buf = np.full((num_parts, bucket), _I64_MAX, dtype=np.int64)
             col = col.astype(np.int64, copy=False)
+            layouts[name] = DeviceColumnLayout("raw", "int64", "int64",
+                                               len(col))
         else:
+            lay, aux = column_layout(rel, name)
+            layouts[name] = lay
+            if lay.encoding != "raw":
+                col = encode_host(col, lay, aux)  # zero pad = a dead code,
+                # never read (masked by counts)
+            if lay.encoding == "dict":
+                dicts_host[name] = pad_dictionary(aux, dict_bucket(lay.card))
             buf = np.zeros((num_parts, bucket), dtype=col.dtype)
         for p in range(num_parts):
             buf[p, :counts[p]] = col[offsets[p]:offsets[p + 1]]
         host_cols[name] = buf
-    return host_cols, counts, bucket
+    return host_cols, counts, bucket, layouts, dicts_host
 
 
-def _upload(host_cols, counts, num_parts: int):
+def _upload(host_cols, counts, num_parts: int, dicts_host):
     """Host→device placement of a partitioned layout: each ``(P, bucket)``
     column is sharded one partition-row per mesh device, so the compiled
-    ``shard_map`` program consumes it with zero per-call resharding."""
+    ``shard_map`` program consumes it with zero per-call resharding.
+    Dictionaries are small and REPLICATED (every shard decodes against the
+    full dictionary)."""
     import jax
     import jax.numpy as jnp
 
@@ -198,19 +227,25 @@ def _upload(host_cols, counts, num_parts: int):
     cols = {name: jax.device_put(jnp.asarray(buf), sharding)
             for name, buf in host_cols.items()}
     counts_dev = jax.device_put(jnp.asarray(counts), sharding)
-    return cols, counts_dev
+    dicts_dev = {name: jnp.asarray(d) for name, d in dicts_host.items()}
+    return cols, counts_dev, dicts_dev
 
 
 def get_partitioned_columns(rel: Relation, key: str, num_parts: int,
                             sort_within: bool):
     """Partitioned device columns for ``rel``, cached on the instance.
 
-    Returns ``(cols, counts_dev, counts, bucket, uploaded_bytes)``:
-    ``cols`` maps column name → ``(num_parts, bucket)`` device array
-    sharded over the partition mesh, ``counts_dev`` the per-partition row
-    counts as a sharded ``(num_parts,)`` device array, ``counts`` the same
-    on host, ``uploaded_bytes`` the H2D traffic this call actually paid
-    (0 on a warm hit — the serving-path contract)."""
+    Returns ``(cols, counts_dev, counts, bucket, uploaded_bytes,
+    logical_bytes, layouts, dicts)``: ``cols`` maps column name →
+    ``(num_parts, bucket)`` device array (packed codes for compressed
+    payloads) sharded over the partition mesh, ``counts_dev`` the
+    per-partition row counts as a sharded ``(num_parts,)`` device array,
+    ``counts`` the same on host, ``uploaded_bytes`` the physical H2D
+    traffic this call actually paid (0 on a warm hit — the serving-path
+    contract) and ``logical_bytes`` the same transfer priced at logical
+    column width.  ``layouts`` maps name → :class:`~repro.core.
+    codec_device.DeviceColumnLayout`; ``dicts`` maps ``dict``-encoded
+    payload names to their replicated device dictionaries."""
     num_parts = int(num_parts)
     if num_parts < 1:
         raise ValueError(f"num_parts must be >= 1, got {num_parts}")
@@ -222,12 +257,17 @@ def get_partitioned_columns(rel: Relation, key: str, num_parts: int,
         if entry is not None and entry["tokens"] == tokens:
             _COUNTERS.hits += 1
             return (entry["cols"], entry["counts_dev"], entry["counts"],
-                    entry["bucket"], 0)
+                    entry["bucket"], 0, 0, entry["layouts"], entry["dicts"])
         _COUNTERS.misses += 1
-    host_cols, counts, bucket = _build_partitions(rel, key, num_parts,
-                                                  sort_within)
-    cols, counts_dev = _upload(host_cols, counts, num_parts)
+    host_cols, counts, bucket, layouts, dicts_host = _build_partitions(
+        rel, key, num_parts, sort_within)
+    cols, counts_dev, dicts_dev = _upload(host_cols, counts, num_parts,
+                                          dicts_host)
     uploaded = sum(int(b.nbytes) for b in host_cols.values()) + counts.nbytes
+    uploaded += sum(int(d.nbytes) for d in dicts_host.values())
+    logical = int(num_parts * bucket
+                  * sum((8 if name == key else rel[name].dtype.itemsize)
+                        for name in rel.names)) + int(counts.nbytes)
     with _LOCK:
         cache = rel.__dict__.setdefault(_CACHE_ATTR, {})
         current = cache.get(cache_key)
@@ -235,19 +275,25 @@ def get_partitioned_columns(rel: Relation, key: str, num_parts: int,
             # racing pair: keep the first insert, both transfers were real
             _COUNTERS.h2d_bytes += uploaded
             return (current["cols"], current["counts_dev"],
-                    current["counts"], current["bucket"], uploaded)
+                    current["counts"], current["bucket"], uploaded, logical,
+                    current["layouts"], current["dicts"])
         cache[cache_key] = {"tokens": tokens, "cols": cols,
                             "counts_dev": counts_dev, "counts": counts,
-                            "bucket": bucket}
+                            "bucket": bucket, "layouts": layouts,
+                            "dicts": dicts_dev}
         _COUNTERS.h2d_bytes += uploaded
-    return cols, counts_dev, counts, bucket, uploaded
+    return (cols, counts_dev, counts, bucket, uploaded, logical, layouts,
+            dicts_dev)
 
 
 def pending_partition_bytes(rel: Relation, key: str, num_parts: int,
                             sort_within: bool) -> int:
     """H2D bytes :func:`get_partitioned_columns` would transfer right now —
     0 when the partitioned layout is already resident (the selector's
-    cache-aware cost term, mirroring ``pending_upload_bytes``)."""
+    cache-aware cost term, mirroring ``pending_upload_bytes``).  With
+    compression on this prices the PACKED layout (narrow payload codes +
+    dictionaries), so the selector sees the sharded candidate's true,
+    cheaper transfer."""
     num_parts = int(num_parts)
     tokens = tuple((name, column_token(rel[name])) for name in rel.names)
     with _LOCK:
@@ -258,6 +304,21 @@ def pending_partition_bytes(rel: Relation, key: str, num_parts: int,
                 return 0
     counts = partition_counts(rel, key, num_parts)
     bucket = partition_bucket(int(counts.max()) if len(counts) else 0)
-    per_row = sum((8 if name == key else rel[name].dtype.itemsize)
-                  for name in rel.names)
-    return int(num_parts * bucket * per_row) + int(counts.nbytes)
+    per_row = 0
+    dict_bytes = 0
+    if compress_enabled():
+        from .table_cache import column_layout
+
+        for name in rel.names:
+            if name == key:
+                per_row += 8
+                continue
+            lay = column_layout(rel, name)[0]
+            per_row += lay.code_itemsize
+            if lay.encoding == "dict":
+                dict_bytes += dict_bucket(lay.card) * lay.logical_itemsize
+    else:
+        per_row = sum((8 if name == key else rel[name].dtype.itemsize)
+                      for name in rel.names)
+    return (int(num_parts * bucket * per_row) + dict_bytes
+            + int(counts.nbytes))

@@ -101,7 +101,7 @@ class Relation:
         preserving the shared-object contract for later warm-sharing.
         """
         for attr in ("_device_cache", "_key_stats", "_packed_cols",
-                     "_sel_cache", "_partition_cache"):
+                     "_sel_cache", "_partition_cache", "_layout_cache"):
             store = self.__dict__.get(attr)
             if store is not None:
                 store.clear()
@@ -130,7 +130,7 @@ class Relation:
         """
         sub = Relation({k: self.columns[k] for k in names})
         for attr in ("_device_cache", "_key_stats", "_packed_cols",
-                     "_sel_cache", "_partition_cache"):
+                     "_sel_cache", "_partition_cache", "_layout_cache"):
             sub.__dict__[attr] = self.__dict__.setdefault(attr, {})
         return sub
 

@@ -107,6 +107,12 @@ class ServedQuery:
     switched: bool = False     # any operator took a guard SwitchPoint:
                                # abandoned its mispriced path mid-query and
                                # finished on the tensor path (partition reuse)
+    h2d_bytes: int = 0         # PHYSICAL host→device bytes (packed codes +
+                               # dictionaries under compressed layouts; 0
+                               # when every input was device-resident)
+    h2d_bytes_logical: int = 0  # same transfers at logical column width —
+                               # physical/logical is the query's effective
+                               # H2D compression ratio
 
 
 @dataclasses.dataclass
@@ -179,6 +185,18 @@ class ServeReport:
         """The paper's stability metric: tail amplification of the latency
         distribution.  ~1 = predictable; >>1 = the spill-regime tail."""
         return self.latency.p99 / max(self.latency.p50, 1e-9)
+
+    @property
+    def total_h2d_bytes(self) -> int:
+        """Physical host→device bytes across all served queries (warm
+        serving over device-resident tables reports 0)."""
+        return sum(q.h2d_bytes for q in self.queries)
+
+    @property
+    def total_h2d_bytes_logical(self) -> int:
+        """The same transfers priced at logical column width; the run-level
+        ratio physical/logical is what fig17's cold cells gate on."""
+        return sum(q.h2d_bytes_logical for q in self.queries)
 
     @property
     def counts(self) -> Dict[str, int]:
@@ -404,7 +422,9 @@ class QueryServer:
             tenant=tenant, arrival_s=arrival_s,
             service_s=service_s or wall_s, slo_ok=slo_ok,
             preempted=any(m.preempted for m in res.metrics),
-            switched=any(m.switched for m in res.metrics))
+            switched=any(m.switched for m in res.metrics),
+            h2d_bytes=res.total_h2d_bytes,
+            h2d_bytes_logical=res.total_h2d_bytes_logical)
 
     # -- closed-loop stream --------------------------------------------------
     def serve(self, workload: Sequence, concurrency: int,

@@ -43,12 +43,18 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from .codec_device import (DeviceCodes, DeviceColumnLayout, choose_layout,
+                           compress_enabled, dict_bucket, encode_host,
+                           pad_dictionary)
 from .relation import Relation, column_token
 
 __all__ = [
     "KeyStats",
     "cache_enabled",
+    "column_layout",
+    "device_cache_resident_bytes",
     "get_device_columns",
+    "get_device_layouts",
     "pending_upload_bytes",
     "key_stats",
     "table_cache_info",
@@ -57,6 +63,7 @@ __all__ = [
 
 _CACHE_ATTR = "_device_cache"
 _STATS_ATTR = "_key_stats"
+_LAYOUT_ATTR = "_layout_cache"
 SAMPLE_ROWS = 65536  # key-cardinality sample size (matches the seed selector)
 
 
@@ -66,8 +73,11 @@ class _Counters:
     misses: int = 0
     invalidations: int = 0
     h2d_bytes: int = 0
+    h2d_bytes_logical: int = 0
     sketch_hits: int = 0
     sketch_misses: int = 0
+    layout_hits: int = 0
+    layout_misses: int = 0
 
 
 _COUNTERS = _Counters()
@@ -168,15 +178,159 @@ def get_device_columns(rel: Relation, bucket: Optional[int] = None
     return out, uploaded
 
 
+def column_layout(rel: Relation, name: str
+                  ) -> Tuple[DeviceColumnLayout, Optional[np.ndarray]]:
+    """Packed-layout descriptor for one column, cached per (relation,
+    column, content token) next to the key sketch.
+
+    The descriptor (and, for dictionary layouts, the sorted host-side
+    dictionary) is the fingerprint-keyed analysis the upload and costing
+    paths share — neither re-scans the column once a fresh entry exists.
+    With ``REPRO_DEVICE_COMPRESS=0`` the cache is bypassed entirely and
+    every column reports a ``raw`` layout.
+    """
+    col = rel.columns[name]
+    if not compress_enabled():
+        return choose_layout(col)  # degrades to raw, nothing worth caching
+    token = column_token(col)
+    with _LOCK:
+        cache = (rel.__dict__.setdefault(_LAYOUT_ATTR, {})
+                 if cache_enabled() else None)
+        if cache is not None:
+            entry = cache.get(name)
+            if entry is not None and entry[0] == token:
+                _COUNTERS.layout_hits += 1
+                return entry[1], entry[2]
+        _COUNTERS.layout_misses += 1
+    # the O(N) min/max/unique scans run OUTSIDE the lock (cf. key_stats)
+    layout, aux = choose_layout(col)
+    if cache is not None:
+        with _LOCK:
+            cache[name] = (token, layout, aux)
+    return layout, aux
+
+
+def get_device_layouts(rel: Relation, bucket: Optional[int] = None
+                       ) -> Tuple[Dict[str, DeviceCodes], int, int]:
+    """Packed device columns for ``rel``: ``(cols, physical, logical)``.
+
+    ``cols`` maps column name → :class:`DeviceCodes` (device codes +
+    layout + device dictionary); ``physical`` is the H2D bytes this call
+    actually moved (packed codes + dictionaries), ``logical`` the bytes
+    the same call would have moved at logical width — the pair the
+    executor reports as ``h2d_bytes`` vs ``h2d_bytes_logical``.
+
+    Storage discipline: ``raw``-layout columns share the plain
+    ``get_device_columns`` entries (key ``(name, bucket)``); packed
+    columns live under ``(name, bucket, "c")`` in the *same* per-relation
+    cache dict, so :meth:`Relation.invalidate_device_cache` drops codes,
+    dictionaries and raw uploads together.  A column whose logical-width
+    copy is already resident is served from it rather than re-uploaded
+    packed — zero transfer always beats a smaller transfer.
+    """
+    layouts = {name: column_layout(rel, name) for name in rel.columns}
+    packed = [n for n, (lay, _) in layouts.items() if lay.encoding != "raw"]
+    raw = [n for n in rel.columns if n not in packed]
+    out: Dict[str, DeviceCodes] = {}
+    up_phys = up_log = 0
+    if raw:
+        dev_raw, up_raw = get_device_columns(rel.select(raw), bucket)
+        for name in raw:
+            out[name] = DeviceCodes(dev_raw[name], layouts[name][0])
+        up_phys += up_raw
+        up_log += up_raw
+    if not packed:
+        return out, up_phys, up_log
+    tokens = {name: column_token(rel.columns[name]) for name in packed}
+    if not cache_enabled():
+        for name in packed:
+            dc, phys = _upload_packed(rel.columns[name], *layouts[name],
+                                      bucket)
+            out[name] = dc
+            up_phys += phys
+            up_log += _padded_nbytes(rel.columns[name], bucket)
+        with _LOCK:
+            _COUNTERS.misses += len(packed)
+            _COUNTERS.h2d_bytes += up_phys
+            _COUNTERS.h2d_bytes_logical += up_log
+        return out, up_phys, up_log
+    missing = []
+    with _LOCK:
+        cache = rel.__dict__.setdefault(_CACHE_ATTR, {})
+        for name in packed:
+            entry = cache.get((name, bucket, "c"))
+            if entry is not None and entry[0] == tokens[name]:
+                _COUNTERS.hits += 1
+                out[name] = entry[1]
+                continue
+            raw_entry = cache.get((name, bucket))
+            if raw_entry is not None and raw_entry[0] == tokens[name]:
+                # logical-width copy already resident: reuse it — zero
+                # transfer beats uploading packed codes next to it
+                _COUNTERS.hits += 1
+                col = rel.columns[name]
+                out[name] = DeviceCodes(
+                    raw_entry[1],
+                    DeviceColumnLayout("raw", col.dtype.name, col.dtype.name,
+                                       len(col)))
+                continue
+            if entry is not None:
+                _COUNTERS.invalidations += 1  # mutated column → re-encode
+            _COUNTERS.misses += 1
+            missing.append(name)
+    # encodes + transfers outside the lock (same double-checked-insert
+    # discipline as get_device_columns)
+    fresh_phys = fresh_log = 0
+    for name in missing:
+        dc, phys = _upload_packed(rel.columns[name], *layouts[name], bucket)
+        out[name] = dc
+        fresh_phys += phys
+        fresh_log += _padded_nbytes(rel.columns[name], bucket)
+    if missing:
+        with _LOCK:
+            for name in missing:
+                cache[(name, bucket, "c")] = (tokens[name], out[name])
+            _COUNTERS.h2d_bytes += fresh_phys
+            _COUNTERS.h2d_bytes_logical += fresh_log
+    return out, up_phys + fresh_phys, up_log + fresh_log
+
+
+def _upload_packed(col: np.ndarray, layout: DeviceColumnLayout,
+                   dictionary: Optional[np.ndarray],
+                   bucket: Optional[int]) -> Tuple[DeviceCodes, int]:
+    """Encode + transfer one packed column; returns the DeviceCodes and
+    the physical bytes moved (codes + padded dictionary)."""
+    import jax.numpy as jnp
+
+    codes = encode_host(col, layout, dictionary)
+    dev_codes = _upload(codes, bucket)
+    phys = _padded_nbytes(codes, bucket)
+    dict_dev = None
+    if layout.encoding == "dict":
+        padded = pad_dictionary(dictionary, dict_bucket(layout.card))
+        dict_dev = jnp.asarray(padded)
+        phys += int(padded.nbytes)
+    return DeviceCodes(dev_codes, layout, dict_dev), phys
+
+
 def pending_upload_bytes(rel, bucket: Optional[int] = None) -> int:
     """H2D bytes a query over ``rel`` would pay *right now* — the explicit
     transfer term the plan-level cost model charges the tensor path.  Zero
-    when every column is already device-resident at this bucket."""
+    when every column is already device-resident at this bucket.
+
+    With compression on this prices what :func:`get_device_layouts` would
+    actually move — *packed* bytes (plus dictionaries) — and a column
+    resident in either physical form (packed codes or a logical-width
+    upload) is free, matching the reuse rule above."""
     if not isinstance(rel, Relation):
         return 0  # already device-resident
-    # token hashing outside the lock (the discipline everywhere in this
-    # module): this probe runs on every fragment decision of every session
+    comp = compress_enabled()
+    # token hashing and layout analysis outside the lock (the discipline
+    # everywhere in this module): this probe runs on every fragment
+    # decision of every session — layouts are fingerprint-cached
     tokens = {name: column_token(col) for name, col in rel.columns.items()}
+    layouts = ({name: column_layout(rel, name)[0] for name in rel.columns}
+               if comp else None)
     total = 0
     with _LOCK:
         cache = rel.__dict__.get(_CACHE_ATTR) if cache_enabled() else None
@@ -185,7 +339,42 @@ def pending_upload_bytes(rel, bucket: Optional[int] = None) -> int:
                 entry = cache.get((name, bucket))
                 if entry is not None and entry[0] == tokens[name]:
                     continue
-            total += _padded_nbytes(col, bucket)
+                if comp:
+                    entry = cache.get((name, bucket, "c"))
+                    if entry is not None and entry[0] == tokens[name]:
+                        continue
+            if comp:
+                rows = len(col) if bucket is None else bucket
+                total += layouts[name].upload_bytes(rows)
+            else:
+                total += _padded_nbytes(col, bucket)
+    return total
+
+
+def device_cache_resident_bytes(rel) -> int:
+    """HBM bytes currently held by this relation's cached device state —
+    raw uploads, packed codes, dictionaries, and partitioned shard
+    layouts.  This is the warm-cache footprint fig17 gates on."""
+    if not isinstance(rel, Relation):
+        return 0
+    total = 0
+    with _LOCK:
+        for entry in (rel.__dict__.get(_CACHE_ATTR) or {}).values():
+            obj = entry[1]
+            if isinstance(obj, DeviceCodes):
+                total += int(obj.codes.nbytes)
+                if obj.dict_values is not None:
+                    total += int(obj.dict_values.nbytes)
+            else:
+                total += int(obj.nbytes)
+        for entry in (rel.__dict__.get("_partition_cache") or {}).values():
+            for obj in entry.get("cols", {}).values():
+                if isinstance(obj, DeviceCodes):
+                    total += int(obj.codes.nbytes)
+                    if obj.dict_values is not None:
+                        total += int(obj.dict_values.nbytes)
+                else:
+                    total += int(obj.nbytes)
     return total
 
 

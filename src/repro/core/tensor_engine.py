@@ -66,6 +66,7 @@ __all__ = [
     "sort_perm_device",
     "use_pallas",
     "segment_sum_dispatch",
+    "radix_hash_probe_dispatch",
 ]
 
 # Distinct sentinels so masked-out build rows can never meet masked-out probe
@@ -125,6 +126,32 @@ def segment_sum_dispatch(values: jnp.ndarray, seg_ids: jnp.ndarray,
         from ..kernels.segment_join.ops import segment_sum as _pallas_segsum
         return _pallas_segsum(seg_ids, values, num_segments).astype(values.dtype)
     return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)
+
+
+def radix_hash_probe_dispatch(bk_codes, pk_codes, domain: int,
+                              use_kernel: bool):
+    """Dense-domain hash-probe core: Pallas radix join or pure-jnp scatter.
+
+    Both paths share one contract (and are parity-tested bit-for-bit):
+    codes lie in ``[0, domain]`` with slot ``domain`` as the dead/padding
+    slot; the result is ``(cnt_p, build_row, has_dup)`` — per probe row
+    the number of matching build rows and the largest matching build-row
+    id (−1 on miss), plus whether any live slot collides (the caller's
+    retry-to-sorted-core signal).  ``use_kernel`` is resolved outside jit
+    traces via :func:`use_pallas`, exactly like the segment-sum dispatch.
+    """
+    if use_kernel:
+        from ..kernels.segment_join.ops import radix_hash_probe
+        return radix_hash_probe(bk_codes.astype(jnp.int32),
+                                pk_codes.astype(jnp.int32), domain)
+    nb = bk_codes.shape[0]
+    cnt = jnp.zeros((domain + 1,), jnp.int32).at[bk_codes].add(1)
+    inv = jnp.zeros((domain + 1,), jnp.int32).at[bk_codes].max(
+        jnp.arange(1, nb + 1, dtype=jnp.int32))
+    cnt_p = jnp.take(cnt, pk_codes)
+    build_row = jnp.take(inv, pk_codes) - 1
+    has_dup = jnp.max(cnt[:domain]) > 1
+    return cnt_p, build_row, has_dup
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,27 @@
-"""Pallas TPU kernel: blocked segment-sum (the fused join-aggregate core).
+"""Pallas TPU kernels: segment-sum, radix partition, hash-table probe.
 
-``tensor_join_aggregate`` (core/tensor_engine) reduces both relations along
-the shared key axis and contracts — the join result is never materialized.
-The reduction is this kernel: per-tile one-hot masked matmul into a
-VMEM-resident [num_segments] accumulator (revisited across all tiles), so a
-billion-row aggregate join streams rows exactly once through VMEM.
+Three VMEM-tiled kernels back the tensor engine's device joins and
+aggregates, all built on the same MXU-friendly idiom — data-dependent
+scatter/gather expressed as one-hot masked matmuls, which lowers
+identically on TPU hardware and in interpret mode (the CPU fallback):
+
+  * :func:`segment_sum_pallas` — per-tile one-hot matmul into a
+    VMEM-resident ``[num_segments]`` accumulator (revisited across all
+    tiles); the fused join-aggregate core streams rows exactly once.
+  * :func:`radix_rank_pallas` — stable radix partitioning: one
+    sequential pass computes each row's rank within its bucket plus the
+    per-bucket histogram, using the revisited counts block as the
+    running-offset accumulator.  The caller turns ranks into a
+    partition-major permutation with one exclusive cumsum.
+  * :func:`join_table_build_pallas` / :func:`join_table_probe_pallas` —
+    the hash-join core in the packed int32 code domain.  The table
+    (per-slot count + build-row id) is tiled over the code domain; both
+    kernels run a 2-D grid (row tiles × domain blocks) and *skip* blocks
+    a tile cannot touch via ``pl.when`` on the tile's code min/max.
+    Radix-ordering the inputs first (via :func:`radix_rank_pallas`)
+    clusters each tile's codes into one or two domain blocks, so the
+    quadratic grid degenerates to a near-linear sweep — that is the
+    radix-join structure, with static shapes throughout.
 """
 from __future__ import annotations
 
@@ -14,7 +31,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["segment_sum_pallas"]
+__all__ = [
+    "segment_sum_pallas",
+    "radix_rank_pallas",
+    "join_table_build_pallas",
+    "join_table_probe_pallas",
+]
 
 
 def _segsum_kernel(seg_ref, val_ref, out_ref, *, num_segments):
@@ -52,3 +74,171 @@ def segment_sum_pallas(seg_ids, values, num_segments: int, *,
         out_shape=jax.ShapeDtypeStruct((num_segments,), values.dtype),
         interpret=interpret,
     )(seg_ids, values)
+
+
+# ---------------------------------------------------------------------------
+# Radix partition: stable bucket ranks + histogram in one sequential pass
+# ---------------------------------------------------------------------------
+
+def _radix_rank_kernel(bkt_ref, pos_ref, cnt_ref, *, tblk, num_buckets):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, cnt_ref.dtype)
+
+    bkt = bkt_ref[...]                                     # [tblk] i32
+    onehot = (bkt[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (tblk, num_buckets), 1)).astype(jnp.int32)
+    # exclusive running count of this tile's rows per bucket → stable
+    # within-tile rank; the revisited cnt block carries the running
+    # cross-tile base (TPU grids execute sequentially).  Reductions pin
+    # dtype=int32: under jax_enable_x64 sum/cumsum otherwise promote to
+    # int64 and the int32 output-ref store rejects the value.
+    excl = jnp.cumsum(onehot, axis=0, dtype=jnp.int32) - onehot
+    rank = jnp.sum(excl * onehot, axis=1, dtype=jnp.int32)  # [tblk]
+    base = cnt_ref[...]                                    # [num_buckets]
+    pos_ref[...] = jnp.sum(onehot * base[None, :], axis=1,
+                           dtype=jnp.int32) + rank
+    cnt_ref[...] = base + jnp.sum(onehot, axis=0, dtype=jnp.int32)
+
+
+def radix_rank_pallas(bucket_ids, num_buckets: int, *, tblk: int = 1024,
+                      interpret: bool = False):
+    """bucket_ids [N] i32 → ``(rank, counts)``: each row's stable rank
+    within its bucket and the per-bucket histogram.  Rows with bucket ids
+    outside ``[0, num_buckets)`` contribute nothing (rank 0, uncounted) —
+    that is the padding contract."""
+    n = bucket_ids.shape[0]
+    tblk = min(tblk, n)
+    assert n % tblk == 0, (n, tblk)
+    kernel = functools.partial(_radix_rank_kernel, tblk=tblk,
+                               num_buckets=num_buckets)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tblk,),
+        in_specs=[pl.BlockSpec((tblk,), lambda t: (t,))],
+        out_specs=[
+            pl.BlockSpec((tblk,), lambda t: (t,)),
+            pl.BlockSpec((num_buckets,), lambda t: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((num_buckets,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bucket_ids)
+
+
+# ---------------------------------------------------------------------------
+# Hash-join table build + probe, tiled over the packed code domain
+# ---------------------------------------------------------------------------
+
+def _table_build_kernel(bk_ref, brow_ref, cnt_ref, inv_ref, *, tblk, dblk):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros(cnt_ref.shape, cnt_ref.dtype)
+        inv_ref[...] = jnp.zeros(inv_ref.shape, inv_ref.dtype)
+
+    codes = bk_ref[...]                                    # [tblk] i32
+    lo = j * dblk
+    # radix-ordered inputs cluster each tile into one or two domain
+    # blocks; every other (tile, block) cell skips the one-hot entirely
+    @pl.when((jnp.max(codes) >= lo) & (jnp.min(codes) < lo + dblk))
+    def _accum():
+        local = codes - lo
+        onehot = (local[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (tblk, dblk), 1)).astype(jnp.int32)
+        cnt_ref[...] += jnp.sum(onehot, axis=0, dtype=jnp.int32)
+        rows = brow_ref[...]                               # [tblk] i32
+        inv_ref[...] = jnp.maximum(
+            inv_ref[...], jnp.max(onehot * (rows[:, None] + 1), axis=0))
+
+
+def join_table_build_pallas(bk, brow, domain_pad: int, *, tblk: int = 1024,
+                            dblk: int = 512, interpret: bool = False):
+    """Build the tiled hash table: ``(cnt, inv)`` over ``[domain_pad]``
+    slots, where ``cnt[c]`` counts build rows with code ``c`` and
+    ``inv[c]`` holds the largest matching ``brow + 1`` (0 = empty slot).
+    Codes ≥ ``domain_pad`` are ignored (padding contract)."""
+    n = bk.shape[0]
+    tblk = min(tblk, n)
+    assert n % tblk == 0 and domain_pad % dblk == 0, (n, tblk, domain_pad)
+    kernel = functools.partial(_table_build_kernel, tblk=tblk, dblk=dblk)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tblk, domain_pad // dblk),
+        in_specs=[
+            pl.BlockSpec((tblk,), lambda i, j: (i,)),
+            pl.BlockSpec((tblk,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((dblk,), lambda i, j: (j,)),
+            pl.BlockSpec((dblk,), lambda i, j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((domain_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((domain_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(bk, brow)
+
+
+def _table_probe_kernel(pk_ref, cnt_ref, inv_ref, cntp_ref, invp_ref, *,
+                        tblk, dblk):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        cntp_ref[...] = jnp.zeros(cntp_ref.shape, cntp_ref.dtype)
+        invp_ref[...] = jnp.zeros(invp_ref.shape, invp_ref.dtype)
+
+    codes = pk_ref[...]                                    # [tblk] i32
+    lo = j * dblk
+
+    @pl.when((jnp.max(codes) >= lo) & (jnp.min(codes) < lo + dblk))
+    def _accum():
+        local = codes - lo
+        onehot = (local[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (tblk, dblk), 1)).astype(jnp.int32)
+        # per-probe table gather as a one-hot matmul over the block; a
+        # probe's code lives in exactly one block so += never double-adds
+        cntp_ref[...] += jax.lax.dot_general(
+            onehot, cnt_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        invp_ref[...] += jax.lax.dot_general(
+            onehot, inv_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+
+def join_table_probe_pallas(pk, cnt, inv, *, tblk: int = 1024,
+                            dblk: int = 512, interpret: bool = False):
+    """Probe the tiled hash table: per probe row, ``(cnt_p, inv_p)`` =
+    (matches in the build side, largest build-row-id + 1 or 0).  Codes ≥
+    ``len(cnt)`` gather nothing (padding contract)."""
+    n = pk.shape[0]
+    domain_pad = cnt.shape[0]
+    tblk = min(tblk, n)
+    assert n % tblk == 0 and domain_pad % dblk == 0, (n, tblk, domain_pad)
+    kernel = functools.partial(_table_probe_kernel, tblk=tblk, dblk=dblk)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // tblk, domain_pad // dblk),
+        in_specs=[
+            pl.BlockSpec((tblk,), lambda i, j: (i,)),
+            pl.BlockSpec((dblk,), lambda i, j: (j,)),
+            pl.BlockSpec((dblk,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tblk,), lambda i, j: (i,)),
+            pl.BlockSpec((tblk,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(pk, cnt, inv)

@@ -1,8 +1,41 @@
-"""Pure-jnp oracle for the segment-sum kernel."""
+"""Pure-jnp oracles for the segment-sum, radix and probe kernels."""
 import jax
+import jax.numpy as jnp
 
-__all__ = ["segment_sum_ref"]
+__all__ = ["segment_sum_ref", "radix_partition_ref", "radix_hash_probe_ref"]
 
 
 def segment_sum_ref(seg_ids, values, num_segments: int):
     return jax.ops.segment_sum(values, seg_ids, num_segments=num_segments)
+
+
+def radix_partition_ref(bucket_ids, num_buckets: int):
+    """Stable partition-major positions + histogram (argsort oracle)."""
+    n = bucket_ids.shape[0]
+    b = bucket_ids.astype(jnp.int32)
+    order = jnp.argsort(b, stable=True)
+    dest = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), b,
+                                 num_segments=num_buckets)
+    return dest, counts
+
+
+def radix_hash_probe_ref(bk, pk, domain: int):
+    """Scatter-table oracle with the same tie rule as the kernel: the
+    per-slot build row is the LARGEST row id landing on that slot.
+    Matches the kernel wrapper's empty-side contract (``has_dup`` is
+    False when either side is empty — no probe can observe a collision)."""
+    nb, np_ = bk.shape[0], pk.shape[0]
+    if nb == 0 or np_ == 0:
+        cnt_p = jnp.zeros((np_,), jnp.int32)
+        return cnt_p, cnt_p - 1, jnp.asarray(False)
+    bk = bk.astype(jnp.int32)
+    pk = pk.astype(jnp.int32)
+    cnt = jnp.zeros((domain + 1,), jnp.int32).at[bk].add(1)
+    inv = jnp.zeros((domain + 1,), jnp.int32).at[bk].max(
+        jnp.arange(1, nb + 1, dtype=jnp.int32))
+    cnt_p = jnp.take(cnt, pk)
+    build_row = jnp.take(inv, pk) - 1
+    has_dup = jnp.max(cnt[:domain]) > 1 if domain else jnp.asarray(False)
+    return cnt_p, build_row, has_dup

@@ -1,0 +1,230 @@
+"""Packed device column layouts: codec round-trips, layout choice, byte
+accounting, and the shared-cache invalidation contract (PR 10)."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.codec_device import (DICT_MAX_CARD, choose_layout,
+                                     decode_device, decode_host, dict_bucket,
+                                     encode_host, pad_dictionary)
+from repro.core.relation import Relation
+from repro.core.table_cache import (column_layout, device_cache_resident_bytes,
+                                    get_device_layouts, pending_upload_bytes)
+
+
+def _roundtrip(col):
+    layout, aux = choose_layout(col)
+    codes = encode_host(col, layout, aux)
+    back = decode_host(codes, layout, aux)
+    np.testing.assert_array_equal(back, col)
+    assert back.dtype == col.dtype
+    return layout, codes
+
+
+# ---------------------------------------------------------------------------
+# codec round-trips
+# ---------------------------------------------------------------------------
+
+def test_for_roundtrip_dense_domain():
+    col = np.arange(1000, 2000, dtype=np.int64)
+    layout, codes = _roundtrip(col)
+    assert layout.encoding == "for"
+    assert layout.ref == 1000
+    assert codes.dtype.itemsize < 8
+
+
+def test_for_roundtrip_negative_values():
+    rng = np.random.default_rng(0)
+    col = rng.integers(-500, -100, 4096).astype(np.int64)
+    layout, codes = _roundtrip(col)
+    assert layout.encoding == "for"
+    assert layout.ref == int(col.min())
+
+
+def test_dict_roundtrip_low_cardinality():
+    rng = np.random.default_rng(1)
+    # wide sparse domain: FOR cannot narrow it, the dictionary can
+    vals = rng.integers(0, 1 << 60, 100).astype(np.int64)
+    col = rng.choice(vals, 50_000)
+    layout, codes = _roundtrip(col)
+    assert layout.encoding == "dict"
+    assert layout.card == len(np.unique(col))
+    assert codes.dtype.itemsize == 1  # <= 255 distinct values
+
+
+def test_raw_when_incompressible():
+    rng = np.random.default_rng(2)
+    col = rng.integers(0, 1 << 40, 10_000).astype(np.int64)
+    layout, aux = choose_layout(col)
+    assert layout.encoding == "raw" and aux is None
+
+
+def test_empty_column_stays_raw():
+    col = np.zeros((0,), np.int64)
+    layout, aux = choose_layout(col)
+    assert layout.encoding == "raw"
+    np.testing.assert_array_equal(encode_host(col, layout, aux), col)
+
+
+def test_float_and_narrow_columns_stay_raw():
+    assert choose_layout(np.ones(100, np.float64))[0].encoding == "raw"
+    assert choose_layout(np.ones(100, np.int8))[0].encoding == "raw"
+
+
+def test_max_width_span_keeps_raw():
+    # span touches the int64 range AND cardinality is high: neither FOR
+    # (no narrower dtype holds the span) nor dict (too many uniques) wins
+    rng = np.random.default_rng(9)
+    col = rng.integers(np.iinfo(np.int64).min + 1, np.iinfo(np.int64).max - 1,
+                       100_000).astype(np.int64)
+    assert choose_layout(col)[0].encoding == "raw"
+
+
+def test_max_width_two_point_domain_dictionary_encodes():
+    # the int64 extremes with only two distinct values: FOR is impossible
+    # but a 2-entry dictionary still packs 8-byte values to 1-byte codes
+    col = np.array([np.iinfo(np.int64).min + 1, np.iinfo(np.int64).max - 1]
+                   * 50, dtype=np.int64)
+    layout, codes = _roundtrip(col)
+    assert layout.encoding == "dict" and layout.card == 2
+    assert codes.dtype.itemsize == 1
+
+
+def test_uint64_roundtrip():
+    col = (np.arange(5000, dtype=np.uint64) + np.uint64(1 << 63))
+    layout, codes = _roundtrip(col)
+    assert layout.encoding == "for"
+    assert layout.logical_dtype == "uint64"
+
+
+def test_code_dtype_reserves_sentinel_slot():
+    # span of exactly 255 must NOT choose uint8: the dtype max is reserved
+    # for the join cores' dead/padding sentinel
+    col = (np.arange(256, dtype=np.int64) % 256 + 10_000).repeat(4)
+    layout, _ = _roundtrip(col)
+    assert layout.encoding == "for"
+    assert np.dtype(layout.code_dtype).itemsize > 1
+
+
+def test_compress_toggle_disables_codecs():
+    col = np.arange(1000, dtype=np.int64)
+    os.environ["REPRO_DEVICE_COMPRESS"] = "0"
+    try:
+        assert choose_layout(col)[0].encoding == "raw"
+    finally:
+        os.environ.pop("REPRO_DEVICE_COMPRESS", None)
+    assert choose_layout(col)[0].encoding == "for"
+
+
+# ---------------------------------------------------------------------------
+# dictionary padding + device decode
+# ---------------------------------------------------------------------------
+
+def test_pad_dictionary_preserves_searchsorted():
+    d = np.array([3, 7, 11, 42], np.int64)
+    padded = pad_dictionary(d, dict_bucket(len(d)))
+    assert len(padded) == 16
+    probes = np.array([3, 7, 11, 42, 5, 43, 100], np.int64)
+    # first-occurrence rule survives the repeat-last padding
+    np.testing.assert_array_equal(
+        np.searchsorted(padded, probes[:4], side="left"),
+        np.searchsorted(d, probes[:4], side="left"))
+    # probes beyond every entry still land past the real codes
+    assert np.searchsorted(padded, 43, side="left") >= len(d)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_decode_device_matches_decode_host(seed):
+    rng = np.random.default_rng(seed)
+    for col in (rng.integers(-100, 100, 2048).astype(np.int64),
+                rng.choice(rng.integers(0, 1 << 50, 30), 2048)):
+        layout, aux = choose_layout(col)
+        codes = encode_host(col, layout, aux)
+        dev = decode_device(jnp.asarray(codes), layout.encoding,
+                            layout.logical_dtype, ref=layout.ref,
+                            dict_values=None if aux is None
+                            else jnp.asarray(aux))
+        np.testing.assert_array_equal(np.asarray(dev),
+                                      decode_host(codes, layout, aux))
+
+
+def test_upload_bytes_prices_padded_dictionary():
+    rng = np.random.default_rng(3)
+    col = rng.choice(rng.integers(0, 1 << 50, 100), 10_000)
+    layout, _ = choose_layout(col)
+    assert layout.encoding == "dict"
+    expect = 10_000 * layout.code_itemsize + dict_bucket(layout.card) * 8
+    assert layout.upload_bytes() == expect
+
+
+def test_dict_max_cardinality_bound():
+    assert DICT_MAX_CARD == 1 << 16
+    assert dict_bucket(1) == 16
+    assert dict_bucket(17) == 32
+
+
+# ---------------------------------------------------------------------------
+# table-cache integration: residency, pending bytes, invalidation
+# ---------------------------------------------------------------------------
+
+def _packed_rel(n=4096, seed=0):
+    rng = np.random.default_rng(seed)
+    return Relation({
+        "k": np.arange(n, dtype=np.int64),
+        "v": rng.integers(0, 100, n).astype(np.int64),
+    })
+
+
+def test_get_device_layouts_warm_is_free():
+    rel = _packed_rel()
+    cols, phys, logical = get_device_layouts(rel)
+    assert phys > 0 and logical > phys  # packed < logical width
+    for name in ("k", "v"):
+        lay = cols[name]
+        np.testing.assert_array_equal(np.asarray(lay.decode()), rel[name])
+    _, phys2, log2 = get_device_layouts(rel)
+    assert phys2 == 0 and log2 == 0
+    assert pending_upload_bytes(rel) == 0
+
+
+def test_pending_upload_bytes_prices_packed():
+    rel = _packed_rel(seed=1)
+    pend = pending_upload_bytes(rel)
+    assert 0 < pend < rel.nbytes()  # packed: strictly below logical width
+    _, phys, _ = get_device_layouts(rel)
+    assert phys == pend  # the quote equals what the upload then moves
+
+
+def test_invalidate_drops_layouts_with_device_columns():
+    rel = _packed_rel(seed=2)
+    lay0, _ = column_layout(rel, "v")
+    get_device_layouts(rel)
+    assert device_cache_resident_bytes(rel) > 0
+    # mutate in place, then invalidate: EVERY cached device artifact —
+    # raw columns, packed codes, dictionaries, layout descriptors — must go
+    rel.columns["v"] = rel["v"] + 1000
+    rel.invalidate_device_cache()
+    assert device_cache_resident_bytes(rel) == 0
+    lay1, _ = column_layout(rel, "v")
+    assert lay1.ref == lay0.ref + 1000  # re-analyzed, not served stale
+    cols, phys, _ = get_device_layouts(rel)
+    assert phys > 0
+    np.testing.assert_array_equal(np.asarray(cols["v"].decode()), rel["v"])
+
+
+def test_select_shares_and_invalidation_covers_subrelation():
+    rel = _packed_rel(seed=3)
+    get_device_layouts(rel)
+    sub = rel.select(["v"])
+    # the select view shares the parent's caches: no second upload
+    _, phys_sub, _ = get_device_layouts(sub)
+    assert phys_sub == 0
+    rel.columns["v"] *= 2  # in place: sub holds the SAME numpy object
+    rel.invalidate_device_cache()
+    # the shared cache was dropped for BOTH views; stale packed codes or
+    # layout descriptors must not survive through the sub-relation
+    cols, phys, _ = get_device_layouts(sub)
+    assert phys > 0
+    np.testing.assert_array_equal(np.asarray(cols["v"].decode()), rel["v"])

@@ -172,15 +172,31 @@ def configurations(tier_wm=32 * 1024):
     }
 
 
-def check_case(case: Case, tier_wm=32 * 1024):
+def check_case(case: Case, tier_wm=32 * 1024, compress=None):
+    """Run every configuration against the oracle.  ``compress`` pins the
+    packed-device-layout toggle for the whole sweep (None = leave the
+    process default, which is on): the same plans must agree with the
+    oracle whether uploads move logical-width columns or packed codes."""
+    import os
+
     want = oracle(case)
-    for name, sess in configurations(tier_wm).items():
-        got = run_case(sess, case)
-        assert_same(got, want, f"[{name}] {case.describe()}")
-        if case.root == "sort":
-            assert_sorted(got, ("k", "w"))
-        if name == "tiered":
-            sess.tier_ledger.verify_balanced()
+    saved = os.environ.get("REPRO_DEVICE_COMPRESS")
+    if compress is not None:
+        os.environ["REPRO_DEVICE_COMPRESS"] = "1" if compress else "0"
+    try:
+        for name, sess in configurations(tier_wm).items():
+            got = run_case(sess, case)
+            assert_same(got, want, f"[{name}] {case.describe()}")
+            if case.root == "sort":
+                assert_sorted(got, ("k", "w"))
+            if name == "tiered":
+                sess.tier_ledger.verify_balanced()
+    finally:
+        if compress is not None:
+            if saved is None:
+                os.environ.pop("REPRO_DEVICE_COMPRESS", None)
+            else:
+                os.environ["REPRO_DEVICE_COMPRESS"] = saved
 
 
 # ---------------------------------------------------------------------------
@@ -191,6 +207,16 @@ def check_case(case: Case, tier_wm=32 * 1024):
 def test_differential_fuzz_quick(seed):
     case = Case(np.random.default_rng(1000 + seed))
     check_case(case)
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("compress", [True, False])
+def test_differential_fuzz_compression_toggle(seed, compress):
+    """The SAME plans, both upload modes: packed codes (dictionary / FOR)
+    and raw logical-width columns must be oracle-identical — compression
+    is a physical-layout decision, never a semantic one."""
+    case = Case(np.random.default_rng(3000 + seed))
+    check_case(case, compress=compress)
 
 
 def test_differential_fuzz_pinned_edges():
@@ -236,3 +262,16 @@ def test_differential_fuzz_deep(seed):
     # a work_mem small enough that the bigger draws genuinely spill
     # through the tier staircase
     check_case(case, tier_wm=16 * 1024)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(12))
+def test_differential_fuzz_deep_compressed_mix(seed):
+    """Nightly: compression crossed with the full configuration matrix —
+    tiered spill under a tiny work_mem AND the 4-shard partition-parallel
+    path run the same big duplicate-heavy draws in both upload modes, all
+    against the numpy oracle."""
+    rng = np.random.default_rng(90_000 + seed)
+    case = Case(rng, max_rows=12_000, neg_keys=True)
+    for compress in (True, False):
+        check_case(case, tier_wm=16 * 1024, compress=compress)

@@ -10,8 +10,12 @@ from repro.kernels.moe_dispatch.ops import combine, dispatch, moe_dispatch_palla
 from repro.kernels.moe_dispatch.ref import combine_ref, dispatch_ref
 from repro.kernels.multikey_sort.ops import multikey_sort_lsd, tile_sort
 from repro.kernels.multikey_sort.ref import tile_sort_ref
-from repro.kernels.segment_join.ops import join_aggregate_kernel, segment_sum
-from repro.kernels.segment_join.ref import segment_sum_ref
+from repro.kernels.segment_join.ops import (join_aggregate_kernel,
+                                            radix_hash_probe, radix_partition,
+                                            segment_sum)
+from repro.kernels.segment_join.ref import (radix_hash_probe_ref,
+                                            radix_partition_ref,
+                                            segment_sum_ref)
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +116,89 @@ def test_segment_sum_sweep(n, S, tblk, dtype):
     want = segment_sum_ref(seg, val, S)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,nbuckets,tblk", [
+    (1000, 8, 256),        # non-pow2 n: padded tail rows must stay uncounted
+    (2048, 64, 512),
+    (4096, 1, 1024),       # single bucket: pure stable identity ordering
+    (513, 16, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.int64, jnp.int8])
+def test_radix_partition_parity(n, nbuckets, tblk, dtype):
+    rng = np.random.default_rng(n + nbuckets)
+    hi = min(nbuckets, np.iinfo(np.dtype(dtype)).max + 1)
+    ids = jnp.asarray(rng.integers(0, hi, n), dtype)
+    dest, counts = radix_partition(ids, nbuckets, tblk=tblk, interpret=True)
+    dest_r, counts_r = radix_partition_ref(ids, nbuckets)
+    np.testing.assert_array_equal(np.asarray(dest), np.asarray(dest_r))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts_r))
+
+
+def test_radix_partition_empty():
+    dest, counts = radix_partition(jnp.zeros((0,), jnp.int32), 8,
+                                   interpret=True)
+    assert dest.shape == (0,)
+    np.testing.assert_array_equal(np.asarray(counts), np.zeros(8, np.int32))
+
+
+def _probe_case(nb, npr, domain, seed, dup=False, dead=False):
+    """Codes in [0, domain]; slot ``domain`` is the dead/padding slot."""
+    rng = np.random.default_rng(seed)
+    hi = domain if not dead else domain + 1
+    bk = rng.integers(0, domain, nb) if not dup else \
+        rng.integers(0, max(1, domain // 4), nb)
+    if not dup and nb <= domain:
+        bk = rng.permutation(domain)[:nb]  # unique live build keys
+    pk = rng.integers(0, hi, npr)
+    if dead:
+        bk[rng.random(nb) < 0.1] = domain
+    return jnp.asarray(bk, jnp.int32), jnp.asarray(pk, jnp.int32)
+
+
+@pytest.mark.parametrize("nb,npr,domain", [
+    (256, 1024, 512),
+    (1000, 3000, 1024),     # non-pow2 sizes
+    (2048, 2048, 4096),     # max dense width the dispatcher allows
+    (64, 128, 16),          # domain smaller than dblk
+])
+@pytest.mark.parametrize("dup", [False, True])
+@pytest.mark.parametrize("dead", [False, True])
+def test_radix_hash_probe_parity(nb, npr, domain, dup, dead):
+    bk, pk = _probe_case(nb, npr, domain, nb + npr + domain, dup, dead)
+    cnt, row, has_dup = radix_hash_probe(bk, pk, domain, interpret=True)
+    cnt_r, row_r, has_dup_r = radix_hash_probe_ref(bk, pk, domain)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+    np.testing.assert_array_equal(np.asarray(row), np.asarray(row_r))
+    assert bool(has_dup) == bool(has_dup_r)
+
+
+@pytest.mark.parametrize("nb,npr", [(0, 256), (256, 0), (0, 0)])
+def test_radix_hash_probe_empty_sides(nb, npr):
+    rng = np.random.default_rng(7)
+    bk = jnp.asarray(rng.integers(0, 64, nb), jnp.int32)
+    pk = jnp.asarray(rng.integers(0, 64, npr), jnp.int32)
+    cnt, row, has_dup = radix_hash_probe(bk, pk, 64, interpret=True)
+    cnt_r, row_r, has_dup_r = radix_hash_probe_ref(bk, pk, 64)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+    np.testing.assert_array_equal(np.asarray(row), np.asarray(row_r))
+    assert bool(has_dup) == bool(has_dup_r) == False  # noqa: E712
+
+
+def test_radix_hash_probe_all_dead_and_max_width():
+    """Every build row dead (slot == domain) and probes at the dead slot:
+    matches at the dead slot are the CALLER's masking problem — the kernel
+    must still agree with the oracle bit for bit."""
+    domain = 4096
+    bk = jnp.full((512,), domain, jnp.int32)
+    pk = jnp.concatenate([jnp.full((100,), domain, jnp.int32),
+                          jnp.arange(100, dtype=jnp.int32)])
+    cnt, row, has_dup = radix_hash_probe(bk, pk, domain, interpret=True)
+    cnt_r, row_r, has_dup_r = radix_hash_probe_ref(bk, pk, domain)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+    np.testing.assert_array_equal(np.asarray(row), np.asarray(row_r))
+    # dead-slot pile-ups are NOT live duplicates (has_dup scans [0, domain))
+    assert bool(has_dup) == bool(has_dup_r) == False  # noqa: E712
 
 
 def test_join_aggregate_kernel_matches_core():

@@ -93,11 +93,18 @@ def test_star_join_acceptance():
     # relations pays for them; the pruned run's H2D must be smaller by at
     # least the fat columns' padded footprint.
     o2, u2, p2 = _star_tables()
+    # price the never-referenced fat columns as the engine itself would
+    # upload them (packed codes under compressed layouts, logical width
+    # otherwise) — measured BEFORE the unpruned run so nothing is resident
+    from repro.core.table_cache import pending_upload_bytes
+    fat_padded = sum(
+        pending_upload_bytes(r.select(["fat"]),
+                             1 << int(np.ceil(np.log2(len(r)))))
+        for r in (o2, u2, p2))
+    assert fat_padded > 0
     res_raw = _star_query(
         _star_session(orders=o2, users=u2, parts=p2)).collect(rewrite=False)
     assert res_raw.scalar == res.scalar
-    fat_padded = sum(1 << int(np.ceil(np.log2(len(r)))) for r in (o2, u2, p2)
-                     ) * 8
     assert res.total_h2d_bytes <= res_raw.total_h2d_bytes - fat_padded
 
 
